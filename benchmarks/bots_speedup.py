@@ -1,0 +1,30 @@
+"""Fig. 4 / Fig. 5: BOTS execution time per runtime mode + speedup of
+XGOMP/XGOMPTB over GOMP (apps ordered by mean task size)."""
+
+from benchmarks.common import APPS, SIM, csv_row, emit, graph_for
+from repro.core import run_schedule
+
+
+def run():
+    rows = []
+    for app in APPS:
+        g = graph_for(app)
+        times = {}
+        for mode in ("gomp", "xgomp", "xgomptb"):
+            r = run_schedule(g, mode=mode, cfg=SIM)
+            assert r.completed, (app, mode)
+            times[mode] = r.time_ns
+        row = dict(app=app, n_tasks=g.n_tasks, mean_task_ns=g.mean_task_ns,
+                   **{f"{m}_ns": t for m, t in times.items()},
+                   xgomp_speedup=times["gomp"] / times["xgomp"],
+                   xgomptb_speedup=times["gomp"] / times["xgomptb"],
+                   tb_over_xgomp=times["xgomp"] / times["xgomptb"])
+        rows.append(row)
+        csv_row(f"bots_speedup/{app}", times["xgomptb"] / 1e3,
+                f"xgomptb {row['xgomptb_speedup']:.1f}x over gomp")
+    emit(rows, "bots_speedup")
+    # paper claim: fine-grained apps benefit most; barrier helps small tasks
+    fine = [r for r in rows if r["mean_task_ns"] < 100]
+    assert all(r["xgomptb_speedup"] > 10 for r in fine), \
+        "fine-grained apps must show >10x over GOMP"
+    return rows

@@ -1,0 +1,43 @@
+"""Shared helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import make_params, run_schedule, taskgraph
+from repro.core.scheduler import SimConfig
+
+OUT_DIR = "experiments/bench"
+
+#: scaled-down instances (paper §VI scales its DLB sweeps the same way)
+APPS = {
+    "fib": dict(n=16),
+    "nqueens": dict(n=8),
+    "fp": dict(max_depth=8),
+    "health": dict(levels=4),
+    "uts": dict(n_target=3000),
+    "fft": dict(levels=10),
+    "strassen": dict(levels=3),
+    "sort": dict(levels=9),
+    "align": dict(n_seqs=24),
+}
+
+SIM = SimConfig(n_workers=32, n_zones=4, max_steps=200_000)
+
+
+def graph_for(app: str):
+    return taskgraph.build(app, **APPS.get(app, {}))
+
+
+def emit(rows, name):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+
+
+def csv_row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.2f},{derived}")

@@ -1,0 +1,49 @@
+"""Fig. 7 + Tables I-III: best NA-RP / NA-WS vs SLB (XGOMPTB), with the
+paper's runtime-statistics counters."""
+
+from benchmarks.common import APPS, SIM, csv_row, emit, graph_for
+from repro.core import make_params, run_schedule
+
+#: per-app settings in the spirit of paper Table I (scaled T_interval)
+BEST = {
+    "fib": dict(n_victim=1, n_steal=1, t_interval=300, p_local=1.0),
+    "nqueens": dict(n_victim=8, n_steal=1, t_interval=100, p_local=1.0),
+    "fft": dict(n_victim=12, n_steal=16, t_interval=30, p_local=1.0),
+    "fp": dict(n_victim=12, n_steal=16, t_interval=100, p_local=1.0),
+    "health": dict(n_victim=8, n_steal=16, t_interval=30, p_local=0.5),
+    "uts": dict(n_victim=4, n_steal=16, t_interval=100, p_local=1.0),
+    "strassen": dict(n_victim=8, n_steal=4, t_interval=30, p_local=1.0),
+    "sort": dict(n_victim=8, n_steal=8, t_interval=30, p_local=1.0),
+    "align": dict(n_victim=4, n_steal=2, t_interval=100, p_local=0.1),
+}
+
+COUNTER_KEYS = ("self", "local", "remote", "static_push", "imm_exec",
+                "req_sent", "req_handled", "req_has_steal", "stolen",
+                "stolen_local")
+
+
+def run():
+    rows = []
+    for app in APPS:
+        g = graph_for(app)
+        slb = run_schedule(g, mode="xgomptb", cfg=SIM)
+        row = dict(app=app, slb_ns=slb.time_ns,
+                   slb_counters={k: slb.counters[k] for k in COUNTER_KEYS})
+        for mode in ("na_rp", "na_ws"):
+            r = run_schedule(g, mode=mode,
+                             params=make_params(**BEST[app]), cfg=SIM)
+            assert r.completed
+            row[f"{mode}_ns"] = r.time_ns
+            row[f"{mode}_improvement"] = slb.time_ns / r.time_ns
+            row[f"{mode}_counters"] = {k: r.counters[k]
+                                       for k in COUNTER_KEYS}
+            csv_row(f"dlb_best/{app}/{mode}", r.time_ns / 1e3,
+                    f"{row[f'{mode}_improvement']:.2f}x over SLB")
+        rows.append(row)
+    emit(rows, "dlb_best")
+    # paper: NA-WS achieves at least (near-)parity on every app, and large
+    # apps gain substantially from DLB
+    big = [r for r in rows if r["app"] in ("sort", "strassen")]
+    assert any(max(r["na_rp_improvement"], r["na_ws_improvement"]) > 1.15
+               for r in big), "coarse apps must benefit from DLB"
+    return rows

@@ -1,0 +1,52 @@
+"""Fig. 11 / Table IV: validate the tuning guidelines — settings chosen by
+task-size bucket must beat (or match) SLB on held-out instances."""
+
+from benchmarks.common import SIM, csv_row, emit, graph_for
+from repro.core import make_params, run_schedule, taskgraph
+
+#: Table IV analogue (scaled T_interval; derived from param_sweep)
+GUIDE = [
+    # (max mean task ns, strategy, params)
+    (50, "na_ws", dict(n_victim=1, n_steal=1, t_interval=100, p_local=1.0)),
+    (500, "na_ws", dict(n_victim=4, n_steal=8, t_interval=100, p_local=1.0)),
+    (5000, "na_ws", dict(n_victim=8, n_steal=16, t_interval=30,
+                         p_local=0.5)),
+    (float("inf"), "na_rp", dict(n_victim=8, n_steal=4, t_interval=30,
+                                 p_local=1.0)),
+]
+
+#: held-out instances (different sizes/seeds than the sweep)
+HELD_OUT = {
+    "fib": dict(n=17, seed=1),
+    "nqueens": dict(n=8, seed=1),
+    "health": dict(levels=4, seed=1),
+    "sort": dict(levels=10, seed=1),
+}
+
+
+def pick(task_ns):
+    for cap, strategy, params in GUIDE:
+        if task_ns <= cap:
+            return strategy, params
+    raise AssertionError
+
+
+def run():
+    rows = []
+    wins = 0
+    for app, kw in HELD_OUT.items():
+        g = taskgraph.build(app, **kw)
+        slb = run_schedule(g, mode="xgomptb", cfg=SIM)
+        strategy, params = pick(g.mean_task_ns)
+        r = run_schedule(g, mode=strategy, params=make_params(**params),
+                         cfg=SIM)
+        imp = slb.time_ns / r.time_ns
+        wins += imp >= 0.98
+        rows.append(dict(app=app, task_ns=g.mean_task_ns,
+                         strategy=strategy, improvement=imp))
+        csv_row(f"guidelines/{app}", r.time_ns / 1e3,
+                f"{strategy} {imp:.2f}x vs SLB")
+    emit(rows, "guidelines")
+    assert wins >= len(HELD_OUT) - 1, \
+        "guidelines should not lose on held-out apps"
+    return rows

@@ -1,0 +1,61 @@
+"""Figs. 9/10 + Table IV: DLB improvement over SLB as a function of task size
+and steal size  S_steal = N_steal * N_victim / log10(T_interval)."""
+
+import math
+
+from benchmarks.common import SIM, csv_row, emit, graph_for
+from repro.core import make_params, run_schedule
+
+#: apps spanning the paper's task-size buckets
+SWEEP_APPS = ("fib", "nqueens", "health", "fft", "sort")
+GRID = dict(
+    n_victim=(1, 4, 12),
+    n_steal=(1, 8, 32),
+    t_interval=(30, 300),
+    p_local=(1.0, 0.25),
+)
+
+
+def run():
+    rows = []
+    for app in SWEEP_APPS:
+        g = graph_for(app)
+        slb = run_schedule(g, mode="xgomptb", cfg=SIM)
+        for mode in ("na_rp", "na_ws"):
+            best = None
+            for nv in GRID["n_victim"]:
+                for ns in GRID["n_steal"]:
+                    for ti in GRID["t_interval"]:
+                        for pl in GRID["p_local"]:
+                            r = run_schedule(
+                                g, mode=mode,
+                                params=make_params(nv, ns, ti, pl), cfg=SIM)
+                            imp = slb.time_ns / r.time_ns
+                            s_steal = ns * nv / math.log10(ti)
+                            rec = dict(app=app, mode=mode,
+                                       task_ns=g.mean_task_ns, n_victim=nv,
+                                       n_steal=ns, t_interval=ti, p_local=pl,
+                                       s_steal=s_steal, improvement=imp)
+                            rows.append(rec)
+                            if best is None or imp > best["improvement"]:
+                                best = rec
+            csv_row(f"param_sweep/{app}/{mode}",
+                    g.mean_task_ns / 1e-3 * 1e-3,
+                    f"best {best['improvement']:.2f}x at "
+                    f"S_steal={best['s_steal']:.1f} "
+                    f"p_local={best['p_local']}")
+    emit(rows, "param_sweep")
+    return rows
+
+
+def guidelines_from(rows):
+    """Derive the Table IV analogue: best settings per task-size bucket."""
+    buckets = {}
+    for r in rows:
+        b = ("<1e2" if r["task_ns"] < 50 else
+             "1e2-1e3" if r["task_ns"] < 500 else
+             "1e3-1e4" if r["task_ns"] < 5000 else ">1e4")
+        cur = buckets.get(b)
+        if cur is None or r["improvement"] > cur["improvement"]:
+            buckets[b] = r
+    return buckets

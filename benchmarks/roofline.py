@@ -1,0 +1,64 @@
+"""§Roofline report: aggregate the dry-run JSON records into the roofline
+table (terms in seconds, dominant bottleneck, MODEL/HLO flops ratio)."""
+
+import glob
+import json
+import os
+
+from benchmarks.common import csv_row, emit
+
+DRYRUN_DIR = "experiments/dryrun"
+
+
+def load(mesh="pod1"):
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        rec = json.load(open(fn))
+        rows.append(rec)
+    return rows
+
+
+def run():
+    rows = load("pod1")
+    out = []
+    for r in rows:
+        if r.get("skipped"):
+            out.append(dict(arch=r["arch"], shape=r["shape"],
+                            skipped=r["reason"]))
+            continue
+        if "error" in r:
+            out.append(dict(arch=r["arch"], shape=r["shape"],
+                            error=r["error"][:100]))
+            continue
+        out.append({k: r.get(k) for k in (
+            "arch", "shape", "mesh", "compute_s", "memory_s",
+            "collective_s", "dominant", "useful_flops_ratio",
+            "memory_per_device_bytes", "fits_hbm", "microbatches")})
+        csv_row(f"roofline/{r['arch']}/{r['shape']}",
+                r["compute_s"] * 1e6,
+                f"dom={r['dominant']} useful={r['useful_flops_ratio']:.2f} "
+                f"fits={r['fits_hbm']}")
+    emit(out, "roofline")
+    ok = [r for r in out if "dominant" in r]
+    assert len(ok) >= 30, f"expected >=30 analyzed cells, got {len(ok)}"
+    return out
+
+
+def markdown_table(mesh="pod1"):
+    rows = load(mesh)
+    lines = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+             "dominant | useful | mem/dev | fits |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("skipped") or "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"{'skip: ' + r.get('reason', r.get('error', ''))[:60]} | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['dominant'].replace('_s', '')} | "
+            f"{r['useful_flops_ratio']:.2f} | "
+            f"{r['memory_per_device_bytes']/2**30:.1f}GiB | "
+            f"{'yes' if r['fits_hbm'] else 'NO'} |")
+    return "\n".join(lines)

@@ -1,0 +1,49 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: every paper table/figure plus the beyond-paper MoE
+balance study and the roofline aggregation.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run posp_throughput  # one
+"""
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bots_speedup, dlb_best, guidelines, moe_balance,
+                            param_sweep, posp_throughput, roofline,
+                            thread_scaling, timeline)
+
+    suites = {
+        "bots_speedup": bots_speedup.run,        # Fig. 4 / Fig. 5
+        "thread_scaling": thread_scaling.run,    # Fig. 6
+        "dlb_best": dlb_best.run,                # Fig. 7 + Tables I-III
+        "timeline": timeline.run,                # Fig. 3 (utilization)
+        "param_sweep": param_sweep.run,          # Figs. 9/10 + Table IV
+        "posp_throughput": posp_throughput.run,  # Fig. 8
+        "guidelines": guidelines.run,            # Fig. 11
+        "moe_balance": moe_balance.run,          # beyond-paper DLB-for-MoE
+        "roofline": roofline.run,                # §Roofline aggregation
+    }
+    only = set(sys.argv[1:])
+    failures = []
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            fn()
+            print(f"# {name} done in {time.time()-t0:.0f}s", flush=True)
+        except Exception as e:  # keep the harness going; report at the end
+            failures.append((name, repr(e)))
+            print(f"# {name} FAILED: {e!r}", flush=True)
+    if failures:
+        print("# FAILURES:", failures)
+        raise SystemExit(1)
+    print("# all benchmarks passed")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,29 @@
+"""Fig. 6: execution time vs worker count per mode (one socket -> many)."""
+
+import dataclasses
+
+from benchmarks.common import SIM, csv_row, emit, graph_for
+from repro.core import run_schedule
+
+
+def run():
+    rows = []
+    for app in ("fib", "sort", "health"):
+        g = graph_for(app)
+        for w in (8, 16, 32, 64):
+            cfg = dataclasses.replace(SIM, n_workers=w,
+                                      n_zones=max(1, w // 8))
+            for mode in ("gomp", "xgomptb"):
+                r = run_schedule(g, mode=mode, cfg=cfg)
+                assert r.completed
+                rows.append(dict(app=app, workers=w, mode=mode,
+                                 time_ns=r.time_ns))
+                csv_row(f"thread_scaling/{app}/{mode}/w{w}",
+                        r.time_ns / 1e3, f"{r.counters['exec']} tasks")
+    emit(rows, "thread_scaling")
+    # xgomptb scales (time drops with workers); gomp does not improve
+    for app in ("sort",):
+        t = {r["workers"]: r["time_ns"] for r in rows
+             if r["app"] == app and r["mode"] == "xgomptb"}
+        assert t[64] < t[8], "xgomptb must scale with workers"
+    return rows

@@ -1,0 +1,52 @@
+"""Fig. 3 analogue: per-worker utilization under SLB vs DLB.
+
+The paper's timeline plots show Fib/Sort threads idling under static load
+balancing.  We report the utilization distribution (busy_ns / makespan per
+worker) and the balance ratio (min/max executed tasks) for XGOMPTB (SLB)
+vs the best DLB mode, demonstrating that DLB lifts the utilization floor."""
+
+import numpy as np
+
+from benchmarks.common import SIM, csv_row, emit, graph_for
+from repro.core import make_params, run_schedule
+
+
+def _stats(r):
+    util = r.per_worker_busy / max(r.time_ns, 1)
+    ex = r.per_worker_exec.astype(float)
+    return dict(
+        util_mean=float(util.mean()), util_min=float(util.min()),
+        util_max=float(util.max()),
+        task_balance=float(ex.min() / max(ex.max(), 1)),
+        gini_like=float(np.abs(ex[:, None] - ex[None, :]).mean()
+                        / max(2 * ex.mean(), 1e-9)),
+    )
+
+
+def run():
+    rows = []
+    for app, mode, params in (
+            ("fp", "na_ws", dict(n_victim=8, n_steal=16, t_interval=30,
+                                 p_local=1.0)),
+            ("sort", "na_rp", dict(n_victim=8, n_steal=8, t_interval=30,
+                                   p_local=1.0)),
+            ("uts", "na_rp", dict(n_victim=4, n_steal=16, t_interval=100,
+                                  p_local=1.0))):
+        g = graph_for(app)
+        slb = run_schedule(g, mode="xgomptb", cfg=SIM)
+        dlb = run_schedule(g, mode=mode, params=make_params(**params),
+                           cfg=SIM)
+        row = dict(app=app, mode=mode, slb=_stats(slb), dlb=_stats(dlb))
+        rows.append(row)
+        csv_row(f"timeline/{app}", slb.time_ns / 1e3,
+                f"util floor {row['slb']['util_min']:.2f} -> "
+                f"{row['dlb']['util_min']:.2f} ({mode})")
+    emit(rows, "timeline")
+    # Note: locality-first DLB can legitimately *lower* the utilization floor
+    # while improving makespan (work concentrates near its data) — so we
+    # report the distributions and only sanity-check them.
+    for r in rows:
+        for side in ("slb", "dlb"):
+            assert 0.0 <= r[side]["util_min"] <= r[side]["util_max"] <= 1.01
+            assert 0.0 <= r[side]["task_balance"] <= 1.0
+    return rows

@@ -1,0 +1,35 @@
+"""The paper's experiment in miniature: schedule a BOTS-style task graph
+under all five runtime modes and print the speedup ladder
+(GOMP -> XGOMP -> XGOMPTB -> NA-RP / NA-WS).
+
+    PYTHONPATH=src python examples/schedule_bots.py [app] [n_workers]
+"""
+
+import sys
+
+from repro.core import make_params, run_schedule, taskgraph
+from repro.core.scheduler import SimConfig
+
+
+def main(app="fib", workers=32):
+    g = taskgraph.build(app)
+    cfg = SimConfig(n_workers=workers, n_zones=4)
+    print(f"{g.name}: {g.n_tasks} tasks, mean {g.mean_task_ns:.0f} ns, "
+          f"{workers} workers / 4 zones")
+    base = None
+    for mode in ("gomp", "xgomp", "xgomptb", "na_rp", "na_ws"):
+        params = make_params(n_victim=4, n_steal=8, t_interval=100,
+                             p_local=1.0)
+        r = run_schedule(g, mode=mode, params=params, cfg=cfg)
+        base = base or r.time_ns
+        print(f"  {mode:8s} {r.time_ns/1e3:10.1f} us   "
+              f"speedup over gomp: {base / r.time_ns:8.1f}x   "
+              f"(self/local/remote = {r.counters['self']}/"
+              f"{r.counters['local']}/{r.counters['remote']}, "
+              f"stolen={r.counters['stolen']})")
+        assert r.completed
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "fib",
+         int(sys.argv[2]) if len(sys.argv) > 2 else 32)

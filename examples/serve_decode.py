@@ -1,0 +1,18 @@
+"""Batched serving example: prefill a batch of prompts, then greedy-decode
+continuations with the KV-cache decode step (gemma2 smoke variant:
+local/global alternating attention, ring caches on the local layers).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+
+from repro.launch import serve
+
+
+def main():
+    gen = serve.main(["--arch", "gemma2_2b", "--smoke", "--batch", "4",
+                      "--prompt-len", "48", "--gen", "16"])
+    assert gen.shape == (4, 16)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpoint import (cleanup, latest_step, restore,
+                                         restore_resharded, save, steps)

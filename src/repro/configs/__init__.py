@@ -1,0 +1,3 @@
+"""Architecture configs (one file per assigned architecture)."""
+from repro.configs.base import (ARCH_IDS, REGISTRY, ModelConfig, MoECfg,
+                                SSMCfg, all_configs, get, smoke_config)

@@ -1,0 +1,14 @@
+"""Core: the paper's contribution — lock-less queues, tree barrier, and
+NUMA-aware dynamic load balancing — as (a) a faithful scheduler simulator and
+(b) jittable routing policies used by the TPU training/serving stack."""
+
+from repro.core import balance, barrier, dlb, messaging, taskgraph, xqueue
+from repro.core.costs import DEFAULT_COSTS, CostModel
+from repro.core.scheduler import (MODES, Params, SimConfig, SimResult,
+                                  make_params, run_schedule)
+
+__all__ = [
+    "balance", "barrier", "dlb", "messaging", "taskgraph", "xqueue",
+    "DEFAULT_COSTS", "CostModel", "MODES", "Params", "SimConfig", "SimResult",
+    "make_params", "run_schedule",
+]

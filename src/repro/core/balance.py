@@ -1,0 +1,182 @@
+"""The paper's DLB policies applied to MoE token routing (TPU integration).
+
+Mapping (DESIGN.md §2): tokens = tasks, experts = workers, expert capacity =
+XQueue size, expert groups (devices / pods) = NUMA zones.  Vanilla top-k
+routing with capacity is the *static* load balancer: tokens beyond an
+expert's capacity are dropped ("executed immediately" as residual
+pass-through).  The paper's dynamic policies become overflow *redirection*:
+
+  na_rp  redirect-push: an overflow token is pushed to a random available
+         expert, preferring the originating expert's own group (NUMA-local,
+         probability-weighted like the paper's P_local victim selection);
+  na_ws  work-stealing flavor: under-loaded experts pull overflow
+         (availability-dominated scoring, locality as tie-break);
+  drop   no redirection — the SLB baseline.
+
+Redirection targets are sampled with Gumbel noise over
+``log(free_slots) + locality_bonus`` — the stochastic victim selection of
+Alg. 1, availability-weighted so thieves (free experts) are found quickly.
+Everything is one-shot and fully vectorized (this is a routing step inside a
+jitted training step, not a message loop); `tests/test_balance.py` checks the
+capacity invariants and locality preferences.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+REDIRECT_ROUNDS = 2
+
+
+class RouteResult(NamedTuple):
+    expert: jax.Array   # (T, k) int32 final expert id, -1 = dropped
+    pos: jax.Array      # (T, k) int32 slot within the expert buffer, -1 = dropped
+    weight: jax.Array   # (T, k) f32 combine weight (0 where dropped)
+    probs: jax.Array    # (T, E) router probabilities (for aux losses)
+    stats: dict         # paper-counter analogues, scalar int32
+
+
+def _rank_in_expert(flat_e: jax.Array, prio: jax.Array, n_experts: int,
+                    active: jax.Array) -> jax.Array:
+    """Rank of each entry among same-expert entries, ordered by descending
+    priority.  Inactive entries rank in a shadow bucket E."""
+    N = flat_e.shape[0]
+    # ranks are integer-valued: detach (sort JVPs build batched gathers that
+    # this jax build cannot construct, and no gradient flows through ranks)
+    prio = jax.lax.stop_gradient(prio)
+    e = jnp.where(active, flat_e, n_experts)
+    p1 = jnp.argsort(-prio)                      # priority order
+    p2 = jnp.argsort(e[p1], stable=True)         # stable by expert
+    perm = p1[p2]                                # (expert, desc-prio) order
+    sorted_e = e[perm]
+    seg_start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos_sorted = jnp.arange(N, dtype=jnp.int32) - seg_start.astype(jnp.int32)
+    rank = jnp.zeros(N, jnp.int32).at[perm].set(pos_sorted)
+    return rank
+
+
+def route(router_logits: jax.Array, k: int, capacity: int,
+          expert_group: jax.Array, *, strategy: str = "na_rp",
+          p_local: float = 0.9, key: jax.Array | None = None,
+          token_group: jax.Array | None = None,
+          n_token_groups: int = 1) -> RouteResult:
+    """Capacity-constrained top-k routing with lock-less-style redirection.
+
+    Data-parallel scale-out: tokens may carry a *token group* (their data
+    shard).  Capacity is then per (shard, expert) **virtual expert** — the
+    per-device XQueue — and redirection never crosses the token's own shard
+    (tokens stay on their data shard; only the expert dimension is remote).
+    Implemented with flat virtual-expert ids, no vmap, so every gather /
+    scatter in the differentiable path is a plain 1-D/2-D gather (this jax
+    build cannot transpose batched gathers).
+
+    Args:
+      router_logits: (T, E) float router scores.
+      k: experts per token.
+      capacity: max tokens per (token-group, expert) pair (XQueue size).
+      expert_group: (E,) int32 locality group per expert (EP device / pod).
+      strategy: "drop" | "na_rp" | "na_ws".
+      p_local: probability mass on same-locality-group redirects.
+      key: PRNG key for Gumbel victim sampling (deterministic default).
+      token_group: (T,) int32 data-shard id per token (None -> one group).
+      n_token_groups: static count G of token groups.
+
+    Returns RouteResult whose `pos` is the slot within the (token-group,
+    expert) buffer; dispatch uses flat index (tg*E + e)*capacity + pos.
+    """
+    assert strategy in ("drop", "na_rp", "na_ws"), strategy
+    T, E = router_logits.shape
+    N = T * k
+    G = n_token_groups
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    # top-k indices under stop_gradient (top_k's JVP is a batched-gather sort
+    # rule); gate weights re-gathered differentiably via a flat 2-D gather.
+    _, orig = jax.lax.top_k(jax.lax.stop_gradient(probs), k)   # (T, k)
+    gate_w = probs[jnp.arange(T)[:, None], orig]
+    flat_e = orig.reshape(N).astype(jnp.int32)
+    prio = gate_w.reshape(N)
+    if token_group is None:
+        tg = jnp.zeros(N, jnp.int32)
+    else:
+        tg = jnp.repeat(token_group.astype(jnp.int32), k)
+    ve = tg * E + flat_e                       # virtual (shard, expert) id
+    VE = G * E
+
+    active = jnp.ones(N, bool)
+    rank0 = _rank_in_expert(ve, prio, VE, active)
+    ok0 = rank0 < capacity
+    count = jnp.bincount(jnp.where(ok0, ve, VE), length=VE + 1)[:VE]
+    count = count.astype(jnp.int32)
+
+    expert = jnp.where(ok0, flat_e, -1)
+    pos = jnp.where(ok0, rank0, -1)
+    ovf = ~ok0
+    n_primary = jnp.sum(ok0, dtype=jnp.int32)
+    n_local = jnp.int32(0)
+    n_remote = jnp.int32(0)
+
+    if strategy != "drop":
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        loc_group = expert_group[flat_e]                   # (N,)
+        same = (loc_group[:, None] == expert_group[None, :])  # (N, E)
+        # locality bonus: log-odds of the paper's P_local victim draw
+        beta = math.log(max(p_local, 1e-4) / max(1.0 - p_local, 1e-4))
+        if strategy == "na_ws":
+            avail_w, loc_w = 4.0, 0.25 * beta   # availability-dominated
+        else:
+            avail_w, loc_w = 1.0, beta          # locality-dominated (NA-RP)
+        cand_v = tg[:, None] * E + jnp.arange(E)[None, :]  # (N, E) own shard
+        for r in range(REDIRECT_ROUNDS):
+            free = (capacity - count).astype(jnp.float32)[cand_v]  # (N, E)
+            score = avail_w * jnp.log(jnp.maximum(free, 0.0) + 0.5)
+            score = score + loc_w * same.astype(jnp.float32)
+            score = score - 1e9 * (free <= 0.0)
+            g = jax.random.gumbel(jax.random.fold_in(key, r), (N, E))
+            tgt = jnp.argmax(score + g, axis=-1).astype(jnp.int32)
+            tgt_v = tg * E + tgt
+            rank = _rank_in_expert(tgt_v, prio, VE, ovf)
+            slot = count[tgt_v] + rank
+            ok = ovf & (slot < capacity)
+            expert = jnp.where(ok, tgt, expert)
+            pos = jnp.where(ok, slot, pos)
+            count = count + jnp.bincount(
+                jnp.where(ok, tgt_v, VE), length=VE + 1)[:VE].astype(jnp.int32)
+            n_local = n_local + jnp.sum(
+                ok & (expert_group[tgt] == loc_group), dtype=jnp.int32)
+            n_remote = n_remote + jnp.sum(
+                ok & (expert_group[tgt] != loc_group), dtype=jnp.int32)
+            ovf = ovf & ~ok
+
+    weight = jnp.where(expert.reshape(T, k) >= 0, gate_w, 0.0)
+    stats = {
+        "ntasks_static": n_primary,              # kept on primary expert
+        "ntasks_stolen_local": n_local,          # redirected, same group
+        "ntasks_stolen_remote": n_remote,        # redirected, cross-group
+        "ntasks_dropped": jnp.sum(ovf, dtype=jnp.int32),
+        "max_load": jnp.max(count),
+    }
+    return RouteResult(expert.reshape(T, k), pos.reshape(T, k), weight,
+                       probs, stats)
+
+
+def load_balance_loss(probs: jax.Array, expert: jax.Array, k: int) -> jax.Array:
+    """Switch-Transformer auxiliary loss over the *final* (post-redirect)
+    assignment — redirection feeds back into the router."""
+    T, E = probs.shape
+    onehot = jnp.sum(jax.nn.one_hot(expert, E, dtype=probs.dtype), axis=1)
+    frac_tokens = jnp.mean(onehot, axis=0) / k
+    frac_probs = jnp.mean(probs, axis=0)
+    return E * jnp.sum(frac_tokens * frac_probs)
+
+
+def default_expert_groups(n_experts: int, n_groups: int) -> jax.Array:
+    """Contiguous expert->group map (EP sharding places contiguous expert
+    ranges on devices, so contiguity == physical locality)."""
+    assert n_experts % n_groups == 0
+    return jnp.repeat(jnp.arange(n_groups, dtype=jnp.int32),
+                      n_experts // n_groups)

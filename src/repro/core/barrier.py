@@ -1,0 +1,78 @@
+"""Team-barrier models: GNU's centralized barrier vs. the paper's hybrid
+lock-free(gather)/lock-less(release) distributed tree barrier (§III-B).
+
+What matters for performance (and what we model) is:
+
+  centralized (GOMP/XGOMP):
+      - every task create/finish atomically updates a *globally shared* task
+        count (charged per-op with contention in the scheduler step);
+      - at the barrier itself, every worker contends on the same lock/flag:
+        2(W-1) atomic ops on one cache line, serialized.
+
+  tree (XGOMPTB and both DLB modes):
+      - no global task count at all during the run;
+      - gathering: each worker atomically sets its parent's `complete` flag —
+        W-1 atomics total, but each flag is shared by exactly two workers, so
+        they proceed in parallel level by level (depth = ceil(log2 W));
+      - releasing: lock-less tree broadcast of per-worker `release` flags
+        (plain stores, no atomics).
+
+  => exactly half the atomic operations of the centralized barrier
+     (W-1 vs 2(W-1)), the paper's "theoretical lower bound" claim, which
+     `tests/test_barrier.py` asserts.
+
+The tree-gather *conditions* (paper: all workers entered, worker idle, no
+unfinished dependencies, children gathered) are what the scheduler's
+termination predicate checks; this module charges the episode costs and
+counts the atomics.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.costs import CostModel
+
+
+class BarrierStats(NamedTuple):
+    time_ns: jax.Array    # added to the makespan
+    atomic_ops: jax.Array
+
+
+def centralized_episode(n_workers: int, costs: CostModel) -> BarrierStats:
+    """All W workers serialize on the barrier lock: the last one waits for
+    W-1 hand-offs for the gather and W-1 for the release."""
+    W = n_workers
+    t = 2 * (W - 1) * (costs.c_atomic + costs.c_contend)
+    return BarrierStats(jnp.int32(t), jnp.int32(2 * (W - 1)))
+
+
+def tree_episode(n_workers: int, costs: CostModel) -> BarrierStats:
+    """Gather: levels proceed in parallel, one atomic per level on a 2-sharer
+    line; release: lock-less stores down the tree."""
+    depth = max(1, math.ceil(math.log2(n_workers)))
+    t = depth * (costs.c_atomic + costs.c_zone)      # gather (lock-free)
+    t += depth * costs.c_zone                        # release (lock-less)
+    return BarrierStats(jnp.int32(t), jnp.int32(n_workers - 1))
+
+
+def tree_gathered(idle: jax.Array, n_workers: int) -> jax.Array:
+    """Pure predicate used by tests: bottom-up AND over a binary tree —
+    worker w is gathered iff it is idle and both children (2w+1, 2w+2) are
+    gathered.  Returns per-worker gathered flags; the root flag is the
+    barrier's release trigger."""
+    W = n_workers
+    gathered = idle
+    # iterate depth times: flags propagate up one level per pass
+    depth = max(1, math.ceil(math.log2(W))) + 1
+    idx = jnp.arange(W)
+    left, right = 2 * idx + 1, 2 * idx + 2
+    for _ in range(depth):
+        lg = jnp.where(left < W, gathered[jnp.minimum(left, W - 1)], True)
+        rg = jnp.where(right < W, gathered[jnp.minimum(right, W - 1)], True)
+        gathered = idle & lg & rg
+    return gathered

@@ -1,0 +1,126 @@
+"""NUMA-aware dynamic load balancing policies (paper §IV).
+
+* ``pick_victim`` — conditionally-random victim selection: NUMA-local with
+  probability ``p_local``, NUMA-remote otherwise (never self).
+* ``NA-RP`` (redirect push, Alg. 3) — a victim that accepted a thief redirects
+  its *newly created* tasks to the thief's queue until ``n_steal`` tasks are
+  pushed or the thief's queue fills.  Implemented as per-worker
+  ``(rp_tgt, rp_left)`` state consulted by the scheduler's push phase.
+* ``NA-WS`` (work stealing, Alg. 4) — a victim that accepted a thief dequeues
+  up to ``n_steal`` tasks from its own queues and enqueues them to the thief's
+  target queue ``(thief, victim)``; stops on own-empty or target-full.
+
+The NUMA zone of worker ``w`` is ``w // (W // n_zones)`` — on the TPU side the
+same index arithmetic maps a device to its pod/ICI neighborhood.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import xqueue
+
+
+def xorshift(s: jax.Array) -> jax.Array:
+    """Per-lane xorshift32 PRNG — cheap enough to call several times a step."""
+    s = s ^ (s << 13)
+    s = s ^ (s >> 17)
+    s = s ^ (s << 5)
+    return s
+
+
+def uniform(s: jax.Array) -> jax.Array:
+    """U[0,1) from a uint32 state."""
+    return (s >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
+
+
+def zone_of(w: jax.Array, zone_size: int) -> jax.Array:
+    return w // zone_size
+
+
+def pick_victim(rng: jax.Array, me: jax.Array, n_workers: int, zone_size: int,
+                p_local: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Random victim != me; same zone with probability ``p_local``.
+
+    Returns (rng', victim). Degenerate topologies (single zone / 1-wide zones)
+    fall back to whichever side has candidates.
+    """
+    W, Z = n_workers, zone_size
+    rng = xorshift(rng)
+    want_local = uniform(rng) < p_local
+    rng = xorshift(rng)
+    draw = (rng >> jnp.uint32(1)).astype(jnp.int32)  # non-negative
+    zbase = (me // Z) * Z
+    # local candidate: one of the Z-1 zone members != me
+    off_l = draw % jnp.maximum(Z - 1, 1)
+    local = zbase + off_l + (off_l >= (me - zbase)).astype(jnp.int32)
+    # remote candidate: one of the W-Z workers outside the zone
+    off_r = draw % jnp.maximum(W - Z, 1)
+    remote = jnp.where(off_r >= zbase, off_r + Z, off_r)
+    has_local = Z > 1
+    has_remote = W > Z
+    use_local = jnp.where(has_local & has_remote, want_local,
+                          jnp.asarray(has_local))
+    victim = jnp.where(use_local, local, remote).astype(jnp.int32)
+    return rng, victim
+
+
+class RPState(NamedTuple):
+    tgt: jax.Array   # (W,) adopted thief id, -1 = none (Alg. 3 "No thief")
+    left: jax.Array  # (W,) remaining tasks to redirect
+
+
+def rp_make(n_workers: int) -> RPState:
+    return RPState(tgt=jnp.full(n_workers, -1, jnp.int32),
+                   left=jnp.zeros(n_workers, jnp.int32))
+
+
+def rp_adopt(rp: RPState, thief: jax.Array, n_steal: jax.Array,
+             valid: jax.Array) -> Tuple[RPState, jax.Array]:
+    """Alg. 3 doLoadBalancing: adopt the requesting thief iff none is active."""
+    adopt = valid & (rp.tgt < 0)
+    return RPState(
+        tgt=jnp.where(adopt, thief, rp.tgt),
+        left=jnp.where(adopt, n_steal, rp.left),
+    ), adopt
+
+
+def ws_transfer(xq: xqueue.XQ, victim_mask: jax.Array, thief: jax.Array,
+                n_steal: jax.Array, clock: jax.Array, comm_cost: jax.Array,
+                deq_rr: jax.Array, ws_cap: int):
+    """Alg. 4: each victim moves up to ``n_steal`` tasks from its own queues to
+    queue ``(thief, victim)``.  Vectorized over victims; the per-task loop is a
+    ``fori_loop`` bounded by the static ``ws_cap``.
+
+    Returns (xq', clock', stolen_count, src_empty, tgt_full).
+    """
+    W = xq.head.shape[0]
+    me = jnp.arange(W, dtype=jnp.int32)
+
+    def body(_i, carry):
+        xq_c, clock_c, stolen, src_empty, tgt_full = carry
+        # Alg. 4 while-condition: check target occupancy BEFORE popping so a
+        # popped task always has a destination (no task is ever lost).
+        q_cap = xqueue.capacity(xq_c)
+        tgt_free = (xq_c.tail[thief, me] - xq_c.head[thief, me]) < q_cap
+        want = victim_mask & (stolen < n_steal)
+        tgt_full = tgt_full | (want & ~tgt_free)
+        active = want & tgt_free
+        xq_c, task, ts, _src, found, _checked = xqueue.pop_first(
+            xq_c, deq_rr, active)
+        src_empty = src_empty | (active & ~found)
+        push_ts = jnp.maximum(clock_c, ts) + comm_cost
+        xq_c, ok = xqueue.push(xq_c, me, jnp.where(found, thief, me),
+                               task, push_ts, found)
+        clock_c = clock_c + jnp.where(found, comm_cost, 0)
+        stolen = stolen + (found & ok).astype(jnp.int32)
+        return xq_c, clock_c, stolen, src_empty, tgt_full
+
+    zeros = jnp.zeros(W, jnp.int32)
+    false = jnp.zeros(W, bool)
+    xq, clock, stolen, src_empty, tgt_full = jax.lax.fori_loop(
+        0, ws_cap, body, (xq, clock, zeros, false, false))
+    return xq, clock, stolen, src_empty, tgt_full

@@ -1,0 +1,79 @@
+"""Lock-less steal-request messaging protocol (paper §IV-B, Alg. 1 & 2).
+
+Each worker owns two cells:
+
+  * ``round``   — monotonically increasing, incremented by the *victim* each
+                  time it handles a request (starts at 1);
+  * ``request`` — written by *thieves*: the paper packs ``(thief_id << 40) |
+                  victim_round`` into one 64-bit cell.
+
+Simulator representation: the request cell is stored as the pair
+``(req_round, req_tid)``.  Both halves are always written in the same
+vectorized phase, so the pair is atomic *by construction* — this models the
+single 64-bit store without requiring x64 mode in JAX.  ``pack``/``unpack``
+below keep the paper's exact 40/24-bit layout for tests and documentation.
+
+Races are preserved: several thieves targeting one victim in the same step
+overwrite each other's request (arbitrary scatter order), exactly the
+overwrite-then-timeout behavior the paper describes.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+ROUND_BITS = 40  # paper layout: 40-bit round | 24-bit worker id
+
+
+def pack(thief_id: int, round_: int) -> int:
+    """Reference 64-bit packing (host-side, used by tests)."""
+    return (int(thief_id) << ROUND_BITS) | (int(round_) & ((1 << ROUND_BITS) - 1))
+
+
+def unpack(req: int) -> Tuple[int, int]:
+    return int(req) >> ROUND_BITS, int(req) & ((1 << ROUND_BITS) - 1)
+
+
+class Cells(NamedTuple):
+    round: jax.Array      # (W,) int32, victim-owned
+    req_round: jax.Array  # (W,) int32, thief-written (pairs with req_tid)
+    req_tid: jax.Array    # (W,) int32
+
+
+def make(n_workers: int) -> Cells:
+    return Cells(
+        round=jnp.ones(n_workers, jnp.int32),
+        req_round=jnp.zeros(n_workers, jnp.int32),   # 0 < round=1 -> slot free
+        req_tid=jnp.full(n_workers, -1, jnp.int32),
+    )
+
+
+def thief_send(cells: Cells, thief: jax.Array, victim: jax.Array,
+               mask: jax.Array) -> Tuple[Cells, jax.Array]:
+    """Alg. 1: thief reads the victim's round and request cells; if the pending
+    request is stale (``curr < round``) it writes a fresh request carrying the
+    victim's current round and its own id.  Returns (cells', sent)."""
+    v_round = cells.round[victim]
+    curr = cells.req_round[victim]
+    sent = mask & (curr < v_round)
+    # last-writer-wins scatter models the racy overwrite; inactive lanes are
+    # dropped via out-of-bounds indices.
+    W = cells.round.shape[0]
+    idx = jnp.where(sent, victim, W)
+    req_round = cells.req_round.at[idx].set(v_round, mode="drop")
+    req_tid = cells.req_tid.at[idx].set(thief, mode="drop")
+    return Cells(cells.round, req_round, req_tid), sent
+
+
+def victim_valid(cells: Cells) -> jax.Array:
+    """Alg. 2 line 3: a request is valid iff its round equals the victim's
+    current round (stale requests are ignored)."""
+    return cells.req_round == cells.round
+
+
+def victim_advance(cells: Cells, handled: jax.Array) -> Cells:
+    """Alg. 2 line 5: handling a request re-opens the slot."""
+    return cells._replace(round=cells.round + handled.astype(jnp.int32))

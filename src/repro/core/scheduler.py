@@ -1,0 +1,507 @@
+"""Vectorized lock-less task scheduler simulator (the paper's runtime, in JAX).
+
+Executes the paper's algorithms *literally* — same queue topology (per-pair
+SPSC buffers), same message cells (Alg. 1/2), same DLB policies (Alg. 3/4),
+same counters (§V) — over host-built task DAGs, with per-worker virtual
+clocks charged by the cost model.  Makespan is causal through queue
+timestamps: popping a task advances the consumer clock to at least the
+producer-side timestamp.
+
+Modes reproduce the paper's ablation ladder:
+
+  gomp     single global priority queue + global task lock (everything
+           serializes on the lock; malloc in the critical path)
+  xgomp    XQueue + static round-robin balancing; centralized barrier keeps a
+           globally-shared *atomic* task count (contended per create/finish)
+  xgomptb  XQueue + distributed tree barrier (no global count at all)
+  na_rp    xgomptb + NUMA-aware Redirect Push   (Alg. 3)
+  na_ws    xgomptb + NUMA-aware Work Stealing   (Alg. 4)
+
+One simulator step = one scheduling point per worker: a worker either pushes
+pending spawned tasks (up to K_SPAWN), or tries to dequeue-and-execute one
+task; idle workers run the thief protocol.  All phases are vectorized over
+workers; lock-less "owner writes only" discipline holds per phase by
+construction (see xqueue.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dlb, messaging, xqueue
+from repro.core import barrier as barrier_mod
+from repro.core.costs import DEFAULT_COSTS, CostModel
+from repro.core.taskgraph import TaskGraph
+
+MODES = ("gomp", "xgomp", "xgomptb", "na_rp", "na_ws")
+
+# counters (paper §V)
+CTR_NAMES = (
+    "exec", "self", "local", "remote",            # task locality at execution
+    "static_push", "imm_exec",                     # push outcomes
+    "req_sent", "req_handled", "req_has_steal",    # messaging protocol
+    "stolen", "stolen_local", "stolen_remote",     # migrated tasks (WS + RP)
+    "src_empty", "tgt_full",                       # failed steals
+    "atomic_ops", "busy_ns",
+)
+NC = len(CTR_NAMES)
+CTR = {n: i for i, n in enumerate(CTR_NAMES)}
+
+K_SPAWN = 2     # pushes per worker per scheduling point
+WS_CAP = 32     # static bound on Alg. 4's per-round transfer loop
+NV_CAP = 24     # static bound on requests per thief retry (paper max N_victim)
+
+
+class Params(NamedTuple):
+    """Dynamic DLB configuration (§IV-E) — sweepable without recompilation."""
+    n_victim: jax.Array
+    n_steal: jax.Array
+    t_interval: jax.Array  # in scheduling points
+    p_local: jax.Array
+
+
+def make_params(n_victim=4, n_steal=8, t_interval=100, p_local=1.0) -> Params:
+    return Params(jnp.int32(n_victim), jnp.int32(n_steal),
+                  jnp.int32(t_interval), jnp.float32(p_local))
+
+
+class _Graph(NamedTuple):
+    dur: jax.Array
+    first_child: jax.Array
+    n_children: jax.Array
+    notify: jax.Array
+    join_dep: jax.Array
+
+
+class SimState(NamedTuple):
+    xq: xqueue.XQ
+    cells: messaging.Cells
+    rp: dlb.RPState
+    # GOMP-mode single global queue
+    g_buf: jax.Array
+    g_ts: jax.Array
+    g_head: jax.Array
+    g_tail: jax.Array
+    # per-worker spawn stacks of contiguous task-id ranges
+    s_task: jax.Array   # (W, S) next task id of the range
+    s_cnt: jax.Array    # (W, S) remaining count
+    s_top: jax.Array    # (W,)
+    # task-graph dynamic state
+    join_cnt: jax.Array
+    done: jax.Array
+    creator: jax.Array
+    # worker state
+    clock: jax.Array
+    rr: jax.Array
+    deq_rr: jax.Array
+    idle: jax.Array
+    rng: jax.Array
+    ctr: jax.Array      # (W, NC) int32
+    n_done: jax.Array
+    overflow: jax.Array
+    step_i: jax.Array
+
+
+@dataclasses.dataclass
+class SimResult:
+    name: str
+    mode: str
+    n_workers: int
+    completed: bool
+    time_ns: int
+    steps: int
+    counters: dict            # summed over workers
+    per_worker_busy: np.ndarray
+    per_worker_clock: np.ndarray
+    per_worker_exec: np.ndarray
+
+    @property
+    def throughput_tasks_per_s(self) -> float:
+        return self.counters["exec"] / max(self.time_ns, 1) * 1e9
+
+
+def _comm(costs: CostModel, a, b, zsz: int):
+    same = a == b
+    same_zone = (a // zsz) == (b // zsz)
+    return jnp.where(same, costs.c_cache,
+                     jnp.where(same_zone, costs.c_zone,
+                               costs.c_numa)).astype(jnp.int32)
+
+
+def _bump(ctr, name, mask_or_val):
+    v = mask_or_val.astype(jnp.int32) if mask_or_val.dtype == bool \
+        else mask_or_val
+    return ctr.at[:, CTR[name]].add(v)
+
+
+def _stack_push(st: SimState, mask, task0, cnt) -> SimState:
+    W, S = st.s_task.shape
+    me = jnp.arange(W)
+    idx = jnp.where(mask & (st.s_top < S), st.s_top, S)
+    s_task = st.s_task.at[me, idx].set(task0, mode="drop")
+    s_cnt = st.s_cnt.at[me, idx].set(cnt, mode="drop")
+    s_top = st.s_top + (mask & (st.s_top < S)).astype(jnp.int32)
+    overflow = st.overflow | jnp.any(mask & (st.s_top >= S))
+    return st._replace(s_task=s_task, s_cnt=s_cnt, s_top=s_top,
+                       overflow=overflow)
+
+
+def _finish(st: SimState, ftask, g: _Graph, W: int) -> SimState:
+    """Completion bookkeeping for per-worker finished tasks (-1 = none):
+    spawn-range entries go on the finisher's own stack; the notify target's
+    dependency count drops; a join reaching zero is claimed by exactly one
+    finisher (scatter-min tie-break) who 'creates' it."""
+    T = g.dur.shape[0]
+    me = jnp.arange(W, dtype=jnp.int32)
+    active = ftask >= 0
+    safe = jnp.where(active, ftask, 0)
+    done = st.done.at[jnp.where(active, ftask, T)].set(True, mode="drop")
+    n_done = st.n_done + jnp.sum(active, dtype=jnp.int32)
+    st = st._replace(done=done, n_done=n_done)
+    # spawned children: one O(1) range entry
+    nch = jnp.where(active, g.n_children[safe], 0)
+    st = _stack_push(st, nch > 0, g.first_child[safe], nch)
+    # notify join
+    j = jnp.where(active, g.notify[safe], -1)
+    jsafe = jnp.where(j >= 0, j, T)
+    join_cnt = st.join_cnt.at[jsafe].add(-1, mode="drop")
+    newly = (j >= 0) & (join_cnt[jnp.where(j >= 0, j, 0)] == 0)
+    claim = jnp.full((T,), W, jnp.int32).at[
+        jnp.where(newly, j, T)].min(me, mode="drop")
+    mine = newly & (claim[jnp.where(newly, j, 0)] == me)
+    creator = st.creator.at[jnp.where(mine, j, T)].set(me, mode="drop")
+    st = st._replace(join_cnt=join_cnt, creator=creator)
+    return _stack_push(st, mine, j, jnp.ones(W, jnp.int32))
+
+
+def _atomic_charge(st: SimState, mask, costs: CostModel) -> SimState:
+    """Contended RMWs on one shared cache line (XGOMP's global task count):
+    simultaneous writers serialize; the k-th pays k hand-offs."""
+    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    cost = jnp.where(mask, costs.c_atomic + rank * costs.c_contend, 0)
+    return st._replace(clock=st.clock + cost,
+                       ctr=_bump(st.ctr, "atomic_ops", mask))
+
+
+def _build_step(mode: str, W: int, zsz: int, S: int, costs: CostModel,
+                g: _Graph, params: Params, mem_bound: float = 0.0):
+    me = jnp.arange(W, dtype=jnp.int32)
+    T = g.dur.shape[0]
+    GQ = None
+
+    def zone(x):
+        return x // zsz
+
+    # ---------------- phase A: push spawned tasks ----------------
+    def spawn_phase(st: SimState) -> SimState:
+        for _ in range(K_SPAWN):
+            active = st.s_top > 0
+            topi = jnp.maximum(st.s_top - 1, 0)
+            etask = st.s_task[me, topi]
+            ecnt = st.s_cnt[me, topi]
+            task = jnp.where(active, etask, 0)
+
+            if mode == "gomp":
+                # serialized global-lock push (lock + pq op + malloc)
+                rank = jnp.cumsum(active.astype(jnp.int32)) - 1
+                cost = jnp.where(
+                    active,
+                    costs.c_atomic + costs.c_pq_op + costs.c_alloc
+                    + rank * costs.c_lock, 0)
+                clock = st.clock + cost
+                gq = st.g_buf.shape[0]
+                gidx = jnp.where(active, (st.g_tail + rank) % gq, gq)
+                g_buf = st.g_buf.at[gidx].set(task, mode="drop")
+                g_ts = st.g_ts.at[gidx].set(clock, mode="drop")
+                g_tail = st.g_tail + jnp.sum(active, dtype=jnp.int32)
+                ctr = _bump(st.ctr, "static_push", active)
+                ctr = _bump(ctr, "atomic_ops", active)
+                creator = st.creator.at[
+                    jnp.where(active, task, T)].set(me, mode="drop")
+                st = st._replace(g_buf=g_buf, g_ts=g_ts, g_tail=g_tail,
+                                 clock=clock, ctr=ctr, creator=creator)
+                pushed = active
+                imm = jnp.zeros(W, bool)
+            else:
+                if mode == "na_rp":
+                    use_rp = active & (st.rp.tgt >= 0) & (st.rp.left > 0)
+                    tgt = jnp.where(use_rp, jnp.maximum(st.rp.tgt, 0),
+                                    st.rr % W)
+                else:
+                    use_rp = jnp.zeros(W, bool)
+                    tgt = st.rr % W
+                cost = jnp.where(
+                    active,
+                    costs.c_alloc + costs.c_slot + _comm(costs, me, tgt, zsz),
+                    0)
+                clock = st.clock + cost
+                xq, ok = xqueue.push(st.xq, me, tgt, task, clock, active)
+                pushed = ok
+                imm = active & ~ok
+                rr = st.rr + (active & ~use_rp).astype(jnp.int32)
+                creator = st.creator.at[
+                    jnp.where(active, task, T)].set(me, mode="drop")
+                ctr = _bump(st.ctr, "static_push", pushed & ~use_rp)
+                ctr = _bump(ctr, "stolen", pushed & use_rp)  # redirections
+                ctr = _bump(ctr, "stolen_local",
+                            pushed & use_rp & (zone(me) == zone(tgt)))
+                ctr = _bump(ctr, "stolen_remote",
+                            pushed & use_rp & (zone(me) != zone(tgt)))
+                if mode == "na_rp":
+                    # Alg. 3: stop on quota exhausted or thief queue full
+                    left = st.rp.left - (pushed & use_rp).astype(jnp.int32)
+                    drop = (use_rp & ~ok) | (left <= 0)
+                    rp = dlb.RPState(tgt=jnp.where(drop, -1, st.rp.tgt),
+                                     left=jnp.where(drop, 0, left))
+                    ctr = _bump(ctr, "tgt_full", use_rp & ~ok)
+                    st = st._replace(rp=rp)
+                st = st._replace(xq=xq, clock=clock, rr=rr, ctr=ctr,
+                                 creator=creator)
+                if mode == "xgomp":   # atomic global count: task created
+                    st = _atomic_charge(st, active, costs)
+
+            # consume one task from the range entry
+            sidx = jnp.where(active, topi, S)
+            s_task = st.s_task.at[me, sidx].set(etask + 1, mode="drop")
+            s_cnt = st.s_cnt.at[me, sidx].set(ecnt - 1, mode="drop")
+            s_top = jnp.where(active & (ecnt - 1 == 0), st.s_top - 1,
+                              st.s_top)
+            st = st._replace(s_task=s_task, s_cnt=s_cnt, s_top=s_top)
+
+            # execute-immediately rule for full target queues (paper §II-B)
+            dur_t = jnp.where(imm, g.dur[task], 0)
+            ctr = _bump(st.ctr, "imm_exec", imm)
+            ctr = _bump(ctr, "exec", imm)
+            ctr = _bump(ctr, "self", imm)
+            ctr = _bump(ctr, "busy_ns", dur_t)
+            st = st._replace(clock=st.clock + dur_t, ctr=ctr)
+            st = _finish(st, jnp.where(imm, task, -1), g, W)
+            if mode == "xgomp":       # task finished -> atomic decrement
+                st = _atomic_charge(st, imm, costs)
+        return st
+
+    # ---------------- phase B: dequeue ----------------
+    def dequeue_phase(st: SimState):
+        idle_m = st.s_top == 0
+        if mode == "gomp":
+            avail = st.g_tail - st.g_head
+            rank = jnp.cumsum(idle_m.astype(jnp.int32)) - 1
+            found = idle_m & (rank < avail)
+            gq = st.g_buf.shape[0]
+            gidx = (st.g_head + rank) % gq
+            task = jnp.where(found, st.g_buf[gidx], 0)
+            ts = jnp.where(found, st.g_ts[gidx], 0)
+            g_head = st.g_head + jnp.sum(found, dtype=jnp.int32)
+            cost = jnp.where(idle_m,
+                             costs.c_atomic + costs.c_pq_op
+                             + rank * costs.c_lock, 0)
+            ctr = _bump(st.ctr, "atomic_ops", idle_m)
+            st = st._replace(g_head=g_head, clock=st.clock + cost, ctr=ctr)
+            return st, task, ts, found
+        xq, task, ts, src, found, checked = xqueue.pop_first(
+            st.xq, st.deq_rr, idle_m)
+        cost = jnp.where(idle_m, checked * costs.c_cache, 0)
+        cost = cost + jnp.where(found, _comm(costs, me, src, zsz), 0)
+        deq_rr = st.deq_rr + (found & (src != me)).astype(jnp.int32)
+        st = st._replace(xq=xq, clock=st.clock + cost, deq_rr=deq_rr)
+        return st, task, ts, found
+
+    # ---------------- phase B2: thief protocol ----------------
+    def thief_phase(st: SimState, found) -> SimState:
+        thief_m = (st.s_top == 0) & ~found
+        idle = jnp.where(thief_m, st.idle + 1, 0)
+        do_req = thief_m & ((idle == 1) | (idle >= params.t_interval))
+        idle = jnp.where(idle >= params.t_interval, 0, idle)
+        st = st._replace(idle=idle)
+        for v in range(NV_CAP):
+            m = do_req & (v < params.n_victim)
+            rng, victim = dlb.pick_victim(st.rng, me, W, zsz, params.p_local)
+            cells, sent = messaging.thief_send(st.cells, me, victim, m)
+            cost = jnp.where(m, 2 * _comm(costs, me, victim, zsz), 0)
+            cost = cost + jnp.where(sent, _comm(costs, me, victim, zsz), 0)
+            ctr = _bump(st.ctr, "req_sent", sent)
+            st = st._replace(rng=rng, cells=cells, clock=st.clock + cost,
+                             ctr=ctr)
+        return st
+
+    # ---------------- phase C: victim handling + execution ----------------
+    def victim_phase(st: SimState, found) -> SimState:
+        valid = messaging.victim_valid(st.cells) & found
+        thief = jnp.maximum(st.cells.req_tid, 0)
+        if mode == "na_ws":
+            comm_c = _comm(costs, me, thief, zsz)
+            xq, clock, stolen, src_empty, tgt_full = dlb.ws_transfer(
+                st.xq, valid, thief, params.n_steal, st.clock, comm_c,
+                st.deq_rr, WS_CAP)
+            ctr = _bump(st.ctr, "stolen", stolen)
+            ctr = _bump(ctr, "stolen_local",
+                        jnp.where(zone(me) == zone(thief), stolen, 0))
+            ctr = _bump(ctr, "stolen_remote",
+                        jnp.where(zone(me) != zone(thief), stolen, 0))
+            ctr = _bump(ctr, "req_has_steal", valid & (stolen > 0))
+            ctr = _bump(ctr, "src_empty", src_empty)
+            ctr = _bump(ctr, "tgt_full", tgt_full)
+            ctr = _bump(ctr, "req_handled", valid)
+            st = st._replace(xq=xq, clock=clock, ctr=ctr,
+                             cells=messaging.victim_advance(st.cells, valid))
+        elif mode == "na_rp":
+            rp, adopted = dlb.rp_adopt(st.rp, thief, params.n_steal, valid)
+            ctr = _bump(st.ctr, "req_handled", valid)
+            ctr = _bump(ctr, "req_has_steal", adopted)
+            st = st._replace(rp=rp, ctr=ctr,
+                             cells=messaging.victim_advance(st.cells, valid))
+        return st
+
+    def exec_phase(st: SimState, task, ts, found) -> SimState:
+        safe = jnp.where(found, task, 0)
+        dur_t = jnp.where(found, g.dur[safe], 0)
+        if mem_bound > 0:
+            # memory-bound tasks run slower away from their creator's data
+            # (paper SVI-B: the locality mechanism behind the DLB gains)
+            cr0 = st.creator[safe]
+            pen = jnp.where(cr0 == me, 1.0,
+                            jnp.where(zone(cr0) == zone(me),
+                                      costs.exec_zone_penalty,
+                                      costs.exec_remote_penalty))
+            mult = 1.0 + mem_bound * (pen - 1.0)
+            dur_t = (dur_t.astype(jnp.float32) * mult).astype(jnp.int32)
+        start = jnp.maximum(st.clock, jnp.where(found, ts, 0))
+        clock = jnp.where(found, start + dur_t, st.clock)
+        cr = st.creator[safe]
+        ctr = _bump(st.ctr, "exec", found)
+        ctr = _bump(ctr, "self", found & (cr == me))
+        ctr = _bump(ctr, "local", found & (cr != me) & (zone(cr) == zone(me)))
+        ctr = _bump(ctr, "remote", found & (zone(cr) != zone(me)))
+        ctr = _bump(ctr, "busy_ns", dur_t)
+        st = st._replace(clock=clock, ctr=ctr)
+        st = _finish(st, jnp.where(found, task, -1), g, W)
+        if mode in ("gomp", "xgomp"):  # global task count decrement
+            if mode == "xgomp":
+                st = _atomic_charge(st, found, costs)
+            else:
+                st = st._replace(ctr=_bump(st.ctr, "atomic_ops", found))
+        return st
+
+    def step(st: SimState) -> SimState:
+        if mode == "na_rp":
+            # spawning workers are victims too: adopt a thief before pushing
+            spawner = st.s_top > 0
+            valid0 = messaging.victim_valid(st.cells) & spawner
+            rp, _ = dlb.rp_adopt(st.rp, jnp.maximum(st.cells.req_tid, 0),
+                                 params.n_steal, valid0)
+            st = st._replace(
+                rp=rp, cells=messaging.victim_advance(st.cells, valid0),
+                ctr=_bump(st.ctr, "req_handled", valid0))
+        st = spawn_phase(st)
+        st, task, ts, found = dequeue_phase(st)
+        if mode in ("na_rp", "na_ws"):
+            st = thief_phase(st, found)
+            st = victim_phase(st, found)
+        st = exec_phase(st, task, ts, found)
+        return st._replace(step_i=st.step_i + 1)
+
+    return step
+
+
+def _init_state(g: _Graph, W: int, S: int, q_cap: int, gq_cap: int,
+                seed: int) -> SimState:
+    T = g.dur.shape[0]
+    st = SimState(
+        xq=xqueue.make(W, q_cap),
+        cells=messaging.make(W),
+        rp=dlb.rp_make(W),
+        g_buf=jnp.full((gq_cap,), -1, jnp.int32),
+        g_ts=jnp.zeros((gq_cap,), jnp.int32),
+        g_head=jnp.int32(0), g_tail=jnp.int32(0),
+        s_task=jnp.zeros((W, S), jnp.int32),
+        s_cnt=jnp.zeros((W, S), jnp.int32),
+        s_top=jnp.zeros((W,), jnp.int32),
+        join_cnt=g.join_dep,
+        done=jnp.zeros((T,), bool),
+        creator=jnp.zeros((T,), jnp.int32),
+        clock=jnp.zeros((W,), jnp.int32),
+        rr=jnp.arange(W, dtype=jnp.int32),      # round-robin starts at master
+        deq_rr=jnp.zeros((W,), jnp.int32),
+        idle=jnp.zeros((W,), jnp.int32),
+        rng=(jnp.arange(W, dtype=jnp.uint32) * jnp.uint32(2654435761)
+             + jnp.uint32(seed * 40503 + 1)),
+        ctr=jnp.zeros((W, NC), jnp.int32),
+        n_done=jnp.int32(0),
+        overflow=jnp.asarray(False),
+        step_i=jnp.int32(0),
+    )
+    # seed the root task onto worker 0's spawn stack as a 1-length range
+    st = st._replace(
+        s_task=st.s_task.at[0, 0].set(0),
+        s_cnt=st.s_cnt.at[0, 0].set(1),
+        s_top=st.s_top.at[0].set(1),
+    )
+    return st
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    n_workers: int = 64
+    n_zones: int = 8
+    queue_cap: int = 16
+    stack_cap: int = 512
+    max_steps: int = 200_000
+    costs: CostModel = DEFAULT_COSTS
+
+
+def _run_jit(mode, cfg, graph_arrays, params, seed, gq_cap,
+             mem_bound=0.0):
+    g = _Graph(*graph_arrays)
+    T = g.dur.shape[0]
+    W, Z = cfg.n_workers, cfg.n_zones
+    zsz = max(W // Z, 1)
+    step = _build_step(mode, W, zsz, cfg.stack_cap, cfg.costs, g, params,
+                       mem_bound)
+    st0 = _init_state(g, W, cfg.stack_cap, cfg.queue_cap, gq_cap, seed)
+
+    def cond(st):
+        return (st.n_done < T) & (st.step_i < cfg.max_steps) & ~st.overflow
+
+    return jax.lax.while_loop(cond, step, st0)
+
+
+_run_cached = jax.jit(_run_jit, static_argnums=(0, 1, 5, 6))
+
+
+def run_schedule(graph: TaskGraph, mode: str = "xgomptb",
+                 params: Params | None = None, cfg: SimConfig | None = None,
+                 seed: int = 0) -> SimResult:
+    """Simulate scheduling `graph` under `mode`; returns makespan + counters."""
+    assert mode in MODES, mode
+    cfg = cfg or SimConfig()
+    params = params or make_params()
+    gq_cap = graph.n_tasks + 2 if mode == "gomp" else 4
+    arrays = tuple(jnp.asarray(a) for a in (
+        graph.dur, graph.first_child, graph.n_children, graph.notify,
+        graph.join_dep))
+    st = jax.block_until_ready(
+        _run_cached(mode, cfg, arrays, params, seed, gq_cap,
+                    round(float(graph.mem_bound), 3)))
+
+    W = cfg.n_workers
+    if mode in ("gomp", "xgomp"):
+        episode = barrier_mod.centralized_episode(W, cfg.costs)
+    else:
+        episode = barrier_mod.tree_episode(W, cfg.costs)
+    ctr = np.asarray(st.ctr)
+    counters = {n: int(ctr[:, i].sum()) for i, n in enumerate(CTR_NAMES)}
+    counters["atomic_ops"] += int(episode.atomic_ops)
+    time_ns = int(np.asarray(st.clock).max()) + int(episode.time_ns)
+    return SimResult(
+        name=graph.name, mode=mode, n_workers=W,
+        completed=bool(st.n_done == graph.n_tasks) and not bool(st.overflow),
+        time_ns=time_ns, steps=int(st.step_i), counters=counters,
+        per_worker_busy=ctr[:, CTR["busy_ns"]].copy(),
+        per_worker_clock=np.asarray(st.clock).copy(),
+        per_worker_exec=ctr[:, CTR["exec"]].copy(),
+    )

@@ -1,0 +1,108 @@
+"""XQueue: lock-less MPMC queueing built from per-pair SPSC ring buffers.
+
+Faithful to the paper (§II-B / Fig. 2): worker *i* owns one *master* SPSC
+queue (pair ``(i, i)``) plus one *auxiliary* SPSC queue per other worker
+(pair ``(consumer=i, producer=p)``).  Any task worker ``p`` sends to worker
+``c`` goes into queue ``(c, p)`` — so every buffer has exactly one producer
+and one consumer, which is the entire correctness argument of B-queue.
+
+TPU/JAX adaptation: the SPSC "only the producer writes the tail, only the
+consumer writes the head" discipline becomes *disjoint-slice writes inside a
+bulk-synchronous step*: the push phase writes only ``(tail, buf[tgt, self])``
+slices keyed by producer id, the pop phase writes only ``(head)`` slices keyed
+by consumer id.  No two lanes ever write the same element in the same phase,
+which is the vectorized statement of the lock-less invariant.
+
+Timestamps ride along with every task so the simulator's virtual clocks stay
+causal: a consumer popping a task first advances its clock to the producer's
+clock at push time.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class XQ(NamedTuple):
+    buf: jax.Array   # (W, W, Q) int32 — buf[consumer, producer, slot] task ids
+    ts: jax.Array    # (W, W, Q) int32 — producer-side virtual timestamps
+    head: jax.Array  # (W, W) int32 monotonic consumer cursor
+    tail: jax.Array  # (W, W) int32 monotonic producer cursor
+
+
+def make(n_workers: int, capacity: int) -> XQ:
+    W, Q = n_workers, capacity
+    return XQ(
+        buf=jnp.full((W, W, Q), -1, jnp.int32),
+        ts=jnp.zeros((W, W, Q), jnp.int32),
+        head=jnp.zeros((W, W), jnp.int32),
+        tail=jnp.zeros((W, W), jnp.int32),
+    )
+
+
+def sizes(xq: XQ) -> jax.Array:
+    """(W, W) occupancy, consumer-major."""
+    return xq.tail - xq.head
+
+
+def capacity(xq: XQ) -> int:
+    return xq.buf.shape[-1]
+
+
+def push(xq: XQ, producer: jax.Array, consumer: jax.Array, task: jax.Array,
+         ts: jax.Array, mask: jax.Array) -> Tuple[XQ, jax.Array]:
+    """Vectorized push: lane ``i`` (producer ``producer[i]``) appends ``task[i]``
+    to queue ``(consumer[i], producer[i])``.
+
+    Producer ids must be distinct across active lanes (they are: lane == worker),
+    so all writes touch disjoint (consumer, producer) pairs.
+    Returns (new_xq, ok) where ok is False for full queues (caller then applies
+    the paper's execute-immediately rule).
+    """
+    Q = capacity(xq)
+    W = xq.head.shape[0]
+    cur = xq.tail[consumer, producer] - xq.head[consumer, producer]
+    ok = mask & (cur < Q)
+    slot = xq.tail[consumer, producer] % Q
+    # inactive lanes scatter out-of-bounds and are dropped
+    c_idx = jnp.where(ok, consumer, W)
+    buf = xq.buf.at[c_idx, producer, slot].set(task, mode="drop")
+    tsb = xq.ts.at[c_idx, producer, slot].set(ts, mode="drop")
+    tail = xq.tail.at[c_idx, producer].add(1, mode="drop")
+    return XQ(buf, tsb, xq.head, tail), ok
+
+
+def _scan_order(W: int, me: jax.Array, rot: jax.Array) -> jax.Array:
+    """Candidate source order for each consumer: master queue first, then the
+    other W-1 producers starting at rotation ``rot`` (dequeue round-robin)."""
+    # aux candidates: all producers != me, rotated
+    j = jnp.arange(W - 1)[None, :]                       # (1, W-1)
+    raw = (me[:, None] + 1 + ((rot[:, None] + j) % (W - 1))) % W
+    return jnp.concatenate([me[:, None], raw], axis=1)    # (W, W)
+
+
+def pop_first(xq: XQ, rot: jax.Array, mask: jax.Array):
+    """Every consumer pops one task: master queue first, then auxiliary queues
+    in rotated round-robin order (paper §II-B).
+
+    Returns (xq', task, ts, src, found, checked) — ``checked`` is the number of
+    queues inspected (each inspection is charged by the cost model).
+    """
+    W = xq.head.shape[0]
+    me = jnp.arange(W, dtype=jnp.int32)
+    order = _scan_order(W, me, rot)                      # (W, W)
+    sz = sizes(xq)                                        # (W, W) [c, p]
+    occ = jnp.take_along_axis(sz[me], order, axis=1) > 0  # (W, W) in scan order
+    pos = jnp.argmax(occ, axis=1).astype(jnp.int32)
+    found = mask & jnp.any(occ, axis=1)
+    src = order[me, pos]
+    checked = jnp.where(jnp.any(occ, axis=1), pos + 1, W)
+    safe_src = jnp.where(found, src, me)
+    slot = xq.head[me, safe_src] % capacity(xq)
+    task = xq.buf[me, safe_src, slot]
+    ts = xq.ts[me, safe_src, slot]
+    head = xq.head.at[me, safe_src].add(found.astype(jnp.int32))
+    return XQ(xq.buf, xq.ts, head, xq.tail), task, ts, src, found, checked

@@ -1,0 +1,90 @@
+"""Jitted public kernel API with backend dispatch.
+
+Models call these wrappers.  On TPU backends they lower to the Pallas
+kernels; elsewhere (this CPU container, and the multi-pod dry-run) they run
+the pure-jnp references in ref.py.  ``set_impl`` forces a path:
+
+  set_impl("ref")        always the jnp oracle
+  set_impl("pallas")     Pallas, interpret=True off-TPU (used by tests)
+  set_impl(None)         auto (default): pallas iff backend == "tpu"
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import ref
+
+_FORCE = None
+
+
+def set_impl(impl):
+    global _FORCE
+    assert impl in (None, "ref", "pallas")
+    _FORCE = impl
+
+
+def _pallas(interpret_ok: bool = True) -> bool:
+    if _FORCE == "ref":
+        return False
+    if _FORCE == "pallas":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=None,
+                    q_chunk=1024, kv_chunk=1024):
+    if _pallas():
+        from repro.kernels import flash_attention as fa
+        return fa.flash_attention_pallas(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            interpret=_interpret())
+    return ref.flash_attention(q, k, v, causal, window, softcap,
+                               q_chunk, kv_chunk)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=0,
+                     softcap=None):
+    return ref.decode_attention(q, k_cache, v_cache, cache_len,
+                                window=window, softcap=softcap)
+
+
+def rwkv6(r, k, v, w, u, state, *, chunk=64):
+    chunk = int(os.environ.get("REPRO_RWKV_CHUNK", chunk))
+    if _pallas():
+        from repro.kernels import rwkv6_scan as rk
+        return rk.rwkv6_pallas(r, k, v, w, u, state,
+                               interpret=_interpret())
+    return ref.rwkv6_chunked(r, k, v, w, u, state, chunk=chunk)
+
+
+def rwkv6_decode(r, k, v, w, u, state):
+    return ref.rwkv6_decode(r, k, v, w, u, state)
+
+
+def ssm_scan(x, dt, A, Bm, Cm, D, state, *, chunk=256):
+    chunk = int(os.environ.get("REPRO_SSM_CHUNK", chunk))
+    return ref.ssm_scan(x, dt, A, Bm, Cm, D, state, chunk=chunk)
+
+
+def ssm_decode(x, dt, A, Bm, Cm, D, state):
+    return ref.ssm_decode(x, dt, A, Bm, Cm, D, state)
+
+
+def moe_dispatch(x, expert, pos, *, n_experts: int, capacity: int):
+    if _pallas():
+        from repro.kernels import moe_dispatch as md
+        return md.moe_dispatch_pallas(x, expert, pos, n_experts=n_experts,
+                                      capacity=capacity,
+                                      interpret=_interpret())
+    return ref.moe_dispatch(x, expert, pos, n_experts, capacity)
+
+
+def moe_combine(y, expert, pos, weight, *, n_tokens: int):
+    return ref.moe_combine(y, expert, pos, weight, n_tokens)

@@ -1,0 +1,371 @@
+"""Pure-jnp reference implementations (oracles) for every Pallas kernel.
+
+These are also the *execution path* on non-TPU backends (and under the
+dry-run): `kernels/ops.py` dispatches here unless a TPU is present.  They are
+written to be memory-sane at scale — attention is chunked with an online
+softmax and a custom VJP (flash semantics), recurrences are chunk-scanned —
+so the lowered HLO reflects the memory behavior the TPU kernels target.
+
+Layouts:
+  attention     q: (B, H, S, Dh); k, v: (B, KV, S, Dh); GQA via H % KV == 0
+  rwkv6         r/k/v/w: (B, H, T, Dh), u: (H, Dh); state: (B, H, Dh, Dh)
+  ssm (mamba)   x/dt: (B, T, Di); A: (Di, N); Bm/Cm: (B, T, N); state: (B, Di, N)
+  moe dispatch  x: (T, D) + routing (expert, pos) -> (E, C, D) buffers
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _softcap(s, cap: Optional[float]):
+    if cap is None:
+        return s
+    return cap * jnp.tanh(s / cap)
+
+
+def _softcap_grad(s_capped, cap: Optional[float]):
+    """d softcap / d s, expressed from the *capped* value."""
+    if cap is None:
+        return jnp.ones_like(s_capped)
+    return 1.0 - (s_capped / cap) ** 2
+
+
+def _block_mask(qpos, kpos, causal: bool, window: int):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        m &= (qpos[:, None] - kpos[None, :]) < window
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (chunked online-softmax with custom VJP)
+# ---------------------------------------------------------------------------
+
+def _attn_fwd(q, k, v, causal, window, softcap, q_chunk, kv_chunk):
+    B, H, S, Dh = q.shape
+    KV = k.shape[1]
+    rep = H // KV
+    scale = Dh ** -0.5
+    Cq = min(q_chunk, S)
+    Ck = min(kv_chunk, S)
+    nq, nk = S // Cq, S // Ck
+    qr = q.reshape(B, KV, rep, nq, Cq, Dh)
+
+    def q_step(i):
+        q_blk = jax.lax.dynamic_index_in_dim(qr, i, axis=3, keepdims=False)
+        q_blk = q_blk.astype(jnp.float32) * scale
+        qpos = i * Cq + jnp.arange(Cq)
+
+        def kv_step(carry, j):
+            acc, m, l = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, j * Ck, Ck, axis=2)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, j * Ck, Ck, axis=2)
+            s = jnp.einsum("bgrqd,bgkd->bgrqk", q_blk,
+                           k_blk.astype(jnp.float32))
+            s = _softcap(s, softcap)
+            kpos = j * Ck + jnp.arange(Ck)
+            s = jnp.where(_block_mask(qpos, kpos, causal, window), s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bgrqk,bgkd->bgrqd", p, v_blk.astype(jnp.float32))
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((B, KV, rep, Cq, Dh), jnp.float32)
+        m0 = jnp.full((B, KV, rep, Cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, rep, Cq), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                      jnp.arange(nk))
+        l_safe = jnp.maximum(l, 1e-30)
+        # cast inside the chunk: the stacked (nq, B,KV,rep,Cq,Dh) buffer then
+        # materializes in the compute dtype, not f32
+        out = (acc / l_safe[..., None]).astype(q.dtype)
+        lse = m + jnp.log(l_safe)
+        return out, lse
+
+    outs, lses = jax.lax.map(q_step, jnp.arange(nq))   # (nq, B,KV,rep,Cq,*)
+    out = jnp.moveaxis(outs, 0, 3).reshape(B, KV, rep, S, Dh)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(B, KV, rep, S)
+    return out.reshape(B, H, S, Dh), lse.reshape(B, H, S)
+
+
+def _attn_bwd(q, k, v, out, lse, dout, causal, window, softcap,
+              q_chunk, kv_chunk):
+    B, H, S, Dh = q.shape
+    KV = k.shape[1]
+    rep = H // KV
+    scale = Dh ** -0.5
+    Cq = min(q_chunk, S)
+    Ck = min(kv_chunk, S)
+    nq, nk = S // Cq, S // Ck
+
+    qf = (q.astype(jnp.float32) * scale).reshape(B, KV, rep, S, Dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    dof = dout.astype(jnp.float32).reshape(B, KV, rep, S, Dh)
+    lsef = lse.reshape(B, KV, rep, S)
+    # D_i = rowsum(dout * out)
+    Drow = jnp.sum(dof * out.astype(jnp.float32).reshape(B, KV, rep, S, Dh),
+                   axis=-1)
+
+    def kv_step(dq, j):
+        k_blk = jax.lax.dynamic_slice_in_dim(kf, j * Ck, Ck, axis=2)
+        v_blk = jax.lax.dynamic_slice_in_dim(vf, j * Ck, Ck, axis=2)
+        kpos = j * Ck + jnp.arange(Ck)
+        dk0 = jnp.zeros((B, KV, Ck, Dh), jnp.float32)
+        dv0 = jnp.zeros((B, KV, Ck, Dh), jnp.float32)
+        (dk_j, dv_j), dq = jax.lax.fori_loop(
+            0, nq, lambda i, val: _bwd_q_iter(
+                i, val, qf, dof, lsef, Drow, k_blk, v_blk, kpos, Cq,
+                causal, window, softcap, scale),
+            ((dk0, dv0), dq))
+        return dq, (dk_j, dv_j)
+
+    dq0 = jnp.zeros_like(qf)
+    dq, (dks, dvs) = jax.lax.scan(kv_step, dq0, jnp.arange(nk))
+    dk = jnp.moveaxis(dks, 0, 2).reshape(B, KV, S, Dh)
+    dv = jnp.moveaxis(dvs, 0, 2).reshape(B, KV, S, Dh)
+    return (dq.reshape(B, H, S, Dh).astype(q.dtype), dk.astype(k.dtype),
+            dv.astype(v.dtype))
+
+
+def _bwd_q_iter(i, val, qf, dof, lsef, Drow, k_blk, v_blk, kpos, Cq,
+                causal, window, softcap, scale):
+    (dk_j, dv_j), dq = val
+    q_blk = jax.lax.dynamic_slice_in_dim(qf, i * Cq, Cq, axis=3)
+    do_blk = jax.lax.dynamic_slice_in_dim(dof, i * Cq, Cq, axis=3)
+    lse_blk = jax.lax.dynamic_slice_in_dim(lsef, i * Cq, Cq, axis=3)
+    dr_blk = jax.lax.dynamic_slice_in_dim(Drow, i * Cq, Cq, axis=3)
+    qpos = i * Cq + jnp.arange(Cq)
+    s_raw = jnp.einsum("bgrqd,bgkd->bgrqk", q_blk, k_blk)
+    s = _softcap(s_raw, softcap)
+    mask = _block_mask(qpos, kpos, causal, window)
+    s_m = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s_m - lse_blk[..., None])
+    dp = jnp.einsum("bgrqd,bgkd->bgrqk", do_blk, v_blk)
+    ds = p * (dp - dr_blk[..., None])
+    ds = ds * _softcap_grad(jnp.where(mask, s, 0.0), softcap)
+    dq_blk = jnp.einsum("bgrqk,bgkd->bgrqd", ds, k_blk) * scale
+    dk_j = dk_j + jnp.einsum("bgrqk,bgrqd->bgkd", ds, q_blk)
+    dv_j = dv_j + jnp.einsum("bgrqk,bgrqd->bgkd", p, do_blk)
+    cur = jax.lax.dynamic_slice_in_dim(dq, i * Cq, Cq, axis=3)
+    dq = jax.lax.dynamic_update_slice_in_dim(dq, cur + dq_blk, i * Cq, axis=3)
+    return ((dk_j, dv_j), dq)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, causal=True, window=0, softcap=None,
+                    q_chunk=1024, kv_chunk=1024):
+    """Chunked attention with online softmax; O(S * chunk) live memory."""
+    out, _ = _attn_fwd(q, k, v, causal, window, softcap, q_chunk, kv_chunk)
+    return out
+
+
+def _flash_fwd_rule(q, k, v, causal, window, softcap, q_chunk, kv_chunk):
+    out, lse = _attn_fwd(q, k, v, causal, window, softcap, q_chunk, kv_chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd_rule(causal, window, softcap, q_chunk, kv_chunk, res, dout):
+    q, k, v, out, lse = res
+    return _attn_bwd(q, k, v, out, lse, dout, causal, window, softcap,
+                     q_chunk, kv_chunk)
+
+
+flash_attention.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def attention_naive(q, k, v, causal=True, window=0, softcap=None):
+    """Quadratic oracle used to validate flash_attention on small shapes."""
+    B, H, S, Dh = q.shape
+    KV = k.shape[1]
+    rep = H // KV
+    qr = q.reshape(B, KV, rep, S, Dh).astype(jnp.float32) * Dh ** -0.5
+    s = jnp.einsum("bgrqd,bgkd->bgrqk", qr, k.astype(jnp.float32))
+    s = _softcap(s, softcap)
+    pos = jnp.arange(S)
+    s = jnp.where(_block_mask(pos, pos, causal, window), s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrqk,bgkd->bgrqd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, S, Dh).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, window=0, softcap=None):
+    """Single-token attention against a (B, KV, S_max, Dh) cache.
+    ``cache_len`` (B,) masks unwritten positions; window > 0 restricts to the
+    last `window` positions."""
+    B, H, Dh = q.shape
+    KV, S = k_cache.shape[1], k_cache.shape[2]
+    rep = H // KV
+    qr = q.reshape(B, KV, rep, Dh).astype(jnp.float32) * Dh ** -0.5
+    s = jnp.einsum("bgrd,bgkd->bgrk", qr, k_cache.astype(jnp.float32))
+    s = _softcap(s, softcap)
+    pos = jnp.arange(S)[None, :]
+    ok = pos < cache_len[:, None]
+    if window > 0:
+        ok &= pos >= (cache_len[:, None] - window)
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrk,bgkd->bgrd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, Dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch): data-dependent per-channel decay linear attention
+# ---------------------------------------------------------------------------
+
+def rwkv6_naive(r, k, v, w, u, state):
+    """Step-by-step oracle.  S_t = diag(w_t) S_{t-1} + k_t^T v_t,
+    out_t = r_t (S_{t-1} + diag(u) k_t^T v_t).  Shapes: r/k/v/w (B,H,T,Dh),
+    u (H, Dh), state (B, H, Dh, Dh) mapping key-dim -> value-dim."""
+    B, H, T, Dh = r.shape
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+
+    def step(s, t):
+        rt, kt, vt, wt = rf[:, :, t], kf[:, :, t], vf[:, :, t], wf[:, :, t]
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,Dh,Dh)
+        out = jnp.einsum("bhk,bhkd->bhd", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, out
+
+    state, outs = jax.lax.scan(step, state.astype(jnp.float32),
+                               jnp.arange(T))
+    return jnp.moveaxis(outs, 0, 2).astype(r.dtype), state
+
+
+def rwkv6_chunked(r, k, v, w, u, state, chunk=64):
+    """Time-chunked sequential recurrence with per-chunk rematerialization.
+
+    Matches ``rwkv6_naive`` exactly (tests assert allclose) while keeping
+    training memory at O(T/chunk) carried states instead of O(T).  A parallel
+    intra-chunk (attention-like) form exists but overflows f32 for
+    fast-forgetting channels (per-channel decay products reach exp(+-c·|log w|));
+    the TPU Pallas kernel therefore also uses the sequential-within-block
+    form, vectorized over (B, H) — see kernels/rwkv6_scan.py."""
+    B, H, T, Dh = r.shape
+    C = min(chunk, T)
+    n = T // C
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def chunk_step(s, i):
+        sl = lambda x: jax.lax.dynamic_slice_in_dim(x, i * C, C, axis=2)
+        rc, kc, vc, wc = sl(rf), sl(kf), sl(vf), sl(wf)
+
+        def step(s, t):
+            rt, kt, vt, wt = rc[:, :, t], kc[:, :, t], vc[:, :, t], wc[:, :, t]
+            kv = kt[..., :, None] * vt[..., None, :]
+            out = jnp.einsum("bhk,bhkd->bhd", rt,
+                             s + uf[None, :, :, None] * kv)
+            s = wt[..., :, None] * s + kv
+            return s, out
+
+        s, outs = jax.lax.scan(step, s, jnp.arange(C))
+        return s, jnp.moveaxis(outs, 0, 2)                 # (B,H,C,Dh)
+
+    state, outs = jax.lax.scan(jax.checkpoint(chunk_step),
+                               state.astype(jnp.float32), jnp.arange(n))
+    out = jnp.moveaxis(outs, 0, 2).reshape(B, H, T, Dh)
+    return out.astype(r.dtype), state
+
+
+def rwkv6_decode(r, k, v, w, u, state):
+    """One-token RWKV6 step. r/k/v/w: (B, H, Dh); state: (B, H, Dh, Dh)."""
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    sf = state.astype(jnp.float32)
+    kv = kf[..., :, None] * vf[..., None, :]
+    out = jnp.einsum("bhk,bhkd->bhd", rf, sf + u[None, :, :, None] * kv)
+    new = wf[..., :, None] * sf + kv
+    return out.astype(r.dtype), new
+
+
+# ---------------------------------------------------------------------------
+# Selective SSM scan (mamba-style, for hymba's parallel SSM heads)
+# ---------------------------------------------------------------------------
+
+def ssm_scan(x, dt, A, Bm, Cm, D, state, chunk=256):
+    """h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = C_t h_t + D x_t.
+    x/dt: (B,T,Di); A: (Di,N); Bm/Cm: (B,T,N); D: (Di,); state: (B,Di,N)."""
+    Bsz, T, Di = x.shape
+    N = A.shape[1]
+    C = min(chunk, T)
+    n = T // C
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def chunk_step(h, i):
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i * C, C, axis=1)
+        xc, dtc, Bc, Cc = sl(xf), sl(dtf), sl(Bf), sl(Cf)
+
+        def step(h, t):
+            dA = jnp.exp(dtc[:, t, :, None] * Af[None])        # (B,Di,N)
+            h = dA * h + (dtc[:, t, :, None] * xc[:, t, :, None]
+                          * Bc[:, t, None, :])
+            y = jnp.einsum("bdn,bn->bd", h, Cc[:, t])
+            return h, y
+
+        h, ys = jax.lax.scan(step, h, jnp.arange(C))
+        return h, jnp.moveaxis(ys, 0, 1)                       # (B,C,Di)
+
+    if n > 0:
+        state, ycs = jax.lax.scan(
+            jax.checkpoint(chunk_step), state.astype(jnp.float32),
+            jnp.arange(n))
+        y = jnp.moveaxis(ycs, 0, 1).reshape(Bsz, T, Di)
+    else:
+        y = jnp.zeros_like(xf)
+    y = y + xf * D.astype(jnp.float32)[None, None, :]
+    return y.astype(x.dtype), state
+
+
+def ssm_decode(x, dt, A, Bm, Cm, D, state):
+    """One-token SSM step. x/dt: (B,Di); Bm/Cm: (B,N); state: (B,Di,N)."""
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A[None])
+    h = dA * state + dt[..., None] * x[..., None] * Bm[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cm) + x * D[None]
+    return y.astype(x.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch/combine (the XQueue push/pop analogue)
+# ---------------------------------------------------------------------------
+
+def moe_dispatch(x, expert, pos, n_experts: int, capacity: int):
+    """Scatter tokens into per-expert buffers.  x: (T, D); expert/pos: (T, k)
+    with -1 for dropped slots.  Returns (E, C, D) buffers."""
+    T, D = x.shape
+    k = expert.shape[1]
+    flat_e = expert.reshape(-1)
+    flat_p = pos.reshape(-1)
+    ok = (flat_e >= 0) & (flat_p >= 0)
+    idx = jnp.where(ok, flat_e * capacity + flat_p, n_experts * capacity)
+    src = jnp.repeat(x, k, axis=0)
+    buf = jnp.zeros((n_experts * capacity, D), x.dtype)
+    buf = buf.at[idx].add(src, mode="drop")
+    return buf.reshape(n_experts, capacity, D)
+
+
+def moe_combine(y, expert, pos, weight, n_tokens: int):
+    """Gather expert outputs back to tokens with combine weights.
+    y: (E, C, D); returns (T, D)."""
+    E, C, D = y.shape
+    k = expert.shape[1]
+    flat_e = expert.reshape(-1)
+    flat_p = pos.reshape(-1)
+    ok = (flat_e >= 0) & (flat_p >= 0)
+    idx = jnp.where(ok, flat_e * C + flat_p, 0)
+    gathered = y.reshape(E * C, D)[idx]
+    gathered = gathered * jnp.where(ok, weight.reshape(-1), 0.0)[:, None].astype(y.dtype)
+    return gathered.reshape(n_tokens, k, D).sum(axis=1)

@@ -1,0 +1,231 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init).  Do not move them.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+for the production meshes and extract roofline terms from the compiled
+artifact.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi_9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+
+Per cell it prints compiled.memory_analysis() (proves the step fits 16 GB/
+chip) and compiled.cost_analysis(), then runs the trip-count-aware HLO
+analyzer (launch/hlo_analysis.py — XLA's cost_analysis counts while bodies
+once) and writes a JSON record to experiments/dryrun/.  Cells already
+recorded are skipped unless --force.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+# v5e roofline constants (per chip)
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s per link
+
+HBM_PER_CHIP = 16 * 1024 ** 3
+
+
+def roofline_terms(flops, hbm_bytes, coll_bytes):
+    """All inputs are per-device (the SPMD module is the per-device program)."""
+    return {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": hbm_bytes / HBM_BW,
+        "collective_s": coll_bytes / ICI_BW,
+    }
+
+
+# Per-arch gradient-accumulation defaults for train_4k (global batch 256):
+# chosen so per-microbatch activations fit 16 GB/chip with sqrt(L) remat.
+DEFAULT_MB = {
+    "nemotron_4_340b": 16, "llama4_maverick_400b_a17b": 8, "yi_9b": 8,
+    "mistral_nemo_12b": 8, "pixtral_12b": 8, "moonshot_v1_16b_a3b": 8,
+    "hubert_xlarge": 4, "gemma2_2b": 2, "hymba_1_5b": 4, "rwkv6_1_6b": 4,
+}
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool, microbatches: int = 0,
+               variant: str = ""):
+    """Returns (lowered, compiled, meta) for one cell.  `variant` applies
+    named config overrides for #Perf A/B runs (comma-separated):
+    moe_shard_routing, capacity_1_0, remat_group_N, mb_N."""
+    import dataclasses
+    import jax
+    from repro.configs import base as cb
+    from repro.data.pipeline import batch_specs
+    from repro.launch import steps as steps_mod
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.shapes import SHAPES, supported
+
+    cfg = cb.get(arch)
+    for v in [v for v in variant.split(",") if v]:
+        if v == "moe_shard_routing":
+            cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+                cfg.moe, shard_routing=True))
+        elif v == "capacity_1_0":
+            cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+                cfg.moe, capacity_factor=1.0))
+        elif v.startswith("remat_group_"):
+            cfg = dataclasses.replace(cfg, remat_group=int(v.rsplit("_", 1)[1]))
+        elif v.startswith("mb_"):
+            microbatches = int(v.split("_")[1])
+        elif v.startswith("rwkv_chunk_"):
+            os.environ["REPRO_RWKV_CHUNK"] = v.rsplit("_", 1)[1]
+        elif v.startswith("ssm_chunk_"):
+            os.environ["REPRO_SSM_CHUNK"] = v.rsplit("_", 1)[1]
+        else:
+            raise ValueError(f"unknown variant {v}")
+    cell = SHAPES[shape]
+    ok, reason = supported(cfg, shape)
+    if not ok:
+        return None, None, {"skipped": True, "reason": reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    meta = {"arch": arch, "shape": shape, "variant": variant,
+            "mesh": "x".join(str(s) for s in mesh.devices.shape),
+            "n_devices": mesh.devices.size,
+            "params": cfg.n_params(), "active_params": cfg.active_params()}
+    with jax.set_mesh(mesh):
+        if cell.kind == "train":
+            mb = microbatches or DEFAULT_MB.get(arch, 1)
+            meta["microbatches"] = mb
+            _, jit_for, (p_shape, o_shape, _, _) = steps_mod.make_train_step(
+                cfg, mesh, microbatches=mb)
+            bspec = batch_specs(cfg, cell.global_batch, cell.seq)
+            step = jax.ShapeDtypeStruct((), jax.numpy.int32)
+            lowered = jit_for(bspec).lower(p_shape, o_shape, bspec, step)
+            # 6ND: fwd+bwd training flops over global tokens
+            meta["model_flops"] = 6 * cfg.active_params() * \
+                cell.global_batch * cell.seq
+        elif cell.kind == "prefill":
+            _, jit_for, _ = steps_mod.make_prefill_step(cfg, mesh, cell.seq)
+            p_shape, _ = steps_mod.init_shapes(cfg)
+            bspec = batch_specs(cfg, cell.global_batch, cell.seq)
+            lowered = jit_for(bspec).lower(p_shape, bspec)
+            meta["model_flops"] = 2 * cfg.active_params() * \
+                cell.global_batch * cell.seq
+        else:  # decode
+            _, jitted, (p_shape, s_shape, *_ ) = steps_mod.make_serve_step(
+                cfg, mesh, cell.global_batch, cell.seq)
+            toks = jax.ShapeDtypeStruct((cell.global_batch,),
+                                        jax.numpy.int32)
+            lowered = jitted.lower(p_shape, s_shape, toks)
+            meta["model_flops"] = 2 * cfg.active_params() * cell.global_batch
+    t0 = time.time()
+    compiled = lowered.compile()
+    meta["compile_s"] = round(time.time() - t0, 1)
+    return lowered, compiled, meta
+
+
+def analyze_cell(lowered, compiled, meta):
+    from repro.launch import hlo_analysis
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    cost = hlo_analysis.analyze(compiled.as_text())
+    n = meta["n_devices"]
+    terms = roofline_terms(cost.flops, cost.hbm_bytes, cost.coll_bytes)
+    dominant = max(terms, key=terms.get)
+    bytes_per_dev = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                     + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    rec = dict(
+        meta,
+        hlo_flops_per_dev=cost.flops,
+        hlo_hbm_bytes_per_dev=cost.hbm_bytes,
+        coll_bytes_per_dev=cost.coll_bytes,
+        coll_by_op={k: v for k, v in cost.coll_by_op.items()},
+        unknown_trip_loops=cost.unknown_trip_loops,
+        xla_cost_analysis_flops=float(ca.get("flops", 0.0)),
+        memory_per_device_bytes=int(bytes_per_dev),
+        arg_bytes=int(mem.argument_size_in_bytes),
+        temp_bytes=int(mem.temp_size_in_bytes),
+        out_bytes=int(mem.output_size_in_bytes),
+        fits_hbm=bool(bytes_per_dev <= HBM_PER_CHIP),
+        model_flops_per_dev=meta["model_flops"] / n,
+        useful_flops_ratio=(meta["model_flops"] / n)
+        / max(cost.flops, 1.0),
+        **terms,
+        dominant=dominant,
+    )
+    return rec
+
+
+def run_cell(arch, shape, multi_pod, out_dir, force=False, microbatches=0,
+             verbose=True, variant=""):
+    os.makedirs(out_dir, exist_ok=True)
+    mp = "pod2" if multi_pod else "pod1"
+    suffix = f"__{variant.replace(',', '+')}" if variant else ""
+    fn = os.path.join(out_dir, f"{arch}__{shape}__{mp}{suffix}.json")
+    if os.path.exists(fn) and not force:
+        if verbose:
+            print(f"[skip-cached] {fn}")
+        return json.load(open(fn))
+    try:
+        lowered, compiled, meta = lower_cell(arch, shape, multi_pod,
+                                             microbatches, variant)
+        if compiled is None:
+            rec = meta | {"arch": arch, "shape": shape, "mesh": mp}
+            print(f"[SKIP] {arch} x {shape}: {meta['reason']}")
+        else:
+            rec = analyze_cell(lowered, compiled, meta)
+            if verbose:
+                print(f"[OK] {arch} x {shape} ({rec['mesh']}): "
+                      f"mem/dev={rec['memory_per_device_bytes']/2**30:.2f}GiB "
+                      f"fits={rec['fits_hbm']} "
+                      f"compute={rec['compute_s']*1e3:.2f}ms "
+                      f"memory={rec['memory_s']*1e3:.2f}ms "
+                      f"coll={rec['collective_s']*1e3:.2f}ms "
+                      f"dom={rec['dominant']} "
+                      f"useful={rec['useful_flops_ratio']:.2f} "
+                      f"compile={rec['compile_s']}s")
+                print("  memory_analysis:",
+                      compiled.memory_analysis())
+                ca = compiled.cost_analysis() or {}
+                print("  cost_analysis flops (loop bodies once): "
+                      f"{ca.get('flops', 0):.3e}")
+    except Exception as e:
+        rec = {"arch": arch, "shape": shape, "mesh": mp, "error": str(e),
+               "traceback": traceback.format_exc()}
+        print(f"[FAIL] {arch} x {shape}: {e}")
+    with open(fn, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    from repro.configs.base import ARCH_IDS
+    from repro.launch.shapes import SHAPES
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, args.out, force=args.force,
+                               microbatches=args.microbatches,
+                               variant=args.variant)
+                n_fail += 1 if "error" in rec else 0
+    print(f"done; failures={n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

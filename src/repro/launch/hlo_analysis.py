@@ -1,0 +1,307 @@
+"""Static analyzer for post-optimization HLO text -> roofline terms.
+
+Why: ``compiled.cost_analysis()`` counts a while-loop *body once* (verified
+empirically — a 10-iteration scan of one matmul reports 1 matmul of FLOPs),
+so any scan-over-layers model is undercounted by ~L×.  This analyzer parses
+``compiled.as_text()``, builds the computation call graph, extracts while
+trip counts from loop-condition constants, and multiplies through.
+
+Reported per-device (the SPMD-partitioned module *is* the per-device
+program):
+
+  flops       2 * |out| * contracted-dim product, for every `dot` (MXU work;
+              elementwise VPU flops are excluded — typically <5% for these
+              models and noted in EXPERIMENTS.md)
+  hbm_bytes   Σ (output + operand bytes) over materializing instructions
+              (fusion boundaries, dots, copies, collectives) — XLA's own
+              traffic model at fusion granularity
+  coll_bytes  Σ operand bytes of all-gather / all-reduce / reduce-scatter /
+              all-to-all / collective-permute (per-chip payload convention;
+              ring-algorithm factors are applied by the roofline report)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "c64": 8, "s64": 8, "u64": 8, "f64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s+(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_MATERIALIZE = {"fusion", "dot", "convolution", "copy", "transpose",
+                "dynamic-slice", "dynamic-update-slice", "reduce", "sort",
+                "scatter", "gather", "broadcast", "iota", "concatenate",
+                "pad", "reverse", "select-and-scatter", "convert", "slice",
+                "custom-call"} | set(COLLECTIVES) \
+    | {c + "-start" for c in COLLECTIVES}
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape(type_str: str) -> Optional[tuple]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = tuple(int(d) for d in m.group(2).split(",") if d)
+    return dims
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    type_str: str
+    operands: List[str]
+    attrs: str
+    line: str
+
+
+@dataclasses.dataclass
+class CollectiveRecord:
+    opcode: str
+    bytes: int
+    count: int  # total executions (trip-multiplied)
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_op: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    unknown_trip_loops: int = 0
+
+    def merged(self, other: "HloCost", mult: float) -> "HloCost":
+        out = HloCost(self.flops + other.flops * mult,
+                      self.hbm_bytes + other.hbm_bytes * mult,
+                      self.coll_bytes + other.coll_bytes * mult,
+                      defaultdict(float, self.coll_by_op),
+                      self.unknown_trip_loops + other.unknown_trip_loops)
+        for k, v in other.coll_by_op.items():
+            out.coll_by_op[k] += v * mult
+        return out
+
+
+def _split_args(s: str) -> List[str]:
+    """Top-level comma split of the operand region."""
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+def _called(ins: Instr, key: str):
+    m = re.search(rf"{key}=%?([\w\.\-]+)", ins.attrs)
+    return m.group(1) if m else None
+
+
+def _root_of(ins: Instr, comps) -> Optional[Instr]:
+    """Root instruction of a fusion's called computation."""
+    cname = _called(ins, "calls")
+    if cname not in comps or not comps[cname]:
+        return None
+    return comps[cname][-1]   # ROOT is last in HLO text
+
+
+def parse_computations(hlo_text: str):
+    comps: Dict[str, List[Instr]] = {}
+    entry = None
+    cur: Optional[str] = None
+    for line in hlo_text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        # result type = leading type expr; opcode = following word
+        om = re.match(r"(\(.*?\)|[\w\[\],\{\}]+(?:\{[\d,]*\})?)\s+"
+                      r"([\w\-]+)\(", rest)
+        if not om:
+            continue
+        type_str, opcode = om.group(1), om.group(2)
+        # operand region: balanced parens after opcode(
+        start = om.end()
+        depth, i = 1, start
+        while i < len(rest) and depth:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        opnd_region = rest[start:i - 1]
+        attrs = rest[i:]
+        operands = re.findall(r"%([\w\.\-]+)", opnd_region)
+        comps[cur].append(Instr(name, opcode, type_str, operands, attrs,
+                                line))
+    return comps, entry
+
+
+def _trip_count(cond: List[Instr], symtab: Dict[str, Instr]) -> Optional[int]:
+    """jax scans lower to `compare(i, N), direction=LT` in the condition."""
+    consts = {}
+    for ins in cond:
+        m = re.match(r".*constant\((\-?\d+)\)", ins.line)
+        if ins.opcode == "constant" and m:
+            consts[ins.name] = int(m.group(1))
+    for ins in cond:
+        if ins.opcode == "compare" and "direction=LT" in ins.attrs:
+            for op in ins.operands:
+                if op in consts:
+                    return consts[op]
+    return None
+
+
+def analyze(hlo_text: str) -> HloCost:
+    comps, entry = parse_computations(hlo_text)
+    memo: Dict[str, HloCost] = {}
+
+    def comp_cost(cname: str, stack=()) -> HloCost:
+        if cname in memo:
+            return memo[cname]
+        if cname not in comps or cname in stack:
+            return HloCost()
+        instrs = comps[cname]
+        symtab = {i.name: i for i in instrs}
+        cost = HloCost()
+        for ins in instrs:
+            out_bytes = _shape_bytes(ins.type_str)
+            opnd_bytes = sum(
+                _shape_bytes(symtab[o].type_str) for o in ins.operands
+                if o in symtab)
+            base = ins.opcode.replace("-start", "")
+            if ins.opcode == "dot":
+                cost.flops += _dot_flops(ins, symtab)
+            if base in COLLECTIVES and not ins.opcode.endswith("-done"):
+                cost.coll_bytes += opnd_bytes
+                cost.coll_by_op[base] += opnd_bytes
+            if ins.opcode in ("dynamic-slice", "slice", "gather"):
+                # reads only the slice, not the whole operand (a whole-operand
+                # count made scan traffic scale quadratically with chunk size)
+                cost.hbm_bytes += 2 * out_bytes
+            elif ins.opcode in ("dynamic-update-slice", "scatter"):
+                # in-place: read-modify-write of the update region only
+                upd_idx = 1 if ins.opcode == "dynamic-update-slice" else 2
+                upd = (ins.operands[upd_idx]
+                       if len(ins.operands) > upd_idx else None)
+                upd_bytes = (_shape_bytes(symtab[upd].type_str)
+                             if upd in symtab else out_bytes)
+                cost.hbm_bytes += 2 * upd_bytes
+            elif ins.opcode == "fusion":
+                # aliased in-place fusions (root = DUS) write only the update
+                croot = _root_of(ins, comps)
+                if croot is not None and croot.opcode == \
+                        "dynamic-update-slice":
+                    csym = {i2.name: i2
+                            for i2 in comps[_called(ins, "calls")]}
+                    upd = (croot.operands[1]
+                           if len(croot.operands) > 1 else None)
+                    upd_bytes = (_shape_bytes(csym[upd].type_str)
+                                 if upd in csym else out_bytes)
+                    aliased = next(
+                        (o for o in ins.operands if o in symtab and
+                         symtab[o].type_str == ins.type_str), None)
+                    extra = opnd_bytes - (_shape_bytes(
+                        symtab[aliased].type_str) if aliased else 0)
+                    cost.hbm_bytes += 2 * upd_bytes + max(extra, 0)
+                else:
+                    cost.hbm_bytes += out_bytes + opnd_bytes
+            elif ins.opcode in _MATERIALIZE:
+                cost.hbm_bytes += out_bytes + opnd_bytes
+            # descend into called computations
+            if ins.opcode == "while":
+                body = re.search(r"body=%?([\w\.\-]+)", ins.attrs)
+                cond = re.search(r"condition=%?([\w\.\-]+)", ins.attrs)
+                # XLA annotates statically-known trip counts:
+                #   backend_config={"known_trip_count":{"n":"48"},...}
+                trip = None
+                tm = re.search(r'known_trip_count[^0-9]*(\d+)', ins.attrs)
+                if tm:
+                    trip = int(tm.group(1))
+                if trip is None and cond and cond.group(1) in comps:
+                    csym = {i.name: i for i in comps[cond.group(1)]}
+                    trip = _trip_count(comps[cond.group(1)], csym)
+                if trip is None:
+                    trip = 1
+                    cost.unknown_trip_loops += 1
+                if body:
+                    cost = cost.merged(
+                        comp_cost(body.group(1), stack + (cname,)), trip)
+            elif ins.opcode in ("fusion", "call", "conditional", "map"):
+                for key in ("calls", "to_apply", "branch_computations"):
+                    mm = re.search(rf"{key}=%?([\w\.\-\{{}}, ]+)", ins.attrs)
+                    if mm:
+                        for sub in re.findall(r"[\w\.\-]+", mm.group(1)):
+                            sub_cost = comp_cost(sub, stack + (cname,))
+                            # fusions: flops/collectives propagate, HBM
+                            # traffic inside a fusion stays on-chip
+                            cost = cost.merged(
+                                HloCost(sub_cost.flops, 0.0,
+                                        sub_cost.coll_bytes,
+                                        sub_cost.coll_by_op,
+                                        sub_cost.unknown_trip_loops), 1)
+        memo[cname] = cost
+        return cost
+
+    def _dot_flops(ins: Instr, symtab) -> float:
+        out_shape = _first_shape(ins.type_str) or ()
+        out_numel = 1
+        for d in out_shape:
+            out_numel *= d
+        lhs = ins.operands[0] if ins.operands else None
+        lhs_shape = _first_shape(symtab[lhs].type_str) if lhs in symtab else None
+        cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+        contracted = 1
+        if lhs_shape and cdims and cdims.group(1):
+            for d in cdims.group(1).split(","):
+                contracted *= lhs_shape[int(d)]
+        return 2.0 * out_numel * contracted
+
+    if entry is None:
+        return HloCost()
+    return comp_cost(entry)

@@ -1,0 +1,41 @@
+"""Assigned input-shape cells and per-cell applicability (DESIGN.md §4)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def supported(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    cell = SHAPES[shape]
+    if cfg.encoder_only and cell.kind == "decode":
+        return False, "encoder-only arch has no autoregressive decode step"
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False, ("pure full-attention arch: 500k decode needs "
+                       "sub-quadratic attention (skip per DESIGN.md §4)")
+    return True, ""
+
+
+def all_cells():
+    from repro.configs.base import ARCH_IDS
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            yield arch, shape

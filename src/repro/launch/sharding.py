@@ -1,0 +1,231 @@
+"""Sharding policy: parameter/optimizer/batch/decode-state PartitionSpecs.
+
+Rules (DESIGN.md §5):
+  TP    attention heads, FFN columns, expert dim, vocab -> "model"
+        (skipped per-tensor when the dim is not divisible)
+  DP    batch -> ("pod", "data") / ("data",)
+  EP    MoE expert dim -> "model" (expert groups = core.balance NUMA zones)
+  FSDP  cfg.fsdp archs additionally shard the non-TP matrix dim over "data"
+        (params, grads, and optimizer state; XLA inserts the per-layer
+        all-gathers)
+  ZeRO-1 optimizer m/v shard their largest replicated dim over "data" even
+        when params don't (nothing re-gathers optimizer state, so this is
+        free memory)
+  SP    decode KV caches shard the sequence dim over "model" (+ "data" when
+        the batch can't shard, e.g. long_500k's batch=1)
+
+Stacked layer params (under "streams") have a leading scan dim -> spec gets a
+leading None.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import dp_axes, tp_size
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def _is_leaf(node):
+    return hasattr(node, "shape") or not isinstance(node, (dict, tuple, list))
+
+
+def _flatten_paths(tree):
+    out = []
+
+    def walk(path, node):
+        if _is_leaf(node):
+            out.append((path, node))
+        elif isinstance(node, dict):
+            for k in sorted(node):
+                walk(path + (k,), node[k])
+        else:  # tuple / list / NamedTuple
+            for i, v in enumerate(node):
+                walk(path + (str(i),), v)
+
+    walk((), tree)
+    return out
+
+
+def _rebuild(tree, mapping):
+    def walk(path, node):
+        if _is_leaf(node):
+            return mapping[path]
+        if isinstance(node, dict):
+            return {k: walk(path + (k,), node[k]) for k in node}
+        children = [walk(path + (str(i),), v) for i, v in enumerate(node)]
+        if hasattr(node, "_fields"):          # NamedTuple
+            return type(node)(*children)
+        return type(node)(children) if isinstance(node, list) \
+            else tuple(children)
+
+    return walk((), tree)
+
+
+def param_pspec(path: tuple, shape: tuple, cfg: ModelConfig, mesh) -> P:
+    tp = tp_size(mesh)
+    fsdp = "data" if cfg.fsdp else None
+    stacked = "streams" in path
+    dims = shape[1:] if stacked else shape
+    name = path[-1]
+
+    def fs(d):  # fsdp axis if divisible
+        return fsdp if (fsdp and _div(d, mesh.shape["data"])) else None
+
+    def tpx(d):  # tensor-parallel axis if divisible
+        return "model" if _div(d, tp) else None
+
+    spec: tuple
+    if name == "embed":
+        spec = (tpx(dims[0]), fs(dims[1]))
+    elif name == "lm_head":
+        spec = (fs(dims[0]), tpx(dims[1]))
+    elif name in ("wq", "wk", "wv", "wg", "wu", "w1", "cm_k", "in_proj",
+                  "cm_r") and len(dims) == 2:
+        spec = (fs(dims[0]), tpx(dims[1]))
+    elif name in ("wo", "wd", "w2", "cm_v", "out_proj") and len(dims) == 2:
+        spec = (tpx(dims[0]), fs(dims[1]))
+    elif name in ("wg", "wu") and len(dims) == 3:      # MoE experts (E,D,F)
+        spec = (tpx(dims[0]), fs(dims[1]), None)
+    elif name == "wd" and len(dims) == 3:              # MoE experts (E,F,D)
+        spec = (tpx(dims[0]), None, fs(dims[1]))
+    elif name == "x_proj":
+        spec = (tpx(dims[0]), None)
+    elif name == "conv":
+        spec = (None, tpx(dims[1]))
+    elif name == "dt_w":
+        spec = (None, tpx(dims[1]))
+    elif name == "A_log":
+        spec = (tpx(dims[0]), None)
+    else:
+        spec = tuple(None for _ in dims)
+    if stacked:
+        spec = (None,) + spec
+    return P(*spec)
+
+
+def opt_pspec(pspec: P, path: tuple, shape: tuple, cfg: ModelConfig,
+              mesh) -> P:
+    """ZeRO-1: shard the largest still-replicated dim of m/v over 'data'."""
+    spec = list(tuple(pspec) + (None,) * (len(shape) - len(tuple(pspec))))
+    if "data" in spec or not shape:
+        return P(*spec)
+    dsz = mesh.shape["data"]
+    # biggest replicated-dim candidate
+    cand = [(shape[i], i) for i, s in enumerate(spec)
+            if s is None and _div(shape[i], dsz)]
+    if cand:
+        _, i = max(cand)
+        spec[i] = "data"
+    return P(*spec)
+
+
+def param_shardings(params_shape: Any, cfg: ModelConfig, mesh):
+    """params_shape: pytree of ShapeDtypeStruct/arrays -> NamedShardings."""
+    flat = _flatten_paths(params_shape)
+    mapping = {path: NamedSharding(mesh, param_pspec(path, tuple(v.shape),
+                                                     cfg, mesh))
+               for path, v in flat}
+    return _rebuild(params_shape, mapping)
+
+
+def opt_shardings(opt_shape: Any, params_shape: Any, cfg: ModelConfig, mesh):
+    """Optimizer state (AdamWState(step, m, v)) shardings with ZeRO-1."""
+    def for_tree(tree):
+        flat = _flatten_paths(tree)
+        mapping = {}
+        for path, v in flat:
+            ps = param_pspec(path, tuple(v.shape), cfg, mesh)
+            mapping[path] = NamedSharding(
+                mesh, opt_pspec(ps, path, tuple(v.shape), cfg, mesh))
+        return _rebuild(tree, mapping)
+
+    return type(opt_shape)(
+        step=NamedSharding(mesh, P()),
+        m=for_tree(opt_shape.m),
+        v=for_tree(opt_shape.v),
+    )
+
+
+def batch_shardings(batch_shape: dict, mesh):
+    dp = dp_axes(mesh)
+    out = {}
+    for k, v in batch_shape.items():
+        spec = [dp] + [None] * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+def decode_state_shardings(state_shape, cfg: ModelConfig, mesh):
+    """Caches: batch over dp when divisible; KV-cache seq dim over 'model'
+    (+ 'data' folded in when batch is unshardable)."""
+    dp = dp_axes(mesh)
+    dpn = 1
+    for a in dp:
+        dpn *= mesh.shape[a]
+    tp = tp_size(mesh)
+
+    def leaf_spec(path, v):
+        shape = tuple(v.shape)
+        name = path[-1]
+        if name == "length":
+            return P()
+        # stacked (n_scan, B, ...) leaves
+        b = shape[1] if len(shape) > 1 else 0
+        bax = dp if _div(b, dpn) else None
+        if name in ("k", "v") and len(shape) == 5:
+            # (n, B, KV, C, Dh): seq dim C -> "model"; when the batch can't
+            # shard (long_500k B=1), fold the dp axes into the seq dim too
+            C = shape[3]
+            if bax:
+                seq_ax = "model" if _div(C, tp) else None
+            elif _div(C, dpn * tp):
+                seq_ax = dp + ("model",)
+            elif _div(C, tp):
+                seq_ax = "model"
+            else:
+                seq_ax = None
+            return P(None, bax, None, seq_ax, None)
+        if name in ("k_scale", "v_scale") and len(shape) == 4:
+            # (n, B, KV, C): same layout as the cache minus the head dim
+            C = shape[3]
+            if bax:
+                seq_ax = "model" if _div(C, tp) else None
+            elif _div(C, dpn * tp):
+                seq_ax = dp + ("model",)
+            elif _div(C, tp):
+                seq_ax = "model"
+            else:
+                seq_ax = None
+            return P(None, bax, None, seq_ax)
+        if name == "rwkv_state" and len(shape) == 5:
+            # (n, B, H, dh, dh)
+            hax = "model" if _div(shape[2], tp) else None
+            return P(None, bax, hax, None, None)
+        if name == "ssm_state" and len(shape) == 4:
+            dax = "model" if _div(shape[2], tp) else None
+            return P(None, bax, dax, None)
+        if name == "ssm_conv" and len(shape) == 4:
+            dax = "model" if _div(shape[3], tp) else None
+            return P(None, bax, None, dax)
+        if name in ("tm_last", "cm_last") and len(shape) == 3:
+            return P(None, bax, None)
+        return P(*(None,) * len(shape))
+
+    flat = _flatten_paths(state_shape)
+    mapping = {path: NamedSharding(mesh, leaf_spec(path, v))
+               for path, v in flat}
+    return _rebuild(state_shape, mapping)
+
+
+def count_params(params_shape) -> int:
+    return int(sum(np.prod(v.shape) for _, v in
+                   _flatten_paths(params_shape)))

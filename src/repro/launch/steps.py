@@ -1,0 +1,194 @@
+"""Jitted train / prefill / decode steps with full sharding annotations.
+
+`make_train_step` builds the canonical step: microbatched gradient
+accumulation (lax.scan — overlaps each microbatch's gradient collectives with
+the next microbatch's compute), AdamW with ZeRO-1/FSDP-sharded state, cosine
+schedule, optional int8 gradient compression, donated buffers.
+
+`make_serve_step` builds the one-token decode step against the sharded KV
+cache (SP over the cache sequence dim; see launch/sharding.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch import sharding as shd
+from repro.launch.mesh import dp_axes, dp_size, tp_size
+from repro.models import layers as model_layers
+from repro.models import transformer as tfm
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+
+
+def init_shapes(cfg: ModelConfig, key=None):
+    """abstract (ShapeDtypeStruct) params + optimizer state, no allocation."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    p_shape = jax.eval_shape(lambda k: tfm.init_params(cfg, k), key)
+    o_shape = jax.eval_shape(
+        lambda p: adamw_init(p, jnp.dtype(cfg.opt_state_dtype)), p_shape)
+    return p_shape, o_shape
+
+
+
+def _set_hints(mesh):
+    model_layers.set_axis_hints(dp_axes=dp_axes(mesh),
+                                dp_size=dp_size(mesh),
+                                tp_size=tp_size(mesh), mesh=mesh)
+
+def make_train_step(cfg: ModelConfig, mesh, *, microbatches: int = 1,
+                    peak_lr: float = 3e-4, total_steps: int = 100_000,
+                    donate: bool = True):
+    _set_hints(mesh)
+    ep_groups = tp_size(mesh)
+    dp_groups = dp_size(mesh)
+    p_shape, o_shape = init_shapes(cfg)
+    p_shard = shd.param_shardings(p_shape, cfg, mesh)
+    o_shard = shd.opt_shardings(o_shape, p_shape, cfg, mesh)
+    # ZeRO gradient sharding: constraining grads (and the f32 microbatch
+    # accumulator) to the optimizer-state layout turns the replica gradient
+    # all-reduce into a reduce-scatter (half the inter-chip bytes) and shards
+    # the accumulator's memory (EXPERIMENTS.md #Perf, moonshot iteration 3).
+    g_shard = o_shard.m
+
+    def _zero_shard(tree):
+        return jax.tree.map(
+            lambda g, sh: jax.lax.with_sharding_constraint(g, sh),
+            tree, g_shard)
+
+    def train_step(params, opt_state, batch, step):
+        rng = jax.random.fold_in(jax.random.PRNGKey(17), step)
+
+        def loss_of(p, mb):
+            return tfm.loss_fn(p, cfg, mb, rng, ep_groups=ep_groups,
+                               dp_groups=dp_groups)
+
+        if microbatches > 1:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_of, has_aux=True)(params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, _zero_shard(g))
+                return (_zero_shard(gsum), lsum + loss), metrics
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((microbatches,
+                                     x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+            zeros = _zero_shard(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (gsum, lsum), metrics = jax.lax.scan(micro, (zeros, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+            grads = _zero_shard(grads)
+
+        lr = cosine_schedule(step, peak_lr=peak_lr, total=total_steps,
+                             warmup=max(1, min(2000, total_steps // 10)))
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, opt_state, params, lr=lr)
+        metrics = dict(metrics, loss=loss, lr=lr, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    rep = NamedSharding(mesh, P())
+
+    def batch_shard(batch_shape):
+        return shd.batch_shardings(batch_shape, mesh)
+
+    def jit_for(batch_shape):
+        b_shard = batch_shard(batch_shape)
+        metrics_shard = None  # let the compiler choose (all replicated)
+        return jax.jit(
+            train_step,
+            in_shardings=(p_shard, o_shard, b_shard, rep),
+            out_shardings=(p_shard, o_shard, metrics_shard),
+            donate_argnums=(0, 1) if donate else (),
+        )
+
+    return train_step, jit_for, (p_shape, o_shape, p_shard, o_shard)
+
+
+def make_prefill_step(cfg: ModelConfig, mesh, max_len: int):
+    _set_hints(mesh)
+    ep_groups = tp_size(mesh)
+    dp_groups = dp_size(mesh)
+
+    if cfg.encoder_only:
+        # encoder archs: "prefill" = one full bidirectional forward
+        def prefill_step(params, batch):
+            logits, _aux = tfm.forward(params, cfg, batch,
+                                       ep_groups=ep_groups,
+                                       dp_groups=dp_groups)
+            return logits
+
+        p_shape, _ = init_shapes(cfg)
+        p_shard = shd.param_shardings(p_shape, cfg, mesh)
+
+        def jit_for(batch_shape):
+            b_shard = shd.batch_shardings(batch_shape, mesh)
+            return jax.jit(prefill_step, in_shardings=(p_shard, b_shard))
+
+        return prefill_step, jit_for, p_shard
+
+    def prefill_step(params, batch):
+        return tfm.prefill(params, cfg, batch, max_len, ep_groups=ep_groups,
+                           dp_groups=dp_groups)
+
+    p_shape, _ = init_shapes(cfg)
+    p_shard = shd.param_shardings(p_shape, cfg, mesh)
+
+    def jit_for(batch_shape):
+        b_shard = shd.batch_shardings(batch_shape, mesh)
+        # pin the output decode-state sharding (batch over dp, cache seq over
+        # "model") — otherwise the compiler replicates the KV caches
+        out_state = jax.eval_shape(prefill_step, p_shape, batch_shape)[1]
+        s_shard = shd.decode_state_shardings(out_state, cfg, mesh)
+        dp = dp_axes(mesh)
+        B = out_state.length.shape[0]
+        dpn = dp_size(mesh)
+        logits_shard = NamedSharding(
+            mesh, P(dp if B % dpn == 0 else None, None))
+        return jax.jit(prefill_step, in_shardings=(p_shard, b_shard),
+                       out_shardings=(logits_shard, s_shard))
+
+    return prefill_step, jit_for, p_shard
+
+
+def make_serve_step(cfg: ModelConfig, mesh, batch: int, max_len: int):
+    """One-token decode step.  Returns (fn, jitted, specs)."""
+    _set_hints(mesh)
+    ep_groups = tp_size(mesh)
+    dp_groups = dp_size(mesh)
+
+    def serve_step(params, state, tokens):
+        logits, new_state = tfm.decode_step(params, cfg, state, tokens,
+                                            ep_groups=ep_groups,
+                                            dp_groups=dp_groups)
+        # greedy next token (serving drivers may replace with sampling)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_state
+
+    p_shape, _ = init_shapes(cfg)
+    p_shard = shd.param_shardings(p_shape, cfg, mesh)
+    s_shape = jax.eval_shape(
+        lambda: tfm.init_decode_state(cfg, batch, max_len))
+    s_shard = shd.decode_state_shardings(s_shape, cfg, mesh)
+    dp = dp_axes(mesh)
+    dpn = 1
+    for a in dp:
+        dpn *= mesh.shape[a]
+    tok_shard = NamedSharding(mesh, P(dp if batch % dpn == 0 else None))
+    jitted = jax.jit(serve_step,
+                     in_shardings=(p_shard, s_shard, tok_shard),
+                     out_shardings=(tok_shard, s_shard),
+                     donate_argnums=(1,))
+    return serve_step, jitted, (p_shape, s_shape, p_shard, s_shard,
+                                tok_shard)

@@ -1,0 +1,276 @@
+"""Shared neural layers: norms, RoPE, MLP variants, GQA attention with
+full/local/bidirectional patterns, softcaps, and decode caches (ring buffers
+for windowed layers).  Parameters are plain nested dicts of jnp arrays."""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+
+# ---------------------------------------------------------------------------
+# Activation-sharding hints.  The launch layer (steps.py) declares the mesh
+# axes once; model code then pins activation layouts with
+# with_sharding_constraint so XLA's propagation can't invent pathological
+# layouts (e.g. sharding the KV sequence dim inside the attention inner loop,
+# which costs an all-reduce per block — observed, see EXPERIMENTS.md §Perf).
+# Hints are inert (identity) when unset, so plain CPU tests need no mesh.
+# ---------------------------------------------------------------------------
+
+_AXIS_HINTS = {"on": False, "dp": None, "dp_size": 0, "tp_size": 0,
+               "mesh": None}
+
+
+def set_axis_hints(*, dp_axes=None, dp_size=0, tp_size=0, mesh=None):
+    _AXIS_HINTS.update(on=bool(dp_axes), dp=dp_axes, dp_size=dp_size,
+                       tp_size=tp_size, mesh=mesh)
+
+
+def clear_axis_hints():
+    _AXIS_HINTS.update(on=False, dp=None, dp_size=0, tp_size=0, mesh=None)
+
+
+def hint(x, *axes):
+    """axes: one of "dp" | "tp" | None per dim (trailing dims default None).
+    Divisibility-checked; no-op unless the launch layer set hints."""
+    h = _AXIS_HINTS
+    if not h["on"]:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = []
+    for i, dim in enumerate(x.shape):
+        a = axes[i] if i < len(axes) else None
+        if a == "dp" and h["dp_size"] and dim % h["dp_size"] == 0:
+            spec.append(h["dp"])
+        elif a == "tp" and h["tp_size"] and dim % h["tp_size"] == 0:
+            spec.append("model")
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm(scale, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    n = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (n * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x, pos, theta: float):
+    """x: (..., S, H, Dh) or (..., H, Dh) with matching pos (..., S) or (...,).
+    Rotates pairs (even, odd) of the head dim."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32)[..., None] * freqs       # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                       # broadcast over H
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int):
+    D = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_act == "sq_relu":
+        return {"w1": _dense_init(ks[0], (D, d_ff), cfg.pdtype),
+                "w2": _dense_init(ks[1], (d_ff, D), cfg.pdtype)}
+    return {"wg": _dense_init(ks[0], (D, d_ff), cfg.pdtype),
+            "wu": _dense_init(ks[1], (D, d_ff), cfg.pdtype),
+            "wd": _dense_init(ks[2], (d_ff, D), cfg.pdtype)}
+
+
+def mlp_apply(p, x, cfg: ModelConfig):
+    tp_ff = ("dp",) + (None,) * (x.ndim - 2) + ("tp",)
+    if cfg.mlp_act == "sq_relu":
+        h = hint(jnp.einsum("...d,df->...f", x, p["w1"]), *tp_ff)
+        h = jnp.square(jax.nn.relu(h))
+        return jnp.einsum("...f,fd->...d", h, p["w2"])
+    act = jax.nn.silu if cfg.mlp_act == "silu_glu" else jax.nn.gelu
+    g = act(hint(jnp.einsum("...d,df->...f", x, p["wg"]), *tp_ff))
+    u = hint(jnp.einsum("...d,df->...f", x, p["wu"]), *tp_ff)
+    return jnp.einsum("...f,fd->...d", g * u, p["wd"])
+
+
+# ---------------------------------------------------------------------------
+# Attention (+ decode caches)
+# ---------------------------------------------------------------------------
+
+class AttnCache(NamedTuple):
+    k: jax.Array        # (B, KV, C, Dh) — C = window (ring) or max_len
+    v: jax.Array
+    k_scale: jax.Array  # (B, KV, C) f32 — per-vector int8 scales (zeros
+    v_scale: jax.Array  # when the cache dtype is bf16; ~1.5% overhead)
+
+
+def _cache_dtype(cfg: ModelConfig):
+    return jnp.int8 if cfg.kv_cache_dtype == "int8" else cfg.cdtype
+
+
+def _quant_kv(x, quantize: bool):
+    """x: (..., Dh) -> (stored, scale(...,)) with per-vector symmetric
+    int8 quantization (or passthrough + zero scales)."""
+    if not quantize:
+        return x, jnp.zeros(x.shape[:-1], jnp.float32)
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-10)
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _dequant_kv(stored, scale, dtype):
+    if stored.dtype != jnp.int8:
+        return stored
+    return (stored.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def attn_init(key, cfg: ModelConfig):
+    D, dh = cfg.d_model, cfg.head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {"wq": _dense_init(ks[0], (D, H * dh), cfg.pdtype),
+         "wk": _dense_init(ks[1], (D, KV * dh), cfg.pdtype),
+         "wv": _dense_init(ks[2], (D, KV * dh), cfg.pdtype),
+         "wo": _dense_init(ks[3], (H * dh, D), cfg.pdtype,
+                           scale=(H * dh) ** -0.5)}
+    if cfg.qk_norm:
+        p["qn"] = jnp.zeros((dh,), cfg.pdtype)
+        p["kn"] = jnp.zeros((dh,), cfg.pdtype)
+    return p
+
+
+def _qkv(p, x, cfg: ModelConfig):
+    B, S, D = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, H, dh)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(B, S, KV, dh)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(B, S, KV, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(p["qn"], q)
+        k = rmsnorm(p["kn"], k)
+    return q, k, v
+
+
+def attn_apply(p, x, cfg: ModelConfig, kind: str, pos0: int = 0):
+    """Training / prefill attention.  kind: full | local | bidir.
+    Returns (out, (k, v)) — k/v in (B, KV, S, Dh) for cache building."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    pos = pos0 + jnp.arange(S)
+    q = rope(q, pos[None, :], cfg.rope_theta)
+    k = rope(k, pos[None, :], cfg.rope_theta)
+    # (B, H, S, Dh) with heads on "model" (replicated if indivisible) and the
+    # sequence dim explicitly UNsharded — otherwise propagation shards the KV
+    # seq dim and pays an all-reduce per flash block.
+    qt = hint(jnp.moveaxis(q, 2, 1), "dp", "tp", None, None)
+    kt = hint(jnp.moveaxis(k, 2, 1), "dp", "tp", None, None)
+    vt = hint(jnp.moveaxis(v, 2, 1), "dp", "tp", None, None)
+    # GQA + TP: when q heads shard but KV heads don't, expand KV to H heads
+    # (numerically identical) so the whole attention shards head-wise instead
+    # of replicating — per-shard KV is then H/tp < KV heads, a net win.
+    tp = _AXIS_HINTS["tp_size"] if _AXIS_HINTS["on"] else 0
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    ke, ve = kt, vt
+    if tp and H % tp == 0 and KV % tp != 0 and H != KV:
+        rep = H // KV
+        ke = hint(jnp.repeat(kt, rep, axis=1), "dp", "tp", None, None)
+        ve = hint(jnp.repeat(vt, rep, axis=1), "dp", "tp", None, None)
+    causal = kind != "bidir"
+    window = cfg.window if kind == "local" else 0
+    out = ops.flash_attention(qt, ke, ve, causal=causal, window=window,
+                              softcap=cfg.attn_softcap)
+    out = hint(jnp.moveaxis(out, 1, 2).reshape(B, S, -1), "dp", None, "tp")
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), (kt, vt)
+
+
+def attn_cache_init(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                    dtype) -> AttnCache:
+    C = min(cfg.window, max_len) if kind == "local" else max_len
+    KV, dh = cfg.n_kv_heads, cfg.head_dim
+    sdtype = _cache_dtype(cfg)
+    return AttnCache(k=jnp.zeros((batch, KV, C, dh), sdtype),
+                     v=jnp.zeros((batch, KV, C, dh), sdtype),
+                     k_scale=jnp.zeros((batch, KV, C), jnp.float32),
+                     v_scale=jnp.zeros((batch, KV, C), jnp.float32))
+
+
+def attn_cache_from_prefill(cfg: ModelConfig, kind: str, kt, vt, max_len: int
+                            ) -> AttnCache:
+    """Build a decode cache from prefill k/v (B, KV, S, Dh).  Windowed layers
+    keep a ring of the last `window` positions at slots pos % window."""
+    B, KV, S, dh = kt.shape
+    C = min(cfg.window, max_len) if kind == "local" else max_len
+    quant = cfg.kv_cache_dtype == "int8"
+    sdtype = _cache_dtype(cfg)
+    k0 = jnp.zeros((B, KV, C, dh), sdtype)
+    v0 = jnp.zeros((B, KV, C, dh), sdtype)
+    ks0 = jnp.zeros((B, KV, C), jnp.float32)
+    vs0 = jnp.zeros((B, KV, C), jnp.float32)
+    if kind == "local" and S > C:
+        take = C
+        src_pos = S - C + jnp.arange(C)
+    else:
+        take = min(S, C)
+        src_pos = jnp.arange(take)
+    slots = src_pos % C
+    kq, ks = _quant_kv(jax.lax.dynamic_slice_in_dim(kt, S - take, take,
+                                                    axis=2), quant)
+    vq, vs = _quant_kv(jax.lax.dynamic_slice_in_dim(vt, S - take, take,
+                                                    axis=2), quant)
+    k0 = k0.at[:, :, slots].set(kq.astype(sdtype))
+    v0 = v0.at[:, :, slots].set(vq.astype(sdtype))
+    ks0 = ks0.at[:, :, slots].set(ks)
+    vs0 = vs0.at[:, :, slots].set(vs)
+    return AttnCache(k=k0, v=v0, k_scale=ks0, v_scale=vs0)
+
+
+def attn_decode(p, x, cfg: ModelConfig, kind: str, cache: AttnCache,
+                cache_len):
+    """One-token decode.  x: (B, D); cache_len: (B,) current lengths.
+    Returns (out, new_cache)."""
+    B, D = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bd,dh->bh", x, p["wq"]).reshape(B, H, dh)
+    k = jnp.einsum("bd,dh->bh", x, p["wk"]).reshape(B, KV, dh)
+    v = jnp.einsum("bd,dh->bh", x, p["wv"]).reshape(B, KV, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(p["qn"], q)
+        k = rmsnorm(p["kn"], k)
+    q = rope(q, cache_len, cfg.rope_theta)
+    k = rope(k, cache_len, cfg.rope_theta)
+    C = cache.k.shape[2]
+    slot = cache_len % C
+    bidx = jnp.arange(B)
+    quant = cfg.kv_cache_dtype == "int8"
+    kq, ks = _quant_kv(k, quant)
+    vq, vs = _quant_kv(v, quant)
+    kc = cache.k.at[bidx, :, slot].set(kq.astype(cache.k.dtype))
+    vc = cache.v.at[bidx, :, slot].set(vq.astype(cache.v.dtype))
+    ksc = cache.k_scale.at[bidx, :, slot].set(ks)
+    vsc = cache.v_scale.at[bidx, :, slot].set(vs)
+    # Ring semantics: slots hold the last min(len+1, C) positions (in
+    # arbitrary ring order — softmax is permutation-invariant and RoPE was
+    # applied at true positions before writing), so the only mask needed is
+    # "slot is filled".
+    eff_len = jnp.minimum(cache_len + 1, C)
+    out = ops.decode_attention(q, _dequant_kv(kc, ksc, cfg.cdtype),
+                               _dequant_kv(vc, vsc, cfg.cdtype), eff_len,
+                               window=0, softcap=cfg.attn_softcap)
+    out = out.reshape(B, H * dh)
+    return jnp.einsum("bh,hd->bd", out, p["wo"]), AttnCache(kc, vc, ksc,
+                                                            vsc)

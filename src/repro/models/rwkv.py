@@ -1,0 +1,117 @@
+"""RWKV6 (Finch) block: time-mix with data-dependent per-channel decay +
+channel-mix, per arXiv:2404.05892 (low-rank token-shift interpolation (LoRA
+mixes) kept; head layout (H, Dh) with head_size = cfg.d_head)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import layers
+
+
+def rwkv_init(key, cfg: ModelConfig):
+    D = cfg.d_model
+    H, dh = cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 12)
+    lora = 64
+    p = {
+        # time-mix interpolation factors (token shift)
+        "mu_r": jnp.zeros((D,), cfg.pdtype),
+        "mu_k": jnp.zeros((D,), cfg.pdtype),
+        "mu_v": jnp.zeros((D,), cfg.pdtype),
+        "mu_w": jnp.zeros((D,), cfg.pdtype),
+        "mu_g": jnp.zeros((D,), cfg.pdtype),
+        "wr": layers._dense_init(ks[0], (D, H * dh), cfg.pdtype),
+        "wk": layers._dense_init(ks[1], (D, H * dh), cfg.pdtype),
+        "wv": layers._dense_init(ks[2], (D, H * dh), cfg.pdtype),
+        "wg": layers._dense_init(ks[3], (D, H * dh), cfg.pdtype),
+        "wo": layers._dense_init(ks[4], (H * dh, D), cfg.pdtype),
+        # data-dependent decay: w_t = exp(-exp(base + lora(x)))
+        "w_base": jnp.full((H * dh,), -2.0, jnp.float32),
+        "w_a": layers._dense_init(ks[5], (D, lora), cfg.pdtype),
+        "w_b": layers._dense_init(ks[6], (lora, H * dh), cfg.pdtype),
+        "u": (jax.random.normal(ks[7], (H, dh), jnp.float32) * 0.1),
+        "ln_x": jnp.zeros((H * dh,), cfg.pdtype),
+        # channel mix
+        "cm_mu": jnp.zeros((D,), cfg.pdtype),
+        "cm_k": layers._dense_init(ks[8], (D, cfg.d_ff), cfg.pdtype),
+        "cm_v": layers._dense_init(ks[9], (cfg.d_ff, D), cfg.pdtype),
+        "cm_r": layers._dense_init(ks[10], (D, D), cfg.pdtype),
+    }
+    return p
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros or `last` at t=0).  x: (B, S, D)."""
+    pad = jnp.zeros_like(x[:, :1]) if last is None else last[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def time_mix(p, x, cfg: ModelConfig, state, x_last=None):
+    """x: (B,S,D); state: (B,H,Dh,Dh).  Returns (out, new_state, x_tail)."""
+    B, S, D = x.shape
+    H, dh = cfg.n_heads, cfg.head_dim
+    xs = _shift(x, x_last)
+    r = jnp.einsum("bsd,dh->bsh", _mix(x, xs, p["mu_r"]), p["wr"])
+    k = jnp.einsum("bsd,dh->bsh", _mix(x, xs, p["mu_k"]), p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", _mix(x, xs, p["mu_v"]), p["wv"])
+    g = jnp.einsum("bsd,dh->bsh", _mix(x, xs, p["mu_g"]), p["wg"])
+    wx = _mix(x, xs, p["mu_w"])
+    w_log = p["w_base"][None, None] + jnp.einsum(
+        "bsd,dl,lh->bsh", wx.astype(jnp.float32),
+        p["w_a"].astype(jnp.float32), p["w_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(w_log))                     # (B,S,H*dh) in (0,1)
+
+    def heads(t):  # (B,S,H*dh) -> (B,H,S,dh)
+        return jnp.moveaxis(t.reshape(B, S, H, dh), 2, 1)
+
+    out, new_state = ops.rwkv6(heads(r), heads(k), heads(v),
+                               heads(w.astype(x.dtype)), p["u"], state)
+    out = jnp.moveaxis(out, 1, 2).reshape(B, S, H * dh)
+    out = layers.rmsnorm(p["ln_x"], out) * jax.nn.silu(g)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), new_state, x[:, -1]
+
+
+def channel_mix(p, x, x_last=None):
+    xs = _shift(x, x_last)
+    xk = _mix(x, xs, p["cm_mu"])
+    h = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["cm_k"])))
+    kv = jnp.einsum("bsf,fd->bsd", h, p["cm_v"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xs, p["cm_r"]))
+    return r * kv, x[:, -1]
+
+
+def time_mix_decode(p, x, cfg: ModelConfig, state, x_last):
+    """One token: x (B, D); x_last (B, D) previous token's input."""
+    B, D = x.shape
+    H, dh = cfg.n_heads, cfg.head_dim
+    xs = x_last
+    mix = lambda mu: x + (xs - x) * mu.astype(x.dtype)
+    r = (mix(p["mu_r"]) @ p["wr"]).reshape(B, H, dh)
+    k = (mix(p["mu_k"]) @ p["wk"]).reshape(B, H, dh)
+    v = (mix(p["mu_v"]) @ p["wv"]).reshape(B, H, dh)
+    g = mix(p["mu_g"]) @ p["wg"]
+    w_log = p["w_base"][None] + (mix(p["mu_w"]).astype(jnp.float32)
+                                 @ p["w_a"].astype(jnp.float32)
+                                 @ p["w_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(w_log)).reshape(B, H, dh)
+    out, new_state = ops.rwkv6_decode(r, k, v, w.astype(x.dtype), p["u"],
+                                      state)
+    out = out.reshape(B, H * dh)
+    out = layers.rmsnorm(p["ln_x"], out) * jax.nn.silu(g)
+    return out @ p["wo"], new_state, x
+
+
+def channel_mix_decode(p, x, x_last):
+    xk = x + (x_last - x) * p["cm_mu"].astype(x.dtype)
+    h = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    kv = h @ p["cm_v"]
+    r = jax.nn.sigmoid(x_last @ p["cm_r"])
+    return r * kv, x

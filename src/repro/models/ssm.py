@@ -1,0 +1,86 @@
+"""Mamba-style selective SSM head used by hymba's parallel attn+SSM blocks."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+
+def ssm_init(key, cfg: ModelConfig):
+    s = cfg.ssm
+    D = cfg.d_model
+    Di = s.expand * D
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": layers._dense_init(ks[0], (D, 2 * Di), cfg.pdtype),
+        "conv": (jax.random.normal(ks[1], (s.d_conv, Di), jnp.float32)
+                 * 0.1).astype(cfg.pdtype),
+        "x_proj": layers._dense_init(ks[2], (Di, 2 * s.d_state + 1),
+                                     cfg.pdtype),
+        "dt_bias": jnp.zeros((Di,), jnp.float32),
+        "dt_w": layers._dense_init(ks[3], (1, Di), cfg.pdtype),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, s.d_state + 1,
+                                             dtype=jnp.float32), (Di, 1))),
+        "D": jnp.ones((Di,), jnp.float32),
+        "out_proj": layers._dense_init(ks[4], (Di, D), cfg.pdtype),
+    }
+
+
+def _conv(x, w, carry=None):
+    """Depthwise causal conv along time. x: (B,S,Di); w: (K,Di).
+    carry: (B, K-1, Di) previous tail (decode) or None (zeros)."""
+    K = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+           if carry is None else carry)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(K))
+    return out, xp[:, -(K - 1):]
+
+
+def _ssm_inner(p, x, cfg, state, conv_carry, decode: bool):
+    from repro.kernels import ops
+    s = cfg.ssm
+    xz = jnp.einsum("...d,de->...e", x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    if decode:
+        xc, conv_carry = _conv(xin[:, None], p["conv"], conv_carry)
+        xc = xc[:, 0]
+    else:
+        xc, conv_carry = _conv(xin, p["conv"], conv_carry)
+    xc = jax.nn.silu(xc)
+    proj = jnp.einsum("...e,ef->...f", xc, p["x_proj"])
+    dt_in, Bm, Cm = jnp.split(proj, [1, 1 + s.d_state], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("...k,ke->...e", dt_in, p["dt_w"])
+                         + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    if decode:
+        y, state = ops.ssm_decode(xc, dt, A, Bm, Cm, p["D"], state)
+    else:
+        y, state = ops.ssm_scan(xc, dt, A, Bm, Cm, p["D"], state)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("...e,ed->...d", y, p["out_proj"]), state, conv_carry
+
+
+def ssm_apply(p, x, cfg: ModelConfig, state=None, conv_carry=None):
+    """x: (B,S,D). Returns (out, state, conv_carry)."""
+    s = cfg.ssm
+    B = x.shape[0]
+    Di = s.expand * cfg.d_model
+    if state is None:
+        state = jnp.zeros((B, Di, s.d_state), jnp.float32)
+    return _ssm_inner(p, x, cfg, state, conv_carry, decode=False)
+
+
+def ssm_decode_step(p, x, cfg: ModelConfig, state, conv_carry):
+    """x: (B,D) one token."""
+    return _ssm_inner(p, x, cfg, state, conv_carry, decode=True)
+
+
+def ssm_state_init(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    Di = s.expand * cfg.d_model
+    return (jnp.zeros((batch, Di, s.d_state), jnp.float32),
+            jnp.zeros((batch, s.d_conv - 1, Di), cfg.cdtype))

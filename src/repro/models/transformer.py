@@ -1,0 +1,434 @@
+"""Composable decoder/encoder stack covering all ten assigned architectures.
+
+Layers are grouped into a repeating *pattern* of P block kinds (e.g. gemma2:
+(local, full); llama4: (dense, moe); hymba: (full, local x15)); parameters are
+stacked per pattern position and the stack is applied with one `lax.scan` of
+length L/P — bounded HLO size and compile time at any depth (nemotron: 96
+layers -> scan of 96 bodies of 1).
+
+Public API:
+  pattern(cfg)                         -> tuple of BlockKind
+  init_params(cfg, key)                -> parameter pytree
+  forward(params, cfg, batch, rng)     -> (logits, aux)
+  loss_fn(params, cfg, batch, rng)     -> (loss, metrics)
+  prefill(params, cfg, batch, max_len) -> (logits, DecodeState)
+  init_decode_state(cfg, B, max_len)   -> DecodeState (zeros)
+  decode_step(params, cfg, state, tok) -> (logits, DecodeState)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, moe, rwkv, ssm
+
+AUX_KEYS = ("lb_loss", "ntasks_static", "ntasks_stolen_local",
+            "ntasks_stolen_remote", "ntasks_dropped", "max_load")
+
+
+class BlockKind(NamedTuple):
+    attn: Optional[str]   # "full" | "local" | "bidir" | None (rwkv)
+    moe: bool
+    ssm: bool
+    rwkv: bool
+
+
+def pattern(cfg: ModelConfig):
+    if cfg.family == "ssm":
+        return (BlockKind(None, False, False, True),)
+    ilv = cfg.moe.interleave if cfg.moe else 1
+    P = math.lcm(len(cfg.attn_pattern), ilv)
+    return tuple(
+        BlockKind(attn=cfg.attn_pattern[i % len(cfg.attn_pattern)],
+                  moe=bool(cfg.moe) and (i % ilv == ilv - 1),
+                  ssm=cfg.parallel_ssm, rwkv=False)
+        for i in range(P))
+
+
+def _block_init(key, cfg: ModelConfig, kind: BlockKind):
+    D = cfg.d_model
+    ks = jax.random.split(key, 6)
+    p = {"ln1": jnp.zeros((D,), cfg.pdtype),
+         "ln2": jnp.zeros((D,), cfg.pdtype)}
+    if kind.rwkv:
+        p["rwkv"] = rwkv.rwkv_init(ks[0], cfg)
+        return p
+    p["attn"] = layers.attn_init(ks[0], cfg)
+    if kind.ssm:
+        p["ssm"] = ssm.ssm_init(ks[1], cfg)
+        p["attn_ln"] = jnp.zeros((D,), cfg.pdtype)
+        p["ssm_ln"] = jnp.zeros((D,), cfg.pdtype)
+    p["mlp"] = moe.moe_init(ks[2], cfg) if kind.moe \
+        else layers.mlp_init(ks[2], cfg, cfg.d_ff)
+    if cfg.post_block_norms:
+        p["pln1"] = jnp.zeros((D,), cfg.pdtype)
+        p["pln2"] = jnp.zeros((D,), cfg.pdtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key):
+    kinds = pattern(cfg)
+    P = len(kinds)
+    n = cfg.n_layers // P
+    assert cfg.n_layers % P == 0, (cfg.n_layers, P)
+    keys = jax.random.split(key, P + 3)
+    params = {
+        "embed": (jax.random.normal(keys[-1], (cfg.vocab, cfg.d_model),
+                                    jnp.float32)).astype(cfg.pdtype),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.pdtype),
+        "streams": tuple(
+            jax.vmap(lambda k, kd=kind, cf=cfg: _block_init(k, cf, kd))(
+                jax.random.split(keys[i], n))
+            for i, kind in enumerate(kinds)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers._dense_init(
+            keys[-2], (cfg.d_model, cfg.vocab), cfg.pdtype)
+    if cfg.frontend:
+        params["frontend"] = {"proj": layers._dense_init(
+            keys[-3], (cfg.frontend_dim, cfg.d_model), cfg.pdtype)}
+    return params
+
+
+def _zero_aux():
+    return {k: jnp.float32(0.0) for k in AUX_KEYS}
+
+
+def _remat_group(cfg: ModelConfig, n: int) -> int:
+    if cfg.remat_group and n % cfg.remat_group == 0:
+        return cfg.remat_group
+    best = 1
+    for g in range(2, int(math.isqrt(n)) + 1):
+        if n % g == 0:
+            best = g
+    return best
+
+
+def _apply_block(bp, x, cfg: ModelConfig, kind: BlockKind, rng, ep_groups,
+                 dp_groups):
+    """Training/prefill block.  Returns (x, aux, cache_src) where cache_src
+    carries what decode needs (k/v, rwkv/ssm states, token-shift tails)."""
+    aux = _zero_aux()
+    cache_src = {}
+    h = layers.rmsnorm(bp["ln1"], x)
+    if kind.rwkv:
+        B = x.shape[0]
+        H, dh = cfg.n_heads, cfg.head_dim
+        state0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        a, state, tail = rwkv.time_mix(bp["rwkv"], h, cfg, state0)
+        cache_src["rwkv_state"] = state
+        cache_src["tm_last"] = tail
+        x = x + a
+        h2 = layers.rmsnorm(bp["ln2"], x)
+        m, tail2 = rwkv.channel_mix(bp["rwkv"], h2)
+        cache_src["cm_last"] = tail2
+        return x + m, aux, cache_src
+    a, (kt, vt) = layers.attn_apply(bp["attn"], h, cfg, kind.attn)
+    cache_src["k"], cache_src["v"] = kt, vt
+    if kind.ssm:
+        s_out, s_state, s_conv = ssm.ssm_apply(bp["ssm"], h, cfg)
+        a = 0.5 * (layers.rmsnorm(bp["attn_ln"], a)
+                   + layers.rmsnorm(bp["ssm_ln"], s_out))
+        cache_src["ssm_state"], cache_src["ssm_conv"] = s_state, s_conv
+    if cfg.post_block_norms:
+        a = layers.rmsnorm(bp["pln1"], a)
+    x = x + a
+    h2 = layers.rmsnorm(bp["ln2"], x)
+    if kind.moe:
+        m, aux = moe.moe_apply(bp["mlp"], h2, cfg, ep_groups=ep_groups,
+                               rng=rng, dp_groups=dp_groups)
+    else:
+        m = layers.mlp_apply(bp["mlp"], h2, cfg)
+    if cfg.post_block_norms:
+        m = layers.rmsnorm(bp["pln2"], m)
+    return x + m, aux, cache_src
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch):
+    emb = params["embed"]
+    if cfg.frontend == "audio_frames":
+        x = jnp.einsum("bsf,fd->bsd", batch["frames"].astype(cfg.cdtype),
+                       params["frontend"]["proj"])
+        return x
+    tok = batch["tokens"]
+    x = emb[tok].astype(cfg.cdtype)
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.cdtype)
+    if cfg.frontend == "vit_patches":
+        xp = jnp.einsum("bpf,fd->bpd", batch["patches"].astype(cfg.cdtype),
+                        params["frontend"]["proj"])
+        x = jnp.concatenate([xp, x], axis=1)
+    return x
+
+
+def _logits(params, cfg: ModelConfig, x):
+    """Returns logits in compute dtype (bf16), vocab-sharded; the loss
+    consumes them in streaming f32 (no (B,S,V) f32 materialization)."""
+    x = layers.rmsnorm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, params["embed"])
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, params["lm_head"])
+    if cfg.logit_softcap:
+        logits = (cfg.logit_softcap
+                  * jnp.tanh(logits / cfg.logit_softcap))
+    spec = ("dp",) + (None,) * (logits.ndim - 2) + ("tp",)
+    return layers.hint(logits, *spec)
+
+
+def forward(params, cfg: ModelConfig, batch, rng=None, *, ep_groups=16,
+            dp_groups=1, collect_cache=False):
+    """Full-sequence forward.  Returns (logits, aux[, cache_srcs])."""
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+    kinds = pattern(cfg)
+    x = _embed_inputs(params, cfg, batch)
+
+    def body(carry, xs):
+        xc, aux_acc = carry
+        stream_ps, idx = xs
+        srcs = []
+        for pidx, kind in enumerate(kinds):
+            r = jax.random.fold_in(rng, idx * len(kinds) + pidx)
+            xc, aux, src = _apply_block(stream_ps[pidx], xc, cfg, kind, r,
+                                        ep_groups, dp_groups)
+            aux_acc = {k: aux_acc[k] + aux[k] for k in AUX_KEYS}
+            srcs.append(src)
+        return (xc, aux_acc), (tuple(srcs) if collect_cache else 0)
+
+    n = cfg.n_layers // len(kinds)
+    g = _remat_group(cfg, n)
+    if cfg.remat and not collect_cache and g > 1:
+        # sqrt(L) two-level remat: the outer scan checkpoints one carry per
+        # *group* of g layers; each group's inner residuals exist only while
+        # that group's backward runs.  Live residuals: n/g + g instead of n.
+        streams2 = jax.tree.map(
+            lambda a: a.reshape((n // g, g) + a.shape[1:]),
+            params["streams"])
+        idxs = jnp.arange(n).reshape(n // g, g)
+
+        def outer(carry, xs):
+            sp, idx = xs
+            out, _ = jax.lax.scan(body, carry, (sp, idx))
+            return out, 0
+
+        (x, aux), srcs = jax.lax.scan(jax.checkpoint(outer),
+                                      (x, _zero_aux()), (streams2, idxs))
+    else:
+        if cfg.remat and not collect_cache:
+            body = jax.checkpoint(body)
+        (x, aux), srcs = jax.lax.scan(
+            body, (x, _zero_aux()),
+            (params["streams"], jnp.arange(n)))
+    logits = _logits(params, cfg, x)
+    if collect_cache:
+        return logits, aux, srcs
+    return logits, aux
+
+
+@jax.custom_vjp
+def _ce_mean(flat, idx):
+    """Mean cross-entropy over rows.  flat: (N, V) logits (any dtype),
+    idx: (N,) int targets.
+
+    Memory behavior is the reason for the custom VJP: forward saves only
+    (logits [already live], lse (N,) f32) and the backward reconstructs
+    softmax from lse *in the logits dtype*, so no (N, V) f32 buffer ever
+    materializes (observed 4-8 GiB/device at 256k vocabs otherwise).  The
+    target gather is a flat 2-D gather — differentiable without the
+    batched-gather transposes this jax build lacks."""
+    return _ce_fwd(flat, idx)[0]
+
+
+def _ce_fwd(flat, idx):
+    N = flat.shape[0]
+    m = jnp.max(flat, axis=-1)
+    s = jnp.sum(jnp.exp((flat - m[:, None]).astype(jnp.float32)), axis=-1)
+    lse = m.astype(jnp.float32) + jnp.log(s)
+    tgt = flat[jnp.arange(N), idx].astype(jnp.float32)
+    return (lse - tgt).mean(), (flat, idx, lse)
+
+
+def _ce_bwd(res, g):
+    flat, idx, lse = res
+    N = flat.shape[0]
+    p = jnp.exp(flat.astype(jnp.float32) - lse[:, None])   # fuses into cast
+    dflat = p.astype(flat.dtype)
+    dflat = dflat.at[jnp.arange(N), idx].add(
+        jnp.asarray(-1.0, flat.dtype))
+    dflat = dflat * jnp.asarray(g / N, flat.dtype)
+    return dflat, None
+
+
+_ce_mean.defvjp(_ce_fwd, _ce_bwd)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, rng=None, *, ep_groups=16,
+            dp_groups=1):
+    logits, aux = forward(params, cfg, batch, rng, ep_groups=ep_groups,
+                          dp_groups=dp_groups)
+
+    def _ce(lg, tg):
+        V = lg.shape[-1]
+        return _ce_mean(lg.reshape(-1, V), tg.reshape(-1))
+
+    if cfg.encoder_only:
+        loss = _ce(logits, batch["targets"])
+    else:
+        tok = batch["tokens"]
+        if cfg.frontend == "vit_patches":
+            # text tokens occupy the tail; predict token t+1 from position
+            # frontend_len + t
+            logits = logits[:, cfg.frontend_len:, :]
+        loss = _ce(logits[:, :-1], tok[:, 1:])
+    total = loss + 0.01 * aux["lb_loss"]
+    metrics = {"ce": loss, **{k: aux[k] for k in AUX_KEYS}}
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+class DecodeState(NamedTuple):
+    caches: tuple       # per pattern position: stacked (n, ...) cache pytree
+    length: jax.Array   # (B,) tokens already in cache
+
+
+def _empty_cache(cfg: ModelConfig, kind: BlockKind, B: int, max_len: int):
+    if kind.rwkv:
+        H, dh = cfg.n_heads, cfg.head_dim
+        return {"rwkv_state": jnp.zeros((B, H, dh, dh), jnp.float32),
+                "tm_last": jnp.zeros((B, cfg.d_model), cfg.cdtype),
+                "cm_last": jnp.zeros((B, cfg.d_model), cfg.cdtype)}
+    c = layers.attn_cache_init(cfg, kind.attn, B, max_len, cfg.cdtype)
+    d = {"k": c.k, "v": c.v, "k_scale": c.k_scale, "v_scale": c.v_scale}
+    if kind.ssm:
+        st, conv = ssm.ssm_state_init(cfg, B)
+        d["ssm_state"], d["ssm_conv"] = st, conv
+    return d
+
+
+def init_decode_state(cfg: ModelConfig, B: int, max_len: int) -> DecodeState:
+    kinds = pattern(cfg)
+    n = cfg.n_layers // len(kinds)
+
+    def stack(tree):
+        return jax.tree.map(lambda a: jnp.broadcast_to(
+            a[None], (n,) + a.shape).copy(), tree)
+
+    caches = tuple(stack(_empty_cache(cfg, kd, B, max_len)) for kd in kinds)
+    return DecodeState(caches=caches, length=jnp.zeros((B,), jnp.int32))
+
+
+def prefill(params, cfg: ModelConfig, batch, max_len: int, rng=None, *,
+            ep_groups=16, dp_groups=1):
+    """Run the full prompt, build the decode state.  Returns (logits, state)."""
+    assert not cfg.encoder_only
+    logits, _aux, srcs = forward(params, cfg, batch, rng,
+                                 ep_groups=ep_groups, dp_groups=dp_groups,
+                                 collect_cache=True)
+    kinds = pattern(cfg)
+    S = (batch["tokens"].shape[1] if cfg.frontend != "audio_frames"
+         else batch["frames"].shape[1])
+    if cfg.frontend == "vit_patches":
+        S = S + cfg.frontend_len
+
+    def to_cache(kind, src):
+        if kind.rwkv:
+            return src  # states already final
+        c = layers.attn_cache_from_prefill(
+            cfg, kind.attn, src["k"], src["v"], max_len)
+        d = {"k": c.k, "v": c.v, "k_scale": c.k_scale, "v_scale": c.v_scale}
+        for extra in ("ssm_state", "ssm_conv"):
+            if extra in src:
+                d[extra] = src[extra]
+        return d
+
+    # srcs[i] leaves are stacked (n_scan, ...) — vmap cache building over layers
+    caches = tuple(
+        jax.vmap(lambda s, kd=kind: to_cache(kd, s))(srcs[i])
+        for i, kind in enumerate(kinds))
+    B = logits.shape[0]
+    state = DecodeState(
+        caches=caches,
+        length=jnp.full((B,), S, jnp.int32))
+    return logits[:, -1], state
+
+
+def _decode_block(bp, x, cfg: ModelConfig, kind: BlockKind, cache, length,
+                  rng, ep_groups, dp_groups):
+    h = layers.rmsnorm(bp["ln1"], x)
+    new = dict(cache)
+    if kind.rwkv:
+        a, st, tail = rwkv.time_mix_decode(bp["rwkv"], h, cfg,
+                                           cache["rwkv_state"],
+                                           cache["tm_last"])
+        new["rwkv_state"], new["tm_last"] = st, tail
+        x = x + a
+        h2 = layers.rmsnorm(bp["ln2"], x)
+        m, tail2 = rwkv.channel_mix_decode(bp["rwkv"], h2, cache["cm_last"])
+        new["cm_last"] = tail2
+        return x + m, new
+    ac = layers.AttnCache(cache["k"], cache["v"], cache["k_scale"],
+                          cache["v_scale"])
+    a, ac2 = layers.attn_decode(bp["attn"], h, cfg, kind.attn, ac, length)
+    new["k"], new["v"] = ac2.k, ac2.v
+    new["k_scale"], new["v_scale"] = ac2.k_scale, ac2.v_scale
+    if kind.ssm:
+        s_out, s_state, s_conv = ssm.ssm_decode_step(
+            bp["ssm"], h, cfg, cache["ssm_state"], cache["ssm_conv"])
+        a = 0.5 * (layers.rmsnorm(bp["attn_ln"], a)
+                   + layers.rmsnorm(bp["ssm_ln"], s_out))
+        new["ssm_state"], new["ssm_conv"] = s_state, s_conv
+    if cfg.post_block_norms:
+        a = layers.rmsnorm(bp["pln1"], a)
+    x = x + a
+    h2 = layers.rmsnorm(bp["ln2"], x)
+    if kind.moe:
+        m, _aux = moe.moe_apply(bp["mlp"], h2[:, None], cfg,
+                                ep_groups=ep_groups, rng=rng,
+                                dp_groups=dp_groups)
+        m = m[:, 0]
+    else:
+        m = layers.mlp_apply(bp["mlp"], h2, cfg)
+    if cfg.post_block_norms:
+        m = layers.rmsnorm(bp["pln2"], m)
+    return x + m, new
+
+
+def decode_step(params, cfg: ModelConfig, state: DecodeState, tokens,
+                rng=None, *, ep_groups=16, dp_groups=1):
+    """One autoregressive step.  tokens: (B,) int32.  Returns (logits, state)."""
+    assert not cfg.encoder_only
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+    kinds = pattern(cfg)
+    x = params["embed"][tokens].astype(cfg.cdtype)
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.cdtype)
+
+    def body(carry, xs):
+        xc = carry
+        stream_ps, stream_caches, idx = xs
+        new_caches = []
+        for pidx, kind in enumerate(kinds):
+            r = jax.random.fold_in(rng, idx * len(kinds) + pidx)
+            xc, nc = _decode_block(stream_ps[pidx], xc, cfg, kind,
+                                   stream_caches[pidx], state.length, r,
+                                   ep_groups, dp_groups)
+            new_caches.append(nc)
+        return xc, tuple(new_caches)
+
+    n = cfg.n_layers // len(kinds)
+    x, new_caches = jax.lax.scan(
+        body, x, (params["streams"], state.caches, jnp.arange(n)))
+    logits = _logits(params, cfg, x)
+    return logits, DecodeState(caches=new_caches,
+                               length=state.length + 1)

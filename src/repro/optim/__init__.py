@@ -1,0 +1,4 @@
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               cosine_schedule, global_norm)
+from repro.optim.grad_compress import (compress_decompress, ef_init,
+                                       ef_compress_grads)

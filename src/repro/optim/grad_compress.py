@@ -1,0 +1,60 @@
+"""Int8 gradient compression with error feedback (1-bit-Adam-style residual
+accumulation).  In a multi-pod deployment the int8 tensor + per-block scale is
+what crosses the inter-pod links (4x fewer DCI bytes); under jit we express it
+as fake-quantization so XLA sees the same numerics the compressed collective
+would produce, and the shard_map hierarchical all-reduce (runtime/collectives)
+can reduce the int8 payload across the `pod` axis."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _quant(x):
+    """Per-block symmetric int8 quantization. x: any shape (flattened)."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale, pad
+
+
+def _dequant(q, scale, pad, shape):
+    out = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        out = out[:-pad]
+    return out.reshape(shape)
+
+
+def compress_decompress(x):
+    """Round-trip int8 fake-quant (the wire format of the compressed
+    all-reduce).  Returns (x_hat, residual)."""
+    xf = x.astype(jnp.float32)
+    q, scale, pad = _quant(xf)
+    x_hat = _dequant(q, scale, pad, xf.shape)
+    return x_hat.astype(x.dtype), (xf - x_hat).astype(x.dtype)
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_compress_grads(grads, ef_state):
+    """Error-feedback compression: g_hat = Q(g + e);  e' = g + e - g_hat."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        g_hat, resid = compress_decompress(corrected)
+        return g_hat.astype(g.dtype), resid.astype(jnp.float32)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef_state)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    g_hat = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_ef = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return g_hat, new_ef

@@ -1,0 +1,5 @@
+from repro.runtime.collectives import (flat_psum_grads,
+                                       hierarchical_psum_grads,
+                                       tree_allreduce)
+from repro.runtime.fault_tolerance import (StragglerMonitor, Supervisor,
+                                           SimulatedFault)

@@ -1,0 +1,7 @@
+"""Tests run on the default (1-device) CPU backend; multi-device tests spawn
+subprocesses with their own XLA_FLAGS (the dry-run's 512-device override must
+never leak into smoke tests)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

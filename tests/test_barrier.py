@@ -1,0 +1,37 @@
+"""Tree barrier: the paper's 'half the atomic operations' bound + gather
+predicate correctness."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import barrier
+from repro.core.costs import DEFAULT_COSTS
+
+
+def test_half_the_atomics():
+    for w in (2, 8, 64, 192, 256):
+        tree = barrier.tree_episode(w, DEFAULT_COSTS)
+        central = barrier.centralized_episode(w, DEFAULT_COSTS)
+        assert int(tree.atomic_ops) * 2 == int(central.atomic_ops)
+
+
+def test_tree_faster_at_scale():
+    for w in (8, 64, 256):
+        tree = barrier.tree_episode(w, DEFAULT_COSTS)
+        central = barrier.centralized_episode(w, DEFAULT_COSTS)
+        assert int(tree.time_ns) < int(central.time_ns)
+
+
+def test_gather_predicate():
+    W = 8
+    # all idle -> root gathered
+    g = barrier.tree_gathered(jnp.ones(W, bool), W)
+    assert bool(g[0])
+    # one busy leaf -> root not gathered
+    idle = jnp.ones(W, bool).at[7].set(False)
+    g = barrier.tree_gathered(idle, W)
+    assert not bool(g[0])
+    # busy node blocks its ancestors only
+    idle = jnp.ones(W, bool).at[5].set(False)   # child of 2, under root
+    g = barrier.tree_gathered(idle, W)
+    assert not bool(g[2]) and not bool(g[0]) and bool(g[1])

@@ -1,0 +1,58 @@
+"""Lock-less messaging protocol (Alg. 1 & 2) semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import messaging
+
+
+def test_pack_unpack_layout():
+    # paper layout: (thief_id << 40) | round
+    for tid, rnd in [(0, 1), (23, 5), (2 ** 24 - 1, 2 ** 40 - 1)]:
+        req = messaging.pack(tid, rnd)
+        t2, r2 = messaging.unpack(req)
+        assert (t2, r2) == (tid, rnd)
+    assert messaging.pack(1, 0) == 1 << 40
+
+
+def test_send_and_validate():
+    W = 4
+    c = messaging.make(W)
+    thief = jnp.arange(W)
+    victim = jnp.full(W, 2)
+    mask = jnp.zeros(W, bool).at[0].set(True)   # only thief 0 sends
+    c, sent = messaging.thief_send(c, thief, victim, mask)
+    assert bool(sent[0]) and not bool(sent[1:].any())
+    valid = messaging.victim_valid(c)
+    assert bool(valid[2]) and int(c.req_tid[2]) == 0
+    # handling reopens the slot and invalidates the old request
+    c = messaging.victim_advance(c, valid)
+    assert not bool(messaging.victim_valid(c)[2])
+    # a new request for the new round succeeds
+    c, sent = messaging.thief_send(c, thief, victim, mask)
+    assert bool(sent[0])
+
+
+def test_stale_request_not_overwritten():
+    W = 4
+    c = messaging.make(W)
+    t = jnp.arange(W)
+    v = jnp.full(W, 3)
+    m0 = jnp.zeros(W, bool).at[0].set(True)
+    c, s0 = messaging.thief_send(c, t, v, m0)
+    # second thief sees a *pending* request (curr == round) and must not send
+    m1 = jnp.zeros(W, bool).at[1].set(True)
+    c, s1 = messaging.thief_send(c, t, v, m1)
+    assert bool(s0[0]) and not bool(s1[1])
+    assert int(c.req_tid[3]) == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 30))
+def test_round_monotonic(w, n):
+    c = messaging.make(w)
+    for i in range(n):
+        handled = messaging.victim_valid(c)
+        c = messaging.victim_advance(c, jnp.ones(w, bool))
+    assert bool((c.round == 1 + n).all())

@@ -1,0 +1,106 @@
+"""Scheduler simulator: completion, exactly-once execution, counter
+consistency, and the paper's qualitative performance ladder."""
+
+import numpy as np
+import pytest
+
+from repro.core import make_params, run_schedule, taskgraph
+from repro.core.scheduler import MODES, SimConfig
+
+CFG = SimConfig(n_workers=16, n_zones=4, max_steps=60_000)
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    return {
+        "fib": taskgraph.fib(12),
+        "uts": taskgraph.uts(800),
+        "align": taskgraph.align(12),
+    }
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_all_modes_complete(graphs, mode):
+    for g in graphs.values():
+        r = run_schedule(g, mode=mode, cfg=CFG)
+        assert r.completed, (mode, g.name)
+        # exactly-once execution
+        assert r.counters["exec"] == g.n_tasks
+        # locality classes partition executions
+        assert (r.counters["self"] + r.counters["local"]
+                + r.counters["remote"]) == g.n_tasks
+        # every executed task was either pushed or executed immediately
+        assert (r.counters["static_push"] + r.counters["imm_exec"]
+                + r.counters["stolen"]) >= g.n_tasks - 1
+
+
+def test_makespan_bounds(graphs):
+    """Makespan is at least total-work/workers and at least the serial chain
+    of any single task (causality via queue timestamps)."""
+    g = graphs["fib"]
+    r = run_schedule(g, mode="xgomptb", cfg=CFG)
+    assert r.time_ns >= g.total_work_ns / CFG.n_workers
+    assert r.time_ns >= int(g.dur.max())
+
+
+def test_gomp_slowest_for_fine_grained(graphs):
+    g = graphs["fib"]
+    t = {m: run_schedule(g, mode=m, cfg=CFG).time_ns
+         for m in ("gomp", "xgomp", "xgomptb")}
+    assert t["gomp"] > 10 * t["xgomptb"], t
+    assert t["xgomp"] > t["xgomptb"], t
+
+
+def test_dlb_modes_steal(graphs):
+    g = graphs["uts"]
+    for mode in ("na_rp", "na_ws"):
+        r = run_schedule(g, mode=mode,
+                         params=make_params(n_victim=4, n_steal=8,
+                                            t_interval=10, p_local=0.8),
+                         cfg=CFG)
+        assert r.completed
+        assert r.counters["req_sent"] > 0
+        assert r.counters["req_handled"] <= r.counters["req_sent"]
+        assert r.counters["stolen"] > 0
+        assert (r.counters["stolen_local"] + r.counters["stolen_remote"]
+                == r.counters["stolen"])
+
+
+def test_single_creator_semantics(graphs):
+    """align uses the `single` construct: all tasks created by worker 0, so
+    non-self executions dominate and NA-RP has only one possible victim."""
+    g = graphs["align"]
+    r = run_schedule(g, mode="xgomptb", cfg=CFG)
+    assert r.completed
+    assert r.per_worker_exec.sum() == g.n_tasks
+
+
+def test_determinism(graphs):
+    g = graphs["uts"]
+    a = run_schedule(g, mode="na_ws", seed=3, cfg=CFG)
+    b = run_schedule(g, mode="na_ws", seed=3, cfg=CFG)
+    assert a.time_ns == b.time_ns
+    assert a.counters == b.counters
+
+
+def test_p_local_steers_locality(graphs):
+    g = graphs["uts"]
+    local = run_schedule(g, mode="na_ws",
+                         params=make_params(n_victim=4, n_steal=8,
+                                            t_interval=10, p_local=1.0),
+                         cfg=CFG)
+    remote = run_schedule(g, mode="na_ws",
+                          params=make_params(n_victim=4, n_steal=8,
+                                             t_interval=10, p_local=0.0),
+                          cfg=CFG)
+    if local.counters["stolen"] and remote.counters["stolen"]:
+        frac_l = local.counters["stolen_local"] / local.counters["stolen"]
+        frac_r = remote.counters["stolen_local"] / remote.counters["stolen"]
+        assert frac_l > frac_r
+
+
+def test_graph_validators():
+    for name in taskgraph.BUILDERS:
+        g = taskgraph.build(name, **({"n": 8} if name in ("fib", "nqueens")
+                                     else {}))
+        g.validate()

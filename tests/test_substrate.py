@@ -1,0 +1,147 @@
+"""Substrate tests: optimizer, gradient compression, checkpointing
+(atomicity, corruption fallback, elasticity), data pipeline, supervisor."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import checkpoint as ckpt
+from repro.data.pipeline import SyntheticPipeline, batch_for
+from repro.optim import (adamw_init, adamw_update, compress_decompress,
+                         cosine_schedule, ef_compress_grads, ef_init)
+from repro.runtime import StragglerMonitor, Supervisor, SimulatedFault
+from repro.configs import base as cb
+
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.array([3.0, -2.0])}
+    opt = adamw_init(params)
+    for i in range(200):
+        g = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(g, opt, params, lr=0.05,
+                                      weight_decay=0.0)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_grad_clip_and_metrics():
+    params = {"w": jnp.ones(4)}
+    opt = adamw_init(params)
+    _, _, m = adamw_update({"w": jnp.full(4, 100.0)}, opt, params, lr=1e-3)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_cosine_schedule():
+    assert float(cosine_schedule(jnp.int32(0), peak_lr=1.0, warmup=10,
+                                 total=100)) == 0.0
+    assert float(cosine_schedule(jnp.int32(10), peak_lr=1.0, warmup=10,
+                                 total=100)) == pytest.approx(1.0)
+    assert float(cosine_schedule(jnp.int32(100), peak_lr=1.0, warmup=10,
+                                 total=100)) == pytest.approx(0.1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000))
+def test_compression_bounded_error(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (300,)) * 10
+    xh, resid = compress_decompress(x)
+    assert float(jnp.abs(resid).max()) <= float(jnp.abs(x).max()) / 127 + 1e-5
+
+
+def test_error_feedback_accumulates():
+    g = {"w": jnp.full((256,), 1e-4)}   # below quantization resolution alone
+    ef = ef_init(g)
+    total = jnp.zeros(256)
+    for _ in range(50):
+        gh, ef = ef_compress_grads(g, ef)
+        total = total + gh["w"]
+    # with EF the long-run average converges to the true gradient
+    np.testing.assert_allclose(np.asarray(total) / 50, 1e-4, rtol=0.2)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": {"c": np.float32(3.5),
+                  "d": jnp.ones((4,), jnp.bfloat16)}}
+    ckpt.save(str(tmp_path), 7, tree)
+    out, step = ckpt.restore(str(tmp_path), tree)
+    assert step == 7
+    np.testing.assert_array_equal(out["a"], tree["a"])
+    assert out["b"]["d"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_corruption_fallback(tmp_path):
+    tree = {"w": np.arange(8, dtype=np.float32)}
+    ckpt.save(str(tmp_path), 1, tree)
+    tree2 = {"w": np.arange(8, dtype=np.float32) * 2}
+    ckpt.save(str(tmp_path), 2, tree2)
+    # corrupt the newest checkpoint
+    victim = os.path.join(str(tmp_path), "step_00000002", "w.npy")
+    with open(victim, "wb") as f:
+        f.write(b"garbage")
+    out, step = ckpt.restore(str(tmp_path), tree)
+    assert step == 1                      # fell back to the valid one
+    np.testing.assert_array_equal(out["w"], tree["w"])
+
+
+def test_checkpoint_cleanup(tmp_path):
+    for s in range(5):
+        ckpt.save(str(tmp_path), s, {"w": np.zeros(2)})
+    ckpt.cleanup(str(tmp_path), keep=2)
+    assert ckpt.steps(str(tmp_path)) == [3, 4]
+
+
+def test_pipeline_determinism_and_sharding():
+    cfg = cb.smoke_config("yi_9b")
+    a = batch_for(cfg, 3, 8, 16, lo=0, hi=4)
+    b = batch_for(cfg, 3, 8, 16, lo=4, hi=8)
+    a2 = batch_for(cfg, 3, 8, 16, lo=0, hi=4)
+    np.testing.assert_array_equal(a["tokens"], a2["tokens"])
+    assert not np.array_equal(a["tokens"], b["tokens"])
+    assert (a["tokens"] < cfg.vocab).all() and (a["tokens"] >= 0).all()
+
+
+def test_pipeline_prefetch_thread():
+    cfg = cb.smoke_config("yi_9b")
+    pipe = SyntheticPipeline(cfg, 4, 16, process_index=0, process_count=1)
+    steps = [next(pipe)[0] for _ in range(3)]
+    pipe.close()
+    assert steps == [0, 1, 2]
+
+
+def test_supervisor_recovers_from_crash(tmp_path):
+    saved = {}
+
+    def save_fn(state, step):
+        saved["state"], saved["step"] = state, step
+
+    def restore_fn():
+        return saved.get("state"), saved.get("step")
+
+    sup = Supervisor(save_fn=save_fn, restore_fn=restore_fn, ckpt_every=5)
+    state, end = sup.run(0, lambda s, i: (s + 1, 1.0), 20,
+                         fault_at={12: "crash"})
+    assert end == 20 and state == 20      # recovered and completed
+    assert sup.restarts == 1 and sup.recovered_from == 10
+
+
+def test_supervisor_nan_triggers_restore():
+    saved = {}
+    sup = Supervisor(save_fn=lambda s, i: saved.update(s=s, i=i),
+                     restore_fn=lambda: (saved.get("s"), saved.get("i")),
+                     ckpt_every=4)
+    state, end = sup.run(0, lambda s, i: (s + 1, 1.0), 10,
+                         fault_at={6: "nan"})
+    assert end == 10 and sup.restarts == 1
+
+
+def test_straggler_monitor():
+    m = StragglerMonitor(threshold=2.0, warmup=2)
+    for _ in range(5):
+        assert not m.record(1.0)
+    assert m.record(5.0)
+    assert m.flagged == 1
+    assert m.baseline == pytest.approx(1.0)

@@ -1,0 +1,115 @@
+"""End-to-end behaviour: training converges, checkpoint/restart resumes
+identically, elastic restore works, the dry-run lowers, and the examples run."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.configs import base as cb
+from repro.data.pipeline import batch_for
+from repro.models import transformer as tfm
+from repro.optim import adamw_init, adamw_update
+
+
+def _env():
+    return {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+
+
+def test_training_reduces_loss():
+    cfg = cb.smoke_config("mistral_nemo_12b")
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, _), g = jax.value_and_grad(
+            lambda p: tfm.loss_fn(p, cfg, batch), has_aux=True)(params)
+        params, opt, _ = adamw_update(g, opt, params, lr=1e-3)
+        return params, opt, loss
+
+    losses = []
+    for i in range(25):
+        b = {k: jnp.asarray(v) for k, v in batch_for(cfg, i, 4, 64).items()}
+        params, opt, loss = step(params, opt, b)
+        losses.append(float(loss))
+    assert np.mean(losses[-5:]) < losses[0]
+
+
+def test_checkpoint_resume_bitwise(tmp_path):
+    """Stop at step 10, restore, continue: must match an uninterrupted run."""
+    cfg = cb.smoke_config("gemma2_2b")
+
+    def make_step():
+        @jax.jit
+        def step(params, opt, batch, i):
+            (loss, _), g = jax.value_and_grad(
+                lambda p: tfm.loss_fn(p, cfg, batch), has_aux=True)(params)
+            params, opt, _ = adamw_update(g, opt, params, lr=1e-3)
+            return params, opt, loss
+        return step
+
+    def run(n, params, opt, start=0):
+        step = make_step()
+        for i in range(start, n):
+            b = {k: jnp.asarray(v)
+                 for k, v in batch_for(cfg, i, 2, 32).items()}
+            params, opt, loss = step(params, opt, b, i)
+        return params, opt, float(loss)
+
+    p0 = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    o0 = adamw_init(p0)
+    p_full, o_full, l_full = run(14, p0, o0)
+
+    p1, o1, _ = run(10, tfm.init_params(cfg, jax.random.PRNGKey(0)),
+                    adamw_init(p0))
+    ckpt.save(str(tmp_path), 10, {"p": p1, "o": o1})
+    restored, s = ckpt.restore(str(tmp_path), {"p": p1, "o": o1})
+    p2, o2, l_resumed = run(14, restored["p"], restored["o"], start=10)
+    assert l_resumed == pytest.approx(l_full, rel=1e-5)
+
+
+def test_elastic_restore_changes_placement(tmp_path):
+    """A checkpoint written under one layout restores onto another (logical
+    arrays are sharding-agnostic)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    cfg = cb.smoke_config("yi_9b")
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    ckpt.save(str(tmp_path), 1, params)
+    mesh = jax.make_mesh((1,), ("model",))
+    shardings = jax.tree.map(
+        lambda _: NamedSharding(mesh, P()), params)
+    out, s = ckpt.restore_resharded(str(tmp_path), params, shardings)
+    assert s == 1
+    np.testing.assert_array_equal(
+        np.asarray(out["final_norm"], np.float32),
+        np.asarray(params["final_norm"], np.float32))
+
+
+@pytest.mark.slow
+def test_dryrun_one_cell_subprocess(tmp_path):
+    """The multi-pod dry-run lowers+compiles a real cell with 512 fake
+    devices (the smallest/fastest cell to keep CI time sane)."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "rwkv6_1_6b", "--shape", "long_500k", "--multi-pod", "--force",
+         "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=900, env=_env())
+    assert "[OK]" in r.stdout, r.stdout + r.stderr
+    rec = json.load(open(os.path.join(
+        str(tmp_path), "rwkv6_1_6b__long_500k__pod2.json")))
+    assert rec["fits_hbm"] and rec["n_devices"] == 512
+
+
+@pytest.mark.slow
+def test_example_schedule_bots():
+    r = subprocess.run([sys.executable, "examples/schedule_bots.py", "fib",
+                        "16"], capture_output=True, text=True, timeout=900,
+                       env=_env())
+    assert "speedup over gomp" in r.stdout, r.stdout + r.stderr
