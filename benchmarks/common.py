@@ -1,4 +1,9 @@
-"""Shared helpers for the benchmark harness."""
+"""Shared helpers for the benchmark harness.
+
+Setting ``BENCH_SMOKE=1`` in the environment shrinks every instance and the
+simulated machine so the whole harness runs in CI-smoke time; results are not
+meaningful for paper comparisons in that mode.
+"""
 
 from __future__ import annotations
 
@@ -13,6 +18,9 @@ from repro.core.scheduler import SimConfig
 
 OUT_DIR = "experiments/bench"
 
+#: CI smoke mode: tiny instances, tiny machine (see module docstring)
+SMOKE = os.environ.get("BENCH_SMOKE", "") == "1"
+
 #: scaled-down instances (paper §VI scales its DLB sweeps the same way)
 APPS = {
     "fib": dict(n=16),
@@ -25,8 +33,19 @@ APPS = {
     "sort": dict(levels=9),
     "align": dict(n_seqs=24),
 }
+if SMOKE:
+    APPS.update(fib=dict(n=10), nqueens=dict(n=6), fp=dict(max_depth=5),
+                health=dict(levels=3), uts=dict(n_target=300),
+                fft=dict(levels=6), strassen=dict(levels=2),
+                sort=dict(levels=5), align=dict(n_seqs=8))
 
-SIM = SimConfig(n_workers=32, n_zones=4, max_steps=200_000)
+# stack_cap 64: the BOTS-analogue DAGs never need more than ~tree-depth
+# range entries per worker (overflow is detected and fails the run); the
+# smaller stack cuts the per-step memory traffic of batched sweeps 8x.
+SIM = (SimConfig(n_workers=16, n_zones=4, max_steps=60_000, stack_cap=64)
+       if SMOKE
+       else SimConfig(n_workers=32, n_zones=4, max_steps=200_000,
+                      stack_cap=64))
 
 
 def graph_for(app: str):

@@ -1,49 +1,69 @@
 """Fig. 7 + Tables I-III: best NA-RP / NA-WS vs SLB (XGOMPTB), with the
-paper's runtime-statistics counters."""
+paper's runtime-statistics counters.
 
-from benchmarks.common import APPS, SIM, csv_row, emit, graph_for
-from repro.core import make_params, run_schedule
+All apps × {SLB, NA-RP, NA-WS} run as one vmap-batched sweep."""
 
-#: per-app settings in the spirit of paper Table I (scaled T_interval)
+from benchmarks.common import APPS, SIM, SMOKE, csv_row, emit, graph_for
+from repro.core.sweep import CaseSpec, run_cases
+
+#: per-app settings in the spirit of paper Table I (scaled T_interval);
+#: retuned with a sweep-engine grid (see docs/BENCHMARKS.md) after the
+#: thief-retry loop became early-exit (which changed the PRNG stream)
 BEST = {
     "fib": dict(n_victim=1, n_steal=1, t_interval=300, p_local=1.0),
     "nqueens": dict(n_victim=8, n_steal=1, t_interval=100, p_local=1.0),
-    "fft": dict(n_victim=12, n_steal=16, t_interval=30, p_local=1.0),
+    "fft": dict(n_victim=1, n_steal=8, t_interval=30, p_local=1.0),
     "fp": dict(n_victim=12, n_steal=16, t_interval=100, p_local=1.0),
-    "health": dict(n_victim=8, n_steal=16, t_interval=30, p_local=0.5),
+    "health": dict(n_victim=4, n_steal=2, t_interval=10, p_local=0.25),
     "uts": dict(n_victim=4, n_steal=16, t_interval=100, p_local=1.0),
-    "strassen": dict(n_victim=8, n_steal=4, t_interval=30, p_local=1.0),
-    "sort": dict(n_victim=8, n_steal=8, t_interval=30, p_local=1.0),
-    "align": dict(n_victim=4, n_steal=2, t_interval=100, p_local=0.1),
+    "strassen": dict(n_victim=8, n_steal=2, t_interval=30, p_local=1.0),
+    "sort": dict(n_victim=1, n_steal=8, t_interval=30, p_local=1.0),
+    "align": dict(n_victim=1, n_steal=2, t_interval=10, p_local=1.0),
 }
 
 COUNTER_KEYS = ("self", "local", "remote", "static_push", "imm_exec",
                 "req_sent", "req_handled", "req_has_steal", "stolen",
                 "stolen_local")
 
+DLB_MODES = ("na_rp", "na_ws")
+
 
 def run():
+    apps = list(APPS)
+    graphs = [graph_for(app) for app in apps]
+    specs = []
+    for gi, app in enumerate(apps):
+        specs.append(CaseSpec(mode="xgomptb", n_workers=SIM.n_workers,
+                              n_zones=SIM.n_zones, graph=gi))
+        for mode in DLB_MODES:
+            specs.append(CaseSpec(mode=mode, n_workers=SIM.n_workers,
+                                  n_zones=SIM.n_zones, graph=gi,
+                                  **BEST[app]))
+    res = run_cases(graphs, specs, cfg=SIM)
+    assert res.completed.all(), "all cases (incl. SLB baselines) must finish"
+    per_app = 1 + len(DLB_MODES)
     rows = []
-    for app in APPS:
-        g = graph_for(app)
-        slb = run_schedule(g, mode="xgomptb", cfg=SIM)
-        row = dict(app=app, slb_ns=slb.time_ns,
-                   slb_counters={k: slb.counters[k] for k in COUNTER_KEYS})
-        for mode in ("na_rp", "na_ws"):
-            r = run_schedule(g, mode=mode,
-                             params=make_params(**BEST[app]), cfg=SIM)
-            assert r.completed
-            row[f"{mode}_ns"] = r.time_ns
-            row[f"{mode}_improvement"] = slb.time_ns / r.time_ns
-            row[f"{mode}_counters"] = {k: r.counters[k]
+    for gi, app in enumerate(apps):
+        base = gi * per_app
+        slb_ns = int(res.time_ns[base])
+        row = dict(app=app, slb_ns=slb_ns,
+                   slb_counters={k: int(res.counters[k][base])
+                                 for k in COUNTER_KEYS})
+        for mi, mode in enumerate(DLB_MODES):
+            i = base + 1 + mi
+            assert res.completed[i], (app, mode)
+            row[f"{mode}_ns"] = int(res.time_ns[i])
+            row[f"{mode}_improvement"] = slb_ns / int(res.time_ns[i])
+            row[f"{mode}_counters"] = {k: int(res.counters[k][i])
                                        for k in COUNTER_KEYS}
-            csv_row(f"dlb_best/{app}/{mode}", r.time_ns / 1e3,
+            csv_row(f"dlb_best/{app}/{mode}", res.time_ns[i] / 1e3,
                     f"{row[f'{mode}_improvement']:.2f}x over SLB")
         rows.append(row)
     emit(rows, "dlb_best")
     # paper: NA-WS achieves at least (near-)parity on every app, and large
-    # apps gain substantially from DLB
-    big = [r for r in rows if r["app"] in ("sort", "strassen")]
-    assert any(max(r["na_rp_improvement"], r["na_ws_improvement"]) > 1.15
-               for r in big), "coarse apps must benefit from DLB"
+    # apps gain substantially from DLB (only at full scale, not CI smoke)
+    if not SMOKE:
+        big = [r for r in rows if r["app"] in ("sort", "strassen")]
+        assert any(max(r["na_rp_improvement"], r["na_ws_improvement"]) > 1.15
+                   for r in big), "coarse apps must benefit from DLB"
     return rows

@@ -1,50 +1,103 @@
 """Figs. 9/10 + Table IV: DLB improvement over SLB as a function of task size
-and steal size  S_steal = N_steal * N_victim / log10(T_interval)."""
+and steal size  S_steal = N_steal * N_victim / log10(T_interval).
 
+Driven by the vectorized sweep engine (repro.core.sweep): the full
+apps × modes × DLB-knob grid runs in a couple of compiled, vmap-batched
+calls instead of one ``jit`` dispatch per configuration.  The legacy serial
+loop survives as ``run_serial_loop`` — benchmarks/sweep_bench.py times both
+paths and records the speedup in BENCH_sweep.json.
+"""
+
+import itertools
 import math
 
-from benchmarks.common import SIM, csv_row, emit, graph_for
+from benchmarks.common import SIM, SMOKE, csv_row, emit, graph_for
 from repro.core import make_params, run_schedule
+from repro.core.sweep import CaseSpec, run_cases
 
 #: apps spanning the paper's task-size buckets
-SWEEP_APPS = ("fib", "nqueens", "health", "fft", "sort")
-GRID = dict(
-    n_victim=(1, 4, 12),
-    n_steal=(1, 8, 32),
-    t_interval=(30, 300),
-    p_local=(1.0, 0.25),
-)
+SWEEP_APPS = ("fib",) if SMOKE else ("fib", "nqueens", "health", "fft", "sort")
+GRID = (dict(n_victim=(1, 4), n_steal=(8,), t_interval=(30,), p_local=(1.0,))
+        if SMOKE else
+        dict(n_victim=(1, 4, 12), n_steal=(1, 8, 32), t_interval=(30, 300),
+             p_local=(1.0, 0.25)))
+
+
+def grid_specs(graph_idx: int = 0):
+    """One app's worth of cases: the SLB baseline first, then the full
+    NA-RP / NA-WS knob grid (same order as the legacy serial loop)."""
+    specs = [CaseSpec(mode="xgomptb", n_workers=SIM.n_workers,
+                      n_zones=SIM.n_zones, graph=graph_idx)]
+    for mode in ("na_rp", "na_ws"):
+        for nv, ns, ti, pl in itertools.product(
+                GRID["n_victim"], GRID["n_steal"], GRID["t_interval"],
+                GRID["p_local"]):
+            specs.append(CaseSpec(
+                mode=mode, n_workers=SIM.n_workers, n_zones=SIM.n_zones,
+                n_victim=nv, n_steal=ns, t_interval=ti, p_local=pl,
+                graph=graph_idx))
+    return specs
+
+
+def _rows_from(res, graphs):
+    """Convert a SweepResult of concatenated per-app grids to the historical
+    row schema (improvement over that app's SLB baseline)."""
+    per_app = len(grid_specs(0))
+    rows = []
+    for gi, g in enumerate(graphs):
+        base = gi * per_app
+        slb_ns = int(res.time_ns[base])
+        for i in range(base + 1, base + per_app):
+            s = res.specs[i]
+            imp = slb_ns / int(res.time_ns[i])
+            rows.append(dict(
+                app=SWEEP_APPS[gi], mode=s.mode, task_ns=g.mean_task_ns,
+                n_victim=s.n_victim, n_steal=s.n_steal,
+                t_interval=s.t_interval, p_local=s.p_local,
+                s_steal=s.n_steal * s.n_victim / math.log10(s.t_interval),
+                improvement=imp))
+    return rows
 
 
 def run():
-    rows = []
+    graphs = [graph_for(app) for app in SWEEP_APPS]
+    specs = [s for gi in range(len(graphs)) for s in grid_specs(gi)]
+    res = run_cases(graphs, specs, cfg=SIM)
+    assert res.completed.all(), "sweep configs must complete"
+    rows = _rows_from(res, graphs)
     for app in SWEEP_APPS:
-        g = graph_for(app)
-        slb = run_schedule(g, mode="xgomptb", cfg=SIM)
+        g = graphs[SWEEP_APPS.index(app)]
         for mode in ("na_rp", "na_ws"):
-            best = None
-            for nv in GRID["n_victim"]:
-                for ns in GRID["n_steal"]:
-                    for ti in GRID["t_interval"]:
-                        for pl in GRID["p_local"]:
-                            r = run_schedule(
-                                g, mode=mode,
-                                params=make_params(nv, ns, ti, pl), cfg=SIM)
-                            imp = slb.time_ns / r.time_ns
-                            s_steal = ns * nv / math.log10(ti)
-                            rec = dict(app=app, mode=mode,
-                                       task_ns=g.mean_task_ns, n_victim=nv,
-                                       n_steal=ns, t_interval=ti, p_local=pl,
-                                       s_steal=s_steal, improvement=imp)
-                            rows.append(rec)
-                            if best is None or imp > best["improvement"]:
-                                best = rec
+            cand = [r for r in rows if r["app"] == app and r["mode"] == mode]
+            best = max(cand, key=lambda r: r["improvement"])
             csv_row(f"param_sweep/{app}/{mode}",
                     g.mean_task_ns / 1e-3 * 1e-3,
                     f"best {best['improvement']:.2f}x at "
                     f"S_steal={best['s_steal']:.1f} "
                     f"p_local={best['p_local']}")
     emit(rows, "param_sweep")
+    return rows
+
+
+def run_serial_loop():
+    """Legacy path: one ``run_schedule`` dispatch per configuration.  Kept as
+    the before-side of BENCH_sweep.json's before/after comparison."""
+    rows = []
+    for app in SWEEP_APPS:
+        g = graph_for(app)
+        slb = run_schedule(g, mode="xgomptb", cfg=SIM)
+        for spec in grid_specs()[1:]:
+            r = run_schedule(
+                g, mode=spec.mode, cfg=SIM,
+                params=make_params(spec.n_victim, spec.n_steal,
+                                   spec.t_interval, spec.p_local))
+            rows.append(dict(
+                app=app, mode=spec.mode, task_ns=g.mean_task_ns,
+                n_victim=spec.n_victim, n_steal=spec.n_steal,
+                t_interval=spec.t_interval, p_local=spec.p_local,
+                s_steal=(spec.n_steal * spec.n_victim
+                         / math.log10(spec.t_interval)),
+                improvement=slb.time_ns / r.time_ns))
     return rows
 
 

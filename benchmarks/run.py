@@ -6,14 +6,20 @@ balance study and the roofline aggregation.
     PYTHONPATH=src python -m benchmarks.run posp_throughput  # one
 """
 
+import os
 import sys
 import time
+
+# The simulator step is hundreds of small int ops; XLA:CPU's thunk runtime
+# adds per-op overhead that the legacy emitter avoids (~20% wall-clock on
+# the sweeps).  Must be set before jax initializes, so: before suite imports.
+os.environ.setdefault("XLA_FLAGS", "--xla_cpu_use_thunk_runtime=false")
 
 
 def main() -> None:
     from benchmarks import (bots_speedup, dlb_best, guidelines, moe_balance,
                             param_sweep, posp_throughput, roofline,
-                            thread_scaling, timeline)
+                            sweep_bench, thread_scaling, timeline)
 
     suites = {
         "bots_speedup": bots_speedup.run,        # Fig. 4 / Fig. 5
@@ -25,8 +31,13 @@ def main() -> None:
         "guidelines": guidelines.run,            # Fig. 11
         "moe_balance": moe_balance.run,          # beyond-paper DLB-for-MoE
         "roofline": roofline.run,                # §Roofline aggregation
+        "sweep_bench": sweep_bench.run,          # engine before/after timing
     }
     only = set(sys.argv[1:])
+    unknown = only - set(suites)
+    if unknown:
+        raise SystemExit(f"unknown suite(s): {sorted(unknown)}; "
+                         f"available: {sorted(suites)}")
     failures = []
     for name, fn in suites.items():
         if only and name not in only:

@@ -2,13 +2,17 @@
 NUMA-aware dynamic load balancing — as (a) a faithful scheduler simulator and
 (b) jittable routing policies used by the TPU training/serving stack."""
 
-from repro.core import balance, barrier, dlb, messaging, taskgraph, xqueue
+from repro.core import balance, barrier, dlb, messaging, sweep, taskgraph, \
+    xqueue
 from repro.core.costs import DEFAULT_COSTS, CostModel
-from repro.core.scheduler import (MODES, Params, SimConfig, SimResult,
-                                  make_params, run_schedule)
+from repro.core.scheduler import (MODES, GraphArrays, Params, SimConfig,
+                                  SimResult, SweepCase, graph_arrays,
+                                  make_case, make_params, run_schedule)
+from repro.core.sweep import CaseSpec, SweepResult, run_cases, run_grid
 
 __all__ = [
-    "balance", "barrier", "dlb", "messaging", "taskgraph", "xqueue",
+    "balance", "barrier", "dlb", "messaging", "sweep", "taskgraph", "xqueue",
     "DEFAULT_COSTS", "CostModel", "MODES", "Params", "SimConfig", "SimResult",
-    "make_params", "run_schedule",
+    "SweepCase", "GraphArrays", "graph_arrays", "make_case", "make_params",
+    "run_schedule", "CaseSpec", "SweepResult", "run_cases", "run_grid",
 ]

@@ -41,9 +41,12 @@ def zone_of(w: jax.Array, zone_size: int) -> jax.Array:
     return w // zone_size
 
 
-def pick_victim(rng: jax.Array, me: jax.Array, n_workers: int, zone_size: int,
+def pick_victim(rng: jax.Array, me: jax.Array, n_workers, zone_size,
                 p_local: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Random victim != me; same zone with probability ``p_local``.
+
+    ``n_workers`` and ``zone_size`` may be Python ints or traced scalars (the
+    batched sweep engine varies both under one compiled shape).
 
     Returns (rng', victim). Degenerate topologies (single zone / 1-wide zones)
     fall back to whichever side has candidates.
@@ -90,37 +93,114 @@ def rp_adopt(rp: RPState, thief: jax.Array, n_steal: jax.Array,
 
 def ws_transfer(xq: xqueue.XQ, victim_mask: jax.Array, thief: jax.Array,
                 n_steal: jax.Array, clock: jax.Array, comm_cost: jax.Array,
-                deq_rr: jax.Array, ws_cap: int):
+                deq_rr: jax.Array, ws_cap: int, n_active=None):
     """Alg. 4: each victim moves up to ``n_steal`` tasks from its own queues to
-    queue ``(thief, victim)``.  Vectorized over victims; the per-task loop is a
-    ``fori_loop`` bounded by the static ``ws_cap``.
+    queue ``(thief, victim)``, stopping on own-empty or target-full.
 
-    Returns (xq', clock', stolen_count, src_empty, tgt_full).
+    The paper's while loop pops one task at a time: the victim drains its
+    queues in dequeue scan order (master first, then the rotated auxiliaries)
+    and appends to the thief's queue until ``n_steal`` tasks moved, its own
+    queues ran dry, or the target filled.  Because the scan rotation is fixed
+    for the whole transfer and the target queue ``(thief, victim)`` is never
+    one of the victim's own sources, the loop's effect is *closed-form*: the
+    transfer count is ``k = min(n_steal, ws_cap, available, target_free)``,
+    the r-th moved task is the r-th element of the scan-order concatenation
+    of the victim's queues, and per-source take counts are a waterfall over
+    the scan-order prefix sums.  This computes that directly — one gather +
+    one one-hot write instead of up to ``ws_cap`` full-buffer loop
+    iterations — and is bitwise identical to the loop (timestamps included:
+    the r-th task is stamped ``max(clock + r·comm, ts) + comm``).
+
+    ``n_active`` (traced) restricts the scan to live workers under a padded
+    shape.  Returns (xq', clock', stolen_count, src_empty, tgt_full).
     """
     W = xq.head.shape[0]
-    me = jnp.arange(W, dtype=jnp.int32)
-
-    def body(_i, carry):
-        xq_c, clock_c, stolen, src_empty, tgt_full = carry
-        # Alg. 4 while-condition: check target occupancy BEFORE popping so a
-        # popped task always has a destination (no task is ever lost).
-        q_cap = xqueue.capacity(xq_c)
-        tgt_free = (xq_c.tail[thief, me] - xq_c.head[thief, me]) < q_cap
-        want = victim_mask & (stolen < n_steal)
-        tgt_full = tgt_full | (want & ~tgt_free)
-        active = want & tgt_free
-        xq_c, task, ts, _src, found, _checked = xqueue.pop_first(
-            xq_c, deq_rr, active)
-        src_empty = src_empty | (active & ~found)
-        push_ts = jnp.maximum(clock_c, ts) + comm_cost
-        xq_c, ok = xqueue.push(xq_c, me, jnp.where(found, thief, me),
-                               task, push_ts, found)
-        clock_c = clock_c + jnp.where(found, comm_cost, 0)
-        stolen = stolen + (found & ok).astype(jnp.int32)
-        return xq_c, clock_c, stolen, src_empty, tgt_full
-
     zeros = jnp.zeros(W, jnp.int32)
     false = jnp.zeros(W, bool)
-    xq, clock, stolen, src_empty, tgt_full = jax.lax.fori_loop(
-        0, ws_cap, body, (xq, clock, zeros, false, false))
-    return xq, clock, stolen, src_empty, tgt_full
+
+    # gate the whole transfer behind a one-shot while loop: on the many
+    # scheduling points with no valid steal request the body never executes
+    # (lax.cond would not survive vmap — it batches to a select that still
+    # evaluates both branches)
+    def cond(carry):
+        return carry[0] & jnp.any(victim_mask)
+
+    def body(carry):
+        _, xq_c, clock_c, _, _, _ = carry
+        out = _ws_bulk(xq_c, victim_mask, thief, n_steal, clock_c,
+                       comm_cost, deq_rr, ws_cap, n_active)
+        return (jnp.asarray(False),) + out
+
+    carry = jax.lax.while_loop(
+        cond, body, (jnp.asarray(True), xq, clock, zeros, false, false))
+    return carry[1], carry[2], carry[3], carry[4], carry[5]
+
+
+def _ws_bulk(xq: xqueue.XQ, victim_mask, thief, n_steal, clock, comm_cost,
+             deq_rr, ws_cap: int, n_active):
+    W = xq.head.shape[0]
+    Q = xqueue.capacity(xq)
+    if n_active is None:
+        n_active = W
+    me = jnp.arange(W, dtype=jnp.int32)
+    n_steal = jnp.minimum(n_steal, jnp.int32(ws_cap))
+
+    order, valid = xqueue._scan_order(W, me, deq_rr, n_active)   # (W, W)
+    sz = xq.tail - xq.head                                       # (W, W)
+    sz_ord = jnp.where(valid, jnp.take_along_axis(sz, order, axis=1), 0)
+    cum = jnp.cumsum(sz_ord, axis=1)
+    avail = cum[:, -1]
+    cum_before = cum - sz_ord
+    free0 = Q - (xq.tail[thief, me] - xq.head[thief, me])
+    k = jnp.minimum(n_steal, jnp.minimum(avail, free0))
+    k = jnp.where(victim_mask, jnp.maximum(k, 0), 0)
+    # failure flags, exactly as the loop would observe them: another
+    # iteration would still want a task (k < n_steal) and finds the target
+    # full (k == free0; checked BEFORE popping, so no task is ever lost) or
+    # its own queues empty (k == avail with target space left)
+    can_more = victim_mask & (k < n_steal)
+    tgt_full = can_more & (k == free0)
+    src_empty = can_more & (free0 > k) & (k == avail)
+
+    # source of the r-th moved task: first scan-order queue whose prefix sum
+    # exceeds r, at offset r - cum_before (k <= Q, so r ranges over [0, Q))
+    r_iota = jnp.arange(Q, dtype=jnp.int32)[None, :]             # (1, Q)
+    j_r = jnp.sum(cum[:, None, :] <= r_iota[:, :, None],
+                  axis=2).astype(jnp.int32)                      # (W, Q)
+    j_r = jnp.minimum(j_r, W - 1)
+    src_r = jnp.take_along_axis(order, j_r, axis=1)              # (W, Q)
+    off_r = r_iota - jnp.take_along_axis(cum_before, j_r, axis=1)
+    slot_r = (xq.head[me[:, None], src_r] + off_r) % Q
+    task_r = xq.buf[me[:, None], src_r, slot_r]                  # (W, Q)
+    ts_r = xq.ts[me[:, None], src_r, slot_r]
+    take_r = r_iota < k[:, None]
+    push_ts_r = jnp.maximum(clock[:, None] + r_iota * comm_cost[:, None],
+                            ts_r) + comm_cost[:, None]
+
+    # destination slot of task r is (tail0 + r) % Q in queue (thief, me):
+    # express per physical slot q via r = (q - tail0) % Q, then write the
+    # whole batch with one one-hot select over the consumer dimension
+    tail0 = xq.tail[thief, me]
+    q_iota = jnp.arange(Q, dtype=jnp.int32)[None, :]
+    r_of_q = (q_iota - tail0[:, None]) % Q                       # (W, Q)
+    val_q = jnp.take_along_axis(task_r, r_of_q, axis=1)
+    tsv_q = jnp.take_along_axis(push_ts_r, r_of_q, axis=1)
+    wr_q = jnp.take_along_axis(take_r, r_of_q, axis=1)
+    one_c = me[:, None] == thief[None, :]                        # (Wc, Wv)
+    upd = one_c[:, :, None] & wr_q[None, :, :]                   # (Wc, Wv, Q)
+    buf = jnp.where(upd, val_q[None, :, :], xq.buf)
+    tsb = jnp.where(upd, tsv_q[None, :, :], xq.ts)
+    tail = xq.tail + jnp.where(one_c, k[None, :], 0)
+
+    # per-source head advance: invert the scan order analytically
+    p_iota = me[None, :]
+    n_act = jnp.maximum(n_active, 1)
+    pos_p = xqueue.scan_pos(W, me, deq_rr, n_active)             # (W, W)
+    cb_p = jnp.take_along_axis(cum_before,
+                               jnp.minimum(pos_p, W - 1), axis=1)
+    take_p = jnp.clip(k[:, None] - cb_p, 0, jnp.maximum(sz, 0))
+    take_p = jnp.where(p_iota < n_act, take_p, 0)
+    head = xq.head + take_p
+
+    clock = clock + k * comm_cost
+    return xqueue.XQ(buf, tsb, head, tail), clock, k, src_empty, tgt_full

@@ -22,12 +22,24 @@ pending spawned tasks (up to K_SPAWN), or tries to dequeue-and-execute one
 task; idle workers run the thief protocol.  All phases are vectorized over
 workers; lock-less "owner writes only" discipline holds per phase by
 construction (see xqueue.py).
+
+Batching (the sweep engine's contract): the entire simulator state is a flat
+pytree of fixed-shape arrays, and every per-configuration knob — the mode id,
+the active worker count, the NUMA zone size, the RNG seed, the memory-bound
+fraction, and the DLB parameters — is a *traced* scalar carried in
+``SweepCase``.  Mode selection is pure mask arithmetic (``jnp.where`` over the
+five MODES), never Python ``if``, so ``step``/``_run_jit`` are safely
+``jax.vmap``-able over a leading batch axis of cases (see sweep.py).  Worker
+counts below the padded width ``W`` leave the extra lanes provably inert:
+padded workers never hold stack entries, are masked out of every dequeue /
+thief mask, and all round-robin / victim arithmetic is modulo the traced
+``n_workers``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +51,7 @@ from repro.core.costs import DEFAULT_COSTS, CostModel
 from repro.core.taskgraph import TaskGraph
 
 MODES = ("gomp", "xgomp", "xgomptb", "na_rp", "na_ws")
+MODE_ID = {m: i for i, m in enumerate(MODES)}
 
 # counters (paper §V)
 CTR_NAMES = (
@@ -70,12 +83,65 @@ def make_params(n_victim=4, n_steal=8, t_interval=100, p_local=1.0) -> Params:
                   jnp.int32(t_interval), jnp.float32(p_local))
 
 
-class _Graph(NamedTuple):
+class SweepCase(NamedTuple):
+    """One fully-traced simulator configuration.
+
+    Every field is a scalar array, so a batch of cases is just this pytree
+    with a leading axis — ``jax.vmap`` over it runs a whole mode × workers ×
+    seeds × DLB-knob grid in one compiled call.
+    """
+    mode_id: jax.Array    # int32 index into MODES
+    n_workers: jax.Array  # int32 active workers (≤ the padded static width)
+    zone_size: jax.Array  # int32 workers per NUMA zone
+    seed: jax.Array       # int32 PRNG seed
+    mem_bound: jax.Array  # float32 memory-bound fraction of task runtime
+    params: Params
+
+
+def make_case(mode: str | int, n_workers: int, zone_size: int, seed: int = 0,
+              mem_bound: float = 0.0, params: Params | None = None
+              ) -> SweepCase:
+    mid = MODE_ID[mode] if isinstance(mode, str) else int(mode)
+    return SweepCase(
+        mode_id=jnp.int32(mid), n_workers=jnp.int32(n_workers),
+        zone_size=jnp.int32(zone_size), seed=jnp.int32(seed),
+        mem_bound=jnp.float32(mem_bound),
+        params=params if params is not None else make_params())
+
+
+class GraphArrays(NamedTuple):
+    """Device-side task graph (see taskgraph.py for the encoding).
+
+    ``n_tasks`` is traced so graphs padded to a common length batch together:
+    padding tasks are never spawned, never notified, and termination compares
+    ``n_done`` against the *true* task count.
+    """
     dur: jax.Array
     first_child: jax.Array
     n_children: jax.Array
     notify: jax.Array
     join_dep: jax.Array
+    n_tasks: jax.Array    # int32 scalar — true (unpadded) task count
+
+
+def graph_arrays(graph: TaskGraph, pad_to: int | None = None) -> GraphArrays:
+    """Lift a host TaskGraph to device arrays, optionally padded to a common
+    length with inert tasks (dur 0, no children, no notify target)."""
+    T = graph.n_tasks
+    P = max(pad_to or T, T)
+
+    def pad(a, fill):
+        a = np.asarray(a, np.int32)
+        if P == T:
+            return jnp.asarray(a)
+        out = np.full(P, fill, np.int32)
+        out[:T] = a
+        return jnp.asarray(out)
+
+    return GraphArrays(
+        dur=pad(graph.dur, 0), first_child=pad(graph.first_child, 0),
+        n_children=pad(graph.n_children, 0), notify=pad(graph.notify, -1),
+        join_dep=pad(graph.join_dep, 0), n_tasks=jnp.int32(T))
 
 
 class SimState(NamedTuple):
@@ -125,7 +191,7 @@ class SimResult:
         return self.counters["exec"] / max(self.time_ns, 1) * 1e9
 
 
-def _comm(costs: CostModel, a, b, zsz: int):
+def _comm(costs: CostModel, a, b, zsz):
     same = a == b
     same_zone = (a // zsz) == (b // zsz)
     return jnp.where(same, costs.c_cache,
@@ -141,17 +207,19 @@ def _bump(ctr, name, mask_or_val):
 
 def _stack_push(st: SimState, mask, task0, cnt) -> SimState:
     W, S = st.s_task.shape
-    me = jnp.arange(W)
     idx = jnp.where(mask & (st.s_top < S), st.s_top, S)
-    s_task = st.s_task.at[me, idx].set(task0, mode="drop")
-    s_cnt = st.s_cnt.at[me, idx].set(cnt, mode="drop")
+    # one entry per worker row: one-hot select, not a scatter (idx == S
+    # matches no column, preserving the drop semantics)
+    one = jnp.arange(S, dtype=jnp.int32)[None, :] == idx[:, None]
+    s_task = jnp.where(one, task0[:, None], st.s_task)
+    s_cnt = jnp.where(one, cnt[:, None], st.s_cnt)
     s_top = st.s_top + (mask & (st.s_top < S)).astype(jnp.int32)
     overflow = st.overflow | jnp.any(mask & (st.s_top >= S))
     return st._replace(s_task=s_task, s_cnt=s_cnt, s_top=s_top,
                        overflow=overflow)
 
 
-def _finish(st: SimState, ftask, g: _Graph, W: int) -> SimState:
+def _finish(st: SimState, ftask, g: GraphArrays, W: int) -> SimState:
     """Completion bookkeeping for per-worker finished tasks (-1 = none):
     spawn-range entries go on the finisher's own stack; the notify target's
     dependency count drops; a join reaching zero is claimed by exactly one
@@ -171,12 +239,27 @@ def _finish(st: SimState, ftask, g: _Graph, W: int) -> SimState:
     jsafe = jnp.where(j >= 0, j, T)
     join_cnt = st.join_cnt.at[jsafe].add(-1, mode="drop")
     newly = (j >= 0) & (join_cnt[jnp.where(j >= 0, j, 0)] == 0)
-    claim = jnp.full((T,), W, jnp.int32).at[
-        jnp.where(newly, j, T)].min(me, mode="drop")
-    mine = newly & (claim[jnp.where(newly, j, 0)] == me)
-    creator = st.creator.at[jnp.where(mine, j, T)].set(me, mode="drop")
-    st = st._replace(join_cnt=join_cnt, creator=creator)
-    return _stack_push(st, mine, j, jnp.ones(W, jnp.int32))
+    st = st._replace(join_cnt=join_cnt)
+
+    # a join becomes ready only occasionally; the (T,)-sized claim
+    # machinery runs behind a one-shot while so other steps skip it
+    def cond(carry):
+        return carry[0] & jnp.any(newly)
+
+    def body(carry):
+        _, st_c = carry
+        # the lowest-id finisher among those completing the same join claims
+        # it — a (W, W) pairwise tie-break, equivalent to the scatter-min
+        # over task ids but without materializing a (T,)-sized array
+        same = newly[:, None] & newly[None, :] & (j[:, None] == j[None, :])
+        mine = newly & (jnp.argmax(same, axis=1).astype(jnp.int32) == me)
+        creator = st_c.creator.at[jnp.where(mine, j, T)].set(me, mode="drop")
+        st_c = _stack_push(st_c._replace(creator=creator), mine, j,
+                           jnp.ones(W, jnp.int32))
+        return jnp.asarray(False), st_c
+
+    _, st = jax.lax.while_loop(cond, body, (jnp.asarray(True), st))
+    return st
 
 
 def _atomic_charge(st: SimState, mask, costs: CostModel) -> SimState:
@@ -188,188 +271,244 @@ def _atomic_charge(st: SimState, mask, costs: CostModel) -> SimState:
                        ctr=_bump(st.ctr, "atomic_ops", mask))
 
 
-def _build_step(mode: str, W: int, zsz: int, S: int, costs: CostModel,
-                g: _Graph, params: Params, mem_bound: float = 0.0):
+def _build_step(W: int, S: int, costs: CostModel, g: GraphArrays,
+                case: SweepCase, max_steps: int):
+    """The per-scheduling-point transition.  ``W``/``S``/``max_steps`` are
+    static; everything configuration-dependent lives in the traced ``case``,
+    and all mode branching is mask arithmetic — no Python control flow — so
+    the returned ``step`` vmaps over a batch of cases.
+
+    Every phase is additionally gated on ``running`` (the loop's own
+    termination predicate): once a simulation finishes, its step is a strict
+    no-op.  That lets the batched engine drive a plain ``while any(running)``
+    loop over vmapped steps without per-element freeze/select machinery —
+    finished batch elements simply stop changing."""
     me = jnp.arange(W, dtype=jnp.int32)
     T = g.dur.shape[0]
-    GQ = None
+    n_w = case.n_workers
+    zsz = case.zone_size
+    params = case.params
+    active_w = me < n_w
+
+    is_gomp = case.mode_id == 0
+    is_xgomp = case.mode_id == 1
+    is_narp = case.mode_id == 3
+    is_naws = case.mode_id == 4
+    uses_xq = ~is_gomp
+    is_dlb = is_narp | is_naws
 
     def zone(x):
         return x // zsz
 
     # ---------------- phase A: push spawned tasks ----------------
-    def spawn_phase(st: SimState) -> SimState:
+    def spawn_phase(st: SimState, running) -> SimState:
         for _ in range(K_SPAWN):
-            active = st.s_top > 0
+            active = (st.s_top > 0) & running
             topi = jnp.maximum(st.s_top - 1, 0)
             etask = st.s_task[me, topi]
             ecnt = st.s_cnt[me, topi]
             task = jnp.where(active, etask, 0)
 
-            if mode == "gomp":
-                # serialized global-lock push (lock + pq op + malloc)
-                rank = jnp.cumsum(active.astype(jnp.int32)) - 1
-                cost = jnp.where(
-                    active,
-                    costs.c_atomic + costs.c_pq_op + costs.c_alloc
-                    + rank * costs.c_lock, 0)
-                clock = st.clock + cost
-                gq = st.g_buf.shape[0]
-                gidx = jnp.where(active, (st.g_tail + rank) % gq, gq)
-                g_buf = st.g_buf.at[gidx].set(task, mode="drop")
-                g_ts = st.g_ts.at[gidx].set(clock, mode="drop")
-                g_tail = st.g_tail + jnp.sum(active, dtype=jnp.int32)
-                ctr = _bump(st.ctr, "static_push", active)
-                ctr = _bump(ctr, "atomic_ops", active)
-                creator = st.creator.at[
-                    jnp.where(active, task, T)].set(me, mode="drop")
-                st = st._replace(g_buf=g_buf, g_ts=g_ts, g_tail=g_tail,
-                                 clock=clock, ctr=ctr, creator=creator)
-                pushed = active
-                imm = jnp.zeros(W, bool)
-            else:
-                if mode == "na_rp":
-                    use_rp = active & (st.rp.tgt >= 0) & (st.rp.left > 0)
-                    tgt = jnp.where(use_rp, jnp.maximum(st.rp.tgt, 0),
-                                    st.rr % W)
-                else:
-                    use_rp = jnp.zeros(W, bool)
-                    tgt = st.rr % W
-                cost = jnp.where(
-                    active,
-                    costs.c_alloc + costs.c_slot + _comm(costs, me, tgt, zsz),
-                    0)
-                clock = st.clock + cost
-                xq, ok = xqueue.push(st.xq, me, tgt, task, clock, active)
-                pushed = ok
-                imm = active & ~ok
-                rr = st.rr + (active & ~use_rp).astype(jnp.int32)
-                creator = st.creator.at[
-                    jnp.where(active, task, T)].set(me, mode="drop")
-                ctr = _bump(st.ctr, "static_push", pushed & ~use_rp)
-                ctr = _bump(ctr, "stolen", pushed & use_rp)  # redirections
-                ctr = _bump(ctr, "stolen_local",
-                            pushed & use_rp & (zone(me) == zone(tgt)))
-                ctr = _bump(ctr, "stolen_remote",
-                            pushed & use_rp & (zone(me) != zone(tgt)))
-                if mode == "na_rp":
-                    # Alg. 3: stop on quota exhausted or thief queue full
-                    left = st.rp.left - (pushed & use_rp).astype(jnp.int32)
-                    drop = (use_rp & ~ok) | (left <= 0)
-                    rp = dlb.RPState(tgt=jnp.where(drop, -1, st.rp.tgt),
-                                     left=jnp.where(drop, 0, left))
-                    ctr = _bump(ctr, "tgt_full", use_rp & ~ok)
-                    st = st._replace(rp=rp)
-                st = st._replace(xq=xq, clock=clock, rr=rr, ctr=ctr,
-                                 creator=creator)
-                if mode == "xgomp":   # atomic global count: task created
-                    st = _atomic_charge(st, active, costs)
+            # --- GOMP lane: serialized global-lock push (lock + pq + malloc)
+            act_g = active & is_gomp
+            rank_g = jnp.cumsum(act_g.astype(jnp.int32)) - 1
+            cost_g = jnp.where(
+                act_g,
+                costs.c_atomic + costs.c_pq_op + costs.c_alloc
+                + rank_g * costs.c_lock, 0)
 
-            # consume one task from the range entry
+            # --- XQueue lane (all other modes), with NA-RP redirection
+            act_x = active & uses_xq
+            use_rp = act_x & is_narp & (st.rp.tgt >= 0) & (st.rp.left > 0)
+            tgt = jnp.where(use_rp, jnp.maximum(st.rp.tgt, 0), st.rr % n_w)
+            cost_x = jnp.where(
+                act_x,
+                costs.c_alloc + costs.c_slot + _comm(costs, me, tgt, zsz), 0)
+
+            clock = st.clock + cost_g + cost_x
+            gq = st.g_buf.shape[0]
+            gidx = jnp.where(act_g, (st.g_tail + rank_g) % gq, gq)
+            g_buf = st.g_buf.at[gidx].set(task, mode="drop")
+            g_ts = st.g_ts.at[gidx].set(clock, mode="drop")
+            g_tail = st.g_tail + jnp.sum(act_g, dtype=jnp.int32)
+
+            xq, ok = xqueue.push(st.xq, me, tgt, task, clock, act_x)
+            pushed_x = ok
+            imm = act_x & ~ok
+            rr = st.rr + (act_x & ~use_rp).astype(jnp.int32)
+            creator = st.creator.at[
+                jnp.where(active, task, T)].set(me, mode="drop")
+
+            ctr = _bump(st.ctr, "static_push", act_g | (pushed_x & ~use_rp))
+            ctr = _bump(ctr, "atomic_ops", act_g)
+            ctr = _bump(ctr, "stolen", pushed_x & use_rp)  # redirections
+            ctr = _bump(ctr, "stolen_local",
+                        pushed_x & use_rp & (zone(me) == zone(tgt)))
+            ctr = _bump(ctr, "stolen_remote",
+                        pushed_x & use_rp & (zone(me) != zone(tgt)))
+            # Alg. 3: stop on quota exhausted or thief queue full
+            left = st.rp.left - (pushed_x & use_rp).astype(jnp.int32)
+            drop = (use_rp & ~ok) | (left <= 0)
+            rp = dlb.RPState(tgt=jnp.where(drop, -1, st.rp.tgt),
+                             left=jnp.where(drop, 0, left))
+            ctr = _bump(ctr, "tgt_full", use_rp & ~ok)
+            st = st._replace(xq=xq, g_buf=g_buf, g_ts=g_ts, g_tail=g_tail,
+                             clock=clock, rr=rr, rp=rp, ctr=ctr,
+                             creator=creator)
+            # atomic global count: task created (XGOMP only)
+            st = _atomic_charge(st, active & is_xgomp, costs)
+
+            # consume one task from the range entry (one-hot row update)
             sidx = jnp.where(active, topi, S)
-            s_task = st.s_task.at[me, sidx].set(etask + 1, mode="drop")
-            s_cnt = st.s_cnt.at[me, sidx].set(ecnt - 1, mode="drop")
+            one = jnp.arange(S, dtype=jnp.int32)[None, :] == sidx[:, None]
+            s_task = jnp.where(one, (etask + 1)[:, None], st.s_task)
+            s_cnt = jnp.where(one, (ecnt - 1)[:, None], st.s_cnt)
             s_top = jnp.where(active & (ecnt - 1 == 0), st.s_top - 1,
                               st.s_top)
             st = st._replace(s_task=s_task, s_cnt=s_cnt, s_top=s_top)
 
-            # execute-immediately rule for full target queues (paper §II-B)
-            dur_t = jnp.where(imm, g.dur[task], 0)
-            ctr = _bump(st.ctr, "imm_exec", imm)
-            ctr = _bump(ctr, "exec", imm)
-            ctr = _bump(ctr, "self", imm)
-            ctr = _bump(ctr, "busy_ns", dur_t)
-            st = st._replace(clock=st.clock + dur_t, ctr=ctr)
-            st = _finish(st, jnp.where(imm, task, -1), g, W)
-            if mode == "xgomp":       # task finished -> atomic decrement
-                st = _atomic_charge(st, imm, costs)
+            # execute-immediately rule for full target queues (paper §II-B):
+            # queues rarely fill, so the whole block is a one-shot while
+            def imm_cond(carry):
+                return carry[0] & jnp.any(imm)
+
+            def imm_body(carry):
+                _, st_c = carry
+                dur_t = jnp.where(imm, g.dur[task], 0)
+                ctr = _bump(st_c.ctr, "imm_exec", imm)
+                ctr = _bump(ctr, "exec", imm)
+                ctr = _bump(ctr, "self", imm)
+                ctr = _bump(ctr, "busy_ns", dur_t)
+                st_c = st_c._replace(clock=st_c.clock + dur_t, ctr=ctr)
+                st_c = _finish(st_c, jnp.where(imm, task, -1), g, W)
+                # task finished -> atomic decrement (XGOMP only)
+                st_c = _atomic_charge(st_c, imm & is_xgomp, costs)
+                return jnp.asarray(False), st_c
+
+            _, st = jax.lax.while_loop(imm_cond, imm_body,
+                                       (jnp.asarray(True), st))
         return st
 
     # ---------------- phase B: dequeue ----------------
-    def dequeue_phase(st: SimState):
-        idle_m = st.s_top == 0
-        if mode == "gomp":
-            avail = st.g_tail - st.g_head
-            rank = jnp.cumsum(idle_m.astype(jnp.int32)) - 1
-            found = idle_m & (rank < avail)
-            gq = st.g_buf.shape[0]
-            gidx = (st.g_head + rank) % gq
-            task = jnp.where(found, st.g_buf[gidx], 0)
-            ts = jnp.where(found, st.g_ts[gidx], 0)
-            g_head = st.g_head + jnp.sum(found, dtype=jnp.int32)
-            cost = jnp.where(idle_m,
-                             costs.c_atomic + costs.c_pq_op
-                             + rank * costs.c_lock, 0)
-            ctr = _bump(st.ctr, "atomic_ops", idle_m)
-            st = st._replace(g_head=g_head, clock=st.clock + cost, ctr=ctr)
-            return st, task, ts, found
-        xq, task, ts, src, found, checked = xqueue.pop_first(
-            st.xq, st.deq_rr, idle_m)
-        cost = jnp.where(idle_m, checked * costs.c_cache, 0)
-        cost = cost + jnp.where(found, _comm(costs, me, src, zsz), 0)
-        deq_rr = st.deq_rr + (found & (src != me)).astype(jnp.int32)
-        st = st._replace(xq=xq, clock=st.clock + cost, deq_rr=deq_rr)
+    def dequeue_phase(st: SimState, running):
+        idle_m = (st.s_top == 0) & active_w & running
+
+        # --- GOMP lane: contended pops off the single global queue
+        idle_g = idle_m & is_gomp
+        avail = st.g_tail - st.g_head
+        rank = jnp.cumsum(idle_g.astype(jnp.int32)) - 1
+        found_g = idle_g & (rank < avail)
+        gq = st.g_buf.shape[0]
+        gidx = (st.g_head + rank) % gq
+        task_g = jnp.where(found_g, st.g_buf[gidx], 0)
+        ts_g = jnp.where(found_g, st.g_ts[gidx], 0)
+        g_head = st.g_head + jnp.sum(found_g, dtype=jnp.int32)
+        cost_g = jnp.where(idle_g,
+                           costs.c_atomic + costs.c_pq_op
+                           + rank * costs.c_lock, 0)
+        ctr = _bump(st.ctr, "atomic_ops", idle_g)
+
+        # --- XQueue lane: master queue then rotated aux scan
+        idle_x = idle_m & uses_xq
+        xq, task_x, ts_x, src, found_x, checked = xqueue.pop_first(
+            st.xq, st.deq_rr, idle_x, n_w)
+        cost_x = jnp.where(idle_x, checked * costs.c_cache, 0)
+        cost_x = cost_x + jnp.where(found_x, _comm(costs, me, src, zsz), 0)
+        deq_rr = st.deq_rr + (found_x & (src != me)).astype(jnp.int32)
+
+        task = jnp.where(is_gomp, task_g, task_x)
+        ts = jnp.where(is_gomp, ts_g, ts_x)
+        found = found_g | found_x
+        st = st._replace(xq=xq, g_head=g_head, deq_rr=deq_rr, ctr=ctr,
+                         clock=st.clock + cost_g + cost_x)
         return st, task, ts, found
 
     # ---------------- phase B2: thief protocol ----------------
-    def thief_phase(st: SimState, found) -> SimState:
-        thief_m = (st.s_top == 0) & ~found
+    def thief_phase(st: SimState, found, running) -> SimState:
+        thief_m = (st.s_top == 0) & ~found & active_w & is_dlb & running
         idle = jnp.where(thief_m, st.idle + 1, 0)
         do_req = thief_m & ((idle == 1) | (idle >= params.t_interval))
         idle = jnp.where(idle >= params.t_interval, 0, idle)
         st = st._replace(idle=idle)
-        for v in range(NV_CAP):
+
+        # most scheduling points have no thief at all (requests fire on the
+        # first idle step and every t_interval after); the retry loop is an
+        # early-exit while so those steps skip the victim-pick machinery.
+        # The carry holds only what the loop actually mutates — rng, the
+        # thief-written request cells, clock, a sent-count accumulator — so
+        # the (batched) loop's per-iteration select overhead never touches
+        # the big queue/stack/counter buffers.
+        rounds = st.cells.round   # victim-owned; thieves only read it
+
+        def cond(carry):
+            v = carry[0]
+            return (v < NV_CAP) & jnp.any(do_req & (v < params.n_victim))
+
+        def body(carry):
+            v, rng, req_round, req_tid, clock, n_sent = carry
             m = do_req & (v < params.n_victim)
-            rng, victim = dlb.pick_victim(st.rng, me, W, zsz, params.p_local)
-            cells, sent = messaging.thief_send(st.cells, me, victim, m)
+            rng, victim = dlb.pick_victim(rng, me, n_w, zsz, params.p_local)
+            cells, sent = messaging.thief_send(
+                messaging.Cells(rounds, req_round, req_tid), me, victim, m)
             cost = jnp.where(m, 2 * _comm(costs, me, victim, zsz), 0)
             cost = cost + jnp.where(sent, _comm(costs, me, victim, zsz), 0)
-            ctr = _bump(st.ctr, "req_sent", sent)
-            st = st._replace(rng=rng, cells=cells, clock=st.clock + cost,
-                             ctr=ctr)
-        return st
+            return (v + 1, rng, cells.req_round, cells.req_tid, clock + cost,
+                    n_sent + sent.astype(jnp.int32))
+
+        _v, rng, req_round, req_tid, clock, n_sent = jax.lax.while_loop(
+            cond, body,
+            (jnp.int32(0), st.rng, st.cells.req_round, st.cells.req_tid,
+             st.clock, jnp.zeros(W, jnp.int32)))
+        return st._replace(
+            rng=rng, cells=messaging.Cells(rounds, req_round, req_tid),
+            clock=clock, ctr=_bump(st.ctr, "req_sent", n_sent))
 
     # ---------------- phase C: victim handling + execution ----------------
     def victim_phase(st: SimState, found) -> SimState:
         valid = messaging.victim_valid(st.cells) & found
         thief = jnp.maximum(st.cells.req_tid, 0)
-        if mode == "na_ws":
-            comm_c = _comm(costs, me, thief, zsz)
-            xq, clock, stolen, src_empty, tgt_full = dlb.ws_transfer(
-                st.xq, valid, thief, params.n_steal, st.clock, comm_c,
-                st.deq_rr, WS_CAP)
-            ctr = _bump(st.ctr, "stolen", stolen)
-            ctr = _bump(ctr, "stolen_local",
-                        jnp.where(zone(me) == zone(thief), stolen, 0))
-            ctr = _bump(ctr, "stolen_remote",
-                        jnp.where(zone(me) != zone(thief), stolen, 0))
-            ctr = _bump(ctr, "req_has_steal", valid & (stolen > 0))
-            ctr = _bump(ctr, "src_empty", src_empty)
-            ctr = _bump(ctr, "tgt_full", tgt_full)
-            ctr = _bump(ctr, "req_handled", valid)
-            st = st._replace(xq=xq, clock=clock, ctr=ctr,
-                             cells=messaging.victim_advance(st.cells, valid))
-        elif mode == "na_rp":
-            rp, adopted = dlb.rp_adopt(st.rp, thief, params.n_steal, valid)
-            ctr = _bump(st.ctr, "req_handled", valid)
-            ctr = _bump(ctr, "req_has_steal", adopted)
-            st = st._replace(rp=rp, ctr=ctr,
-                             cells=messaging.victim_advance(st.cells, valid))
-        return st
+
+        # NA-WS: bulk transfer to the thief's queue (Alg. 4)
+        vm_ws = valid & is_naws
+        comm_c = _comm(costs, me, thief, zsz)
+        xq, clock, stolen, src_empty, tgt_full = dlb.ws_transfer(
+            st.xq, vm_ws, thief, params.n_steal, st.clock, comm_c,
+            st.deq_rr, WS_CAP, n_w)
+        ctr = _bump(st.ctr, "stolen", stolen)
+        ctr = _bump(ctr, "stolen_local",
+                    jnp.where(zone(me) == zone(thief), stolen, 0))
+        ctr = _bump(ctr, "stolen_remote",
+                    jnp.where(zone(me) != zone(thief), stolen, 0))
+        ctr = _bump(ctr, "req_has_steal", vm_ws & (stolen > 0))
+        ctr = _bump(ctr, "src_empty", src_empty)
+        ctr = _bump(ctr, "tgt_full", tgt_full)
+
+        # NA-RP: adopt the thief for future redirected pushes (Alg. 3)
+        vm_rp = valid & is_narp
+        rp, adopted = dlb.rp_adopt(st.rp, thief, params.n_steal, vm_rp)
+        ctr = _bump(ctr, "req_has_steal", adopted)
+
+        handled = vm_ws | vm_rp
+        ctr = _bump(ctr, "req_handled", handled)
+        return st._replace(xq=xq, clock=clock, rp=rp, ctr=ctr,
+                           cells=messaging.victim_advance(st.cells, handled))
 
     def exec_phase(st: SimState, task, ts, found) -> SimState:
         safe = jnp.where(found, task, 0)
         dur_t = jnp.where(found, g.dur[safe], 0)
-        if mem_bound > 0:
-            # memory-bound tasks run slower away from their creator's data
-            # (paper SVI-B: the locality mechanism behind the DLB gains)
-            cr0 = st.creator[safe]
-            pen = jnp.where(cr0 == me, 1.0,
-                            jnp.where(zone(cr0) == zone(me),
-                                      costs.exec_zone_penalty,
-                                      costs.exec_remote_penalty))
-            mult = 1.0 + mem_bound * (pen - 1.0)
-            dur_t = (dur_t.astype(jnp.float32) * mult).astype(jnp.int32)
+        # memory-bound tasks run slower away from their creator's data
+        # (paper SVI-B: the locality mechanism behind the DLB gains);
+        # mem_bound == 0 keeps the exact integer durations (no f32
+        # round-trip, which would perturb tasks >= 2^24 ns)
+        cr0 = st.creator[safe]
+        pen = jnp.where(cr0 == me, 1.0,
+                        jnp.where(zone(cr0) == zone(me),
+                                  costs.exec_zone_penalty,
+                                  costs.exec_remote_penalty))
+        mult = 1.0 + case.mem_bound * (pen - 1.0)
+        dur_t = jnp.where(case.mem_bound > 0,
+                          (dur_t.astype(jnp.float32) * mult).astype(jnp.int32),
+                          dur_t)
         start = jnp.maximum(st.clock, jnp.where(found, ts, 0))
         clock = jnp.where(found, start + dur_t, st.clock)
         cr = st.creator[safe]
@@ -380,37 +519,36 @@ def _build_step(mode: str, W: int, zsz: int, S: int, costs: CostModel,
         ctr = _bump(ctr, "busy_ns", dur_t)
         st = st._replace(clock=clock, ctr=ctr)
         st = _finish(st, jnp.where(found, task, -1), g, W)
-        if mode in ("gomp", "xgomp"):  # global task count decrement
-            if mode == "xgomp":
-                st = _atomic_charge(st, found, costs)
-            else:
-                st = st._replace(ctr=_bump(st.ctr, "atomic_ops", found))
-        return st
+        # global task count decrement: contended atomic for XGOMP, plain
+        # atomic op count for GOMP (already serialized on the queue lock)
+        st = _atomic_charge(st, found & is_xgomp, costs)
+        return st._replace(ctr=_bump(st.ctr, "atomic_ops", found & is_gomp))
 
     def step(st: SimState) -> SimState:
-        if mode == "na_rp":
-            # spawning workers are victims too: adopt a thief before pushing
-            spawner = st.s_top > 0
-            valid0 = messaging.victim_valid(st.cells) & spawner
-            rp, _ = dlb.rp_adopt(st.rp, jnp.maximum(st.cells.req_tid, 0),
-                                 params.n_steal, valid0)
-            st = st._replace(
-                rp=rp, cells=messaging.victim_advance(st.cells, valid0),
-                ctr=_bump(st.ctr, "req_handled", valid0))
-        st = spawn_phase(st)
-        st, task, ts, found = dequeue_phase(st)
-        if mode in ("na_rp", "na_ws"):
-            st = thief_phase(st, found)
-            st = victim_phase(st, found)
+        running = (st.n_done < g.n_tasks) & (st.step_i < max_steps) \
+            & ~st.overflow
+        # NA-RP: spawning workers are victims too — adopt a thief pre-push
+        spawner = (st.s_top > 0) & is_narp & running
+        valid0 = messaging.victim_valid(st.cells) & spawner
+        rp, _ = dlb.rp_adopt(st.rp, jnp.maximum(st.cells.req_tid, 0),
+                             params.n_steal, valid0)
+        st = st._replace(
+            rp=rp, cells=messaging.victim_advance(st.cells, valid0),
+            ctr=_bump(st.ctr, "req_handled", valid0))
+        st = spawn_phase(st, running)
+        st, task, ts, found = dequeue_phase(st, running)
+        st = thief_phase(st, found, running)
+        st = victim_phase(st, found)
         st = exec_phase(st, task, ts, found)
-        return st._replace(step_i=st.step_i + 1)
+        return st._replace(step_i=st.step_i + running.astype(jnp.int32))
 
     return step
 
 
-def _init_state(g: _Graph, W: int, S: int, q_cap: int, gq_cap: int,
-                seed: int) -> SimState:
+def _init_state(g: GraphArrays, W: int, S: int, q_cap: int, gq_cap: int,
+                seed: jax.Array) -> SimState:
     T = g.dur.shape[0]
+    seed32 = jnp.asarray(seed).astype(jnp.uint32)
     st = SimState(
         xq=xqueue.make(W, q_cap),
         cells=messaging.make(W),
@@ -429,7 +567,7 @@ def _init_state(g: _Graph, W: int, S: int, q_cap: int, gq_cap: int,
         deq_rr=jnp.zeros((W,), jnp.int32),
         idle=jnp.zeros((W,), jnp.int32),
         rng=(jnp.arange(W, dtype=jnp.uint32) * jnp.uint32(2654435761)
-             + jnp.uint32(seed * 40503 + 1)),
+             + (seed32 * jnp.uint32(40503) + jnp.uint32(1))),
         ctr=jnp.zeros((W, NC), jnp.int32),
         n_done=jnp.int32(0),
         overflow=jnp.asarray(False),
@@ -454,23 +592,23 @@ class SimConfig:
     costs: CostModel = DEFAULT_COSTS
 
 
-def _run_jit(mode, cfg, graph_arrays, params, seed, gq_cap,
-             mem_bound=0.0):
-    g = _Graph(*graph_arrays)
-    T = g.dur.shape[0]
-    W, Z = cfg.n_workers, cfg.n_zones
-    zsz = max(W // Z, 1)
-    step = _build_step(mode, W, zsz, cfg.stack_cap, cfg.costs, g, params,
-                       mem_bound)
-    st0 = _init_state(g, W, cfg.stack_cap, cfg.queue_cap, gq_cap, seed)
+def _run_jit(cfg: SimConfig, gq_cap: int, g: GraphArrays,
+             case: SweepCase) -> SimState:
+    """Run one fully-traced simulation to completion.  ``cfg`` and ``gq_cap``
+    are static (they fix array shapes); ``g`` and ``case`` are traced pytrees,
+    so this function vmaps over a leading batch axis of both."""
+    W = cfg.n_workers
+    step = _build_step(W, cfg.stack_cap, cfg.costs, g, case, cfg.max_steps)
+    st0 = _init_state(g, W, cfg.stack_cap, cfg.queue_cap, gq_cap, case.seed)
 
     def cond(st):
-        return (st.n_done < T) & (st.step_i < cfg.max_steps) & ~st.overflow
+        return (st.n_done < g.n_tasks) & (st.step_i < cfg.max_steps) \
+            & ~st.overflow
 
     return jax.lax.while_loop(cond, step, st0)
 
 
-_run_cached = jax.jit(_run_jit, static_argnums=(0, 1, 5, 6))
+_run_cached = jax.jit(_run_jit, static_argnums=(0, 1))
 
 
 def run_schedule(graph: TaskGraph, mode: str = "xgomptb",
@@ -481,14 +619,12 @@ def run_schedule(graph: TaskGraph, mode: str = "xgomptb",
     cfg = cfg or SimConfig()
     params = params or make_params()
     gq_cap = graph.n_tasks + 2 if mode == "gomp" else 4
-    arrays = tuple(jnp.asarray(a) for a in (
-        graph.dur, graph.first_child, graph.n_children, graph.notify,
-        graph.join_dep))
-    st = jax.block_until_ready(
-        _run_cached(mode, cfg, arrays, params, seed, gq_cap,
-                    round(float(graph.mem_bound), 3)))
-
     W = cfg.n_workers
+    case = make_case(mode, W, max(W // cfg.n_zones, 1), seed,
+                     round(float(graph.mem_bound), 3), params)
+    st = jax.block_until_ready(
+        _run_cached(cfg, gq_cap, graph_arrays(graph), case))
+
     if mode in ("gomp", "xgomp"):
         episode = barrier_mod.centralized_episode(W, cfg.costs)
     else:

@@ -1,0 +1,313 @@
+"""Vectorized experiment engine: whole scheduler-ablation grids per compile.
+
+The paper's headline results are ablation *grids* — mode × worker count ×
+task granularity × DLB parameters (Figs. 4-11, Tables I-IV) — and the
+simulator's per-configuration cost is dominated by dispatch overhead on tiny
+arrays, not by useful work.  This module batches independent simulations the
+same way Taskgraph amortizes per-task overhead by preprocessing whole task
+graphs: build the full grid host-side, pad every axis to a common shape
+(graphs to a common task count, workers to a common lane width), and run the
+grid through ``jax.vmap`` of the scheduler's fully-traced ``_run_jit`` in one
+(or a few chunked) compiled calls.
+
+Two entry points:
+
+* ``run_cases(graphs, specs)`` — arbitrary flat list of ``CaseSpec``
+  configurations (what the benchmark suites use: per-app best parameters,
+  mixed mode ladders, ...).
+* ``run_grid(graphs, modes=..., n_workers=..., seeds=..., ...)`` — cartesian
+  product sugar that labels the result with ``grid_axes`` and reshapes
+  makespans/counters to the grid shape.
+
+Correctness contract (asserted by tests/test_sweep.py): a batched run is
+bitwise identical to running each configuration alone through the same
+engine, and a single-configuration engine run matches ``run_schedule``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import barrier as barrier_mod
+from repro.core.scheduler import (CTR_NAMES, MODES, SimConfig, SweepCase,
+                                  _build_step, _init_state, _run_cached,
+                                  graph_arrays, make_case, make_params)
+from repro.core.taskgraph import TaskGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class CaseSpec:
+    """Host-side description of one simulator configuration."""
+    mode: str = "xgomptb"
+    n_workers: int = 32
+    n_zones: int = 4
+    seed: int = 0
+    n_victim: int = 4
+    n_steal: int = 8
+    t_interval: int = 100
+    p_local: float = 1.0
+    graph: int = 0          # index into the graphs list passed to run_cases
+
+    def __post_init__(self):
+        assert self.mode in MODES, self.mode
+
+    @property
+    def zone_size(self) -> int:
+        return max(self.n_workers // self.n_zones, 1)
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Structured result of a batched sweep.
+
+    ``time_ns``/``counters``/``completed``/``steps`` are flat per-case arrays
+    in ``specs`` order.  When produced by ``run_grid``, ``grid_axes`` names
+    the cartesian axes and ``makespans`` / ``counter(name)`` reshape to the
+    grid shape ``tuple(len(v) for v in grid_axes.values())``.
+    """
+    specs: List[CaseSpec]
+    graph_names: List[str]
+    time_ns: np.ndarray               # (B,) int64
+    counters: Dict[str, np.ndarray]   # name -> (B,) int64
+    completed: np.ndarray             # (B,) bool
+    steps: np.ndarray                 # (B,) int64
+    wall_s: float = 0.0               # engine wall-clock for this sweep
+    grid_axes: Optional[Dict[str, tuple]] = None
+
+    def _grid(self, a: np.ndarray) -> np.ndarray:
+        if self.grid_axes is None:
+            return a
+        return a.reshape(tuple(len(v) for v in self.grid_axes.values()))
+
+    @property
+    def makespans(self) -> np.ndarray:
+        return self._grid(self.time_ns)
+
+    def counter(self, name: str) -> np.ndarray:
+        return self._grid(self.counters[name])
+
+    def row(self, i: int) -> dict:
+        """One case as a flat dict (benchmark emission helper)."""
+        s = self.specs[i]
+        return dict(
+            app=self.graph_names[s.graph], mode=s.mode,
+            n_workers=s.n_workers, seed=s.seed, n_victim=s.n_victim,
+            n_steal=s.n_steal, t_interval=s.t_interval, p_local=s.p_local,
+            time_ns=int(self.time_ns[i]), completed=bool(self.completed[i]),
+            counters={k: int(v[i]) for k, v in self.counters.items()})
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _run_batch(cfg: SimConfig, gq_cap: int, gb, cb: SweepCase):
+    """Run a stacked batch of (graph, case) pairs to completion.
+
+    The while loop is written manually over vmapped *steps* rather than
+    vmapping the whole per-config run: the step function is a strict no-op
+    for finished elements (see ``_build_step``'s ``running`` gate), so the
+    loop needs no per-element freeze — which would otherwise materialize a
+    select over the entire simulator state every iteration.  Returns only
+    the arrays the host needs (clock, counters, termination info)."""
+
+    def init_one(g, case):
+        return _init_state(g, cfg.n_workers, cfg.stack_cap, cfg.queue_cap,
+                           gq_cap, case.seed)
+
+    def step_one(g, case, st):
+        return _build_step(cfg.n_workers, cfg.stack_cap, cfg.costs, g, case,
+                           cfg.max_steps)(st)
+
+    step_b = jax.vmap(step_one)
+
+    def cond(st):
+        return jnp.any((st.n_done < gb.n_tasks)
+                       & (st.step_i < cfg.max_steps) & ~st.overflow)
+
+    st0 = jax.vmap(init_one)(gb, cb)
+    st = jax.lax.while_loop(cond, lambda s: step_b(gb, cb, s), st0)
+    return st.clock, st.ctr, st.n_done, st.overflow, st.step_i
+
+
+def _stack_cases(specs: Sequence[CaseSpec],
+                 graphs: Sequence[TaskGraph]) -> SweepCase:
+    cases = [make_case(s.mode, s.n_workers, s.zone_size, s.seed,
+                       round(float(graphs[s.graph].mem_bound), 3),
+                       make_params(s.n_victim, s.n_steal, s.t_interval,
+                                   s.p_local))
+             for s in specs]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *cases)
+
+
+def run_cases(graphs: Sequence[TaskGraph] | TaskGraph,
+              specs: Sequence[CaseSpec], cfg: SimConfig | None = None,
+              chunk_size: int = 64, strategy: str = "auto") -> SweepResult:
+    """Run every ``CaseSpec`` through the sweep engine.
+
+    Graphs are padded to a common task count, worker lanes to the maximum
+    ``n_workers`` in the batch.  Cases are grouped by (mode, graph) before
+    chunking: a vmapped batch runs the union of its members' control flow
+    (any element with a pending steal request drags the whole chunk through
+    the thief/transfer machinery), so homogeneous chunks are several times
+    cheaper than mixed ones.  Per-case results are returned in the original
+    ``specs`` order and are bitwise independent of the grouping — or of the
+    execution strategy.  Chunks beyond ``chunk_size`` are padded with
+    repeats to a full chunk so every call shares one compiled shape.
+
+    ``strategy``:
+
+    * ``"batched"`` — always vmap each chunk.
+    * ``"serial"``  — one jitted dispatch per case (still one compile for
+      the whole sweep, thanks to the shared padded shapes).
+    * ``"auto"``    — vmap a chunk unless it is a heterogeneous DLB-knob
+      group on a CPU backend.  Measured on CPU hosts, uniform-config
+      chunks (seed replicas, the GOMP→XGOMPTB ladders) batch at ~4-5x
+      over per-config dispatch, but DLB chunks with mixed
+      n_victim/n_steal/t_interval are bandwidth- and straggler-bound (the
+      chunk steps until its slowest member finishes) and lose to serial
+      dispatch; accelerator backends always batch.
+    """
+    import time as _time
+
+    if isinstance(graphs, TaskGraph):
+        graphs = [graphs]
+    graphs = list(graphs)
+    specs = list(specs)
+    assert specs, "empty sweep"
+    assert all(0 <= s.graph < len(graphs) for s in specs)
+    cfg = cfg or SimConfig()
+
+    t0 = _time.perf_counter()
+    w_pad = max(s.n_workers for s in specs)
+    t_pad = max(g.n_tasks for g in graphs)
+    gq_cap = t_pad + 2 if any(s.mode == "gomp" for s in specs) else 4
+    run_cfg = dataclasses.replace(cfg, n_workers=w_pad)
+    garr = [graph_arrays(g, t_pad) for g in graphs]
+
+    B = len(specs)
+    # stable grouping by (mode, graph, knobs); results scatter back by index.
+    # Chunks never cross a mode boundary — one na_ws element would drag a
+    # whole chunk of cheaper modes through the transfer machinery — and each
+    # chunk pads to a power of two so compiled shapes stay few.
+    order = sorted(range(B), key=lambda i: (
+        MODES.index(specs[i].mode), specs[i].graph, specs[i].n_steal,
+        specs[i].n_victim, specs[i].t_interval))
+    batches: List[List[int]] = []
+    for i in order:
+        if (batches and specs[batches[-1][0]].mode == specs[i].mode
+                and len(batches[-1]) < chunk_size):
+            batches[-1].append(i)
+        else:
+            batches.append([i])
+    clock = np.zeros((B, w_pad), np.int64)
+    ctr = np.zeros((B, w_pad, len(CTR_NAMES)), np.int64)
+    n_done = np.zeros(B, np.int64)
+    overflow = np.zeros(B, bool)
+    step_i = np.zeros(B, np.int64)
+    assert strategy in ("auto", "batched", "serial"), strategy
+    on_cpu = jax.default_backend() == "cpu"
+    for idxs in batches:
+        chunk = [specs[i] for i in idxs]
+        hetero_dlb = (chunk[0].mode in ("na_rp", "na_ws") and len(
+            {(s.n_victim, s.n_steal, s.t_interval, s.p_local)
+             for s in chunk}) > 1)
+        serialize = strategy == "serial" or (
+            strategy == "auto" and on_cpu and hetero_dlb and len(chunk) > 1)
+        if serialize:
+            for i in idxs:
+                s = specs[i]
+                case = make_case(
+                    s.mode, s.n_workers, s.zone_size, s.seed,
+                    round(float(graphs[s.graph].mem_bound), 3),
+                    make_params(s.n_victim, s.n_steal, s.t_interval,
+                                s.p_local))
+                st = jax.block_until_ready(
+                    _run_cached(run_cfg, gq_cap, garr[s.graph], case))
+                clock[i] = np.asarray(st.clock)
+                ctr[i] = np.asarray(st.ctr)
+                n_done[i] = int(st.n_done)
+                overflow[i] = bool(st.overflow)
+                step_i[i] = int(st.step_i)
+            continue
+        n_real = len(chunk)
+        padded = 1
+        while padded < n_real:
+            padded *= 2
+        chunk = chunk + [chunk[0]] * (padded - n_real)
+        gb = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[garr[s.graph] for s in chunk])
+        cb = _stack_cases(chunk, graphs)
+        cl, ct, nd, ov, si = jax.block_until_ready(
+            _run_batch(run_cfg, gq_cap, gb, cb))
+        clock[idxs] = np.asarray(cl)[:n_real]
+        ctr[idxs] = np.asarray(ct)[:n_real]
+        n_done[idxs] = np.asarray(nd)[:n_real]
+        overflow[idxs] = np.asarray(ov)[:n_real]
+        step_i[idxs] = np.asarray(si)[:n_real]
+
+    # barrier episode per case (host-side: mode and W are known per spec,
+    # matching run_schedule's accounting bit-for-bit)
+    ep_t = np.zeros(B, np.int64)
+    ep_a = np.zeros(B, np.int64)
+    for i, s in enumerate(specs):
+        if s.mode in ("gomp", "xgomp"):
+            ep = barrier_mod.centralized_episode(s.n_workers, cfg.costs)
+        else:
+            ep = barrier_mod.tree_episode(s.n_workers, cfg.costs)
+        ep_t[i] = int(ep.time_ns)
+        ep_a[i] = int(ep.atomic_ops)
+
+    time_ns = clock.max(axis=1).astype(np.int64) + ep_t
+    counters = {n: ctr[:, :, i].sum(axis=1).astype(np.int64)
+                for i, n in enumerate(CTR_NAMES)}
+    counters["atomic_ops"] = counters["atomic_ops"] + ep_a
+    completed = np.array(
+        [n_done[i] == graphs[s.graph].n_tasks and not overflow[i]
+         for i, s in enumerate(specs)])
+    return SweepResult(
+        specs=specs, graph_names=[g.name for g in graphs],
+        time_ns=time_ns, counters=counters, completed=completed,
+        steps=step_i.astype(np.int64),
+        wall_s=_time.perf_counter() - t0)
+
+
+def run_grid(graphs: Sequence[TaskGraph] | TaskGraph,
+             modes: Sequence[str] = ("xgomptb",),
+             n_workers: Sequence[int] = (32,),
+             seeds: Sequence[int] = (0,),
+             n_victim: Sequence[int] = (4,),
+             n_steal: Sequence[int] = (8,),
+             t_interval: Sequence[int] = (100,),
+             p_local: Sequence[float] = (1.0,),
+             n_zones: int | None = None,
+             cfg: SimConfig | None = None,
+             chunk_size: int = 64, strategy: str = "auto") -> SweepResult:
+    """Cartesian sweep: app × mode × workers × seed × DLB knobs.
+
+    Returns a ``SweepResult`` whose ``grid_axes`` names every axis (in that
+    order) and whose ``makespans``/``counter(name)`` are reshaped to the grid.
+    """
+    if isinstance(graphs, TaskGraph):
+        graphs = [graphs]
+    graphs = list(graphs)
+    cfg = cfg or SimConfig()
+    zones = cfg.n_zones if n_zones is None else n_zones
+    axes = dict(app=tuple(g.name for g in graphs), mode=tuple(modes),
+                n_workers=tuple(n_workers), seed=tuple(seeds),
+                n_victim=tuple(n_victim), n_steal=tuple(n_steal),
+                t_interval=tuple(t_interval), p_local=tuple(p_local))
+    specs = [
+        CaseSpec(mode=m, n_workers=w, n_zones=zones, seed=sd, n_victim=nv,
+                 n_steal=ns, t_interval=ti, p_local=pl, graph=gi)
+        for gi in range(len(graphs)) for m in modes for w in n_workers
+        for sd in seeds for nv in n_victim for ns in n_steal
+        for ti in t_interval for pl in p_local
+    ]
+    res = run_cases(graphs, specs, cfg=cfg, chunk_size=chunk_size,
+                    strategy=strategy)
+    res.grid_axes = axes
+    return res

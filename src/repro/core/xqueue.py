@@ -64,45 +64,98 @@ def push(xq: XQ, producer: jax.Array, consumer: jax.Array, task: jax.Array,
     """
     Q = capacity(xq)
     W = xq.head.shape[0]
-    cur = xq.tail[consumer, producer] - xq.head[consumer, producer]
-    ok = mask & (cur < Q)
-    slot = xq.tail[consumer, producer] % Q
-    # inactive lanes scatter out-of-bounds and are dropped
-    c_idx = jnp.where(ok, consumer, W)
-    buf = xq.buf.at[c_idx, producer, slot].set(task, mode="drop")
-    tsb = xq.ts.at[c_idx, producer, slot].set(ts, mode="drop")
-    tail = xq.tail.at[c_idx, producer].add(1, mode="drop")
+    lane = jnp.arange(W, dtype=jnp.int32)
+    # permute lane data into producer-indexed order (active producers are
+    # distinct, so this is a tiny W-element inversion)
+    inv = jnp.full((W,), W, jnp.int32).at[
+        jnp.where(mask, producer, W)].set(lane, mode="drop")
+    has = inv < W
+    safe = jnp.minimum(inv, W - 1)
+    cons_p = jnp.where(has, consumer[safe], 0)
+    task_p = task[safe]
+    ts_p = ts[safe]
+    cur_p = xq.tail[cons_p, lane] - xq.head[cons_p, lane]
+    ok_p = has & (cur_p < Q)
+    slot_p = xq.tail[cons_p, lane] % Q
+    # exactly one slot per producer column changes, so the write is a one-hot
+    # select instead of a scatter (scatters vectorize terribly on CPU under
+    # vmap; this elementwise form is bitwise identical to the scatter)
+    one_c = ok_p[None, :] & (lane[:, None] == cons_p[None, :])     # (Wc, Wp)
+    one_slot = one_c[:, :, None] & (
+        jnp.arange(Q, dtype=jnp.int32)[None, None, :]
+        == slot_p[None, :, None])                                  # (Wc, Wp, Q)
+    buf = jnp.where(one_slot, task_p[None, :, None], xq.buf)
+    tsb = jnp.where(one_slot, ts_p[None, :, None], xq.ts)
+    tail = xq.tail + one_c.astype(jnp.int32)
+    ok = mask & ok_p[producer]
     return XQ(buf, tsb, xq.head, tail), ok
 
 
-def _scan_order(W: int, me: jax.Array, rot: jax.Array) -> jax.Array:
+def _scan_order(W: int, me: jax.Array, rot: jax.Array, n_active):
     """Candidate source order for each consumer: master queue first, then the
-    other W-1 producers starting at rotation ``rot`` (dequeue round-robin)."""
-    # aux candidates: all producers != me, rotated
+    other ``n_active - 1`` live producers starting at rotation ``rot`` (dequeue
+    round-robin).  ``n_active`` may be a traced scalar ≤ the static width ``W``
+    (padded lanes are skipped via the returned validity mask)."""
+    # aux candidates: all live producers != me, rotated
     j = jnp.arange(W - 1)[None, :]                       # (1, W-1)
-    raw = (me[:, None] + 1 + ((rot[:, None] + j) % (W - 1))) % W
-    return jnp.concatenate([me[:, None], raw], axis=1)    # (W, W)
+    nm1 = jnp.maximum(n_active - 1, 1)
+    raw = (me[:, None] + 1 + ((rot[:, None] + j) % nm1)) % jnp.maximum(
+        n_active, 1)
+    order = jnp.concatenate([me[:, None], raw], axis=1)   # (W, W)
+    W0 = me.shape[0]
+    valid = jnp.concatenate(
+        [jnp.ones((W0, 1), bool),
+         jnp.broadcast_to(j < (n_active - 1), (W0, W - 1))], axis=1)
+    return order, valid
 
 
-def pop_first(xq: XQ, rot: jax.Array, mask: jax.Array):
+def scan_pos(W: int, me: jax.Array, rot: jax.Array, n_active) -> jax.Array:
+    """(W, W) scan *position* of producer ``p`` in consumer ``me``'s dequeue
+    order: the master queue (p == me) is position 0, auxiliary producer ``p``
+    sits at ``1 + ((p - me - 1) mod n - rot) mod (n - 1)`` — the closed-form
+    inverse of ``_scan_order``, computed without any gather."""
+    n_act = jnp.maximum(n_active, 1)
+    nm1 = jnp.maximum(n_active - 1, 1)
+    p = jnp.arange(W, dtype=jnp.int32)[None, :]
+    d = (p - me[:, None] - 1) % n_act
+    return jnp.where(p == me[:, None], 0, 1 + (d - rot[:, None]) % nm1)
+
+
+def pop_first(xq: XQ, rot: jax.Array, mask: jax.Array, n_active=None):
     """Every consumer pops one task: master queue first, then auxiliary queues
     in rotated round-robin order (paper §II-B).
+
+    The first-nonempty-in-scan-order queue is found by an argmin over
+    analytic scan positions (``scan_pos``) rather than gathering occupancies
+    into scan order — batched gathers pay per-index overhead on CPU.
+
+    ``n_active`` (traced scalar, default: the static width) restricts the scan
+    to the first ``n_active`` workers so batched sweeps can vary worker count
+    under one padded shape.
 
     Returns (xq', task, ts, src, found, checked) — ``checked`` is the number of
     queues inspected (each inspection is charged by the cost model).
     """
     W = xq.head.shape[0]
+    if n_active is None:
+        n_active = W
     me = jnp.arange(W, dtype=jnp.int32)
-    order = _scan_order(W, me, rot)                      # (W, W)
+    p = me[None, :]
+    pos = scan_pos(W, me, rot, n_active)                  # (W, W)
     sz = sizes(xq)                                        # (W, W) [c, p]
-    occ = jnp.take_along_axis(sz[me], order, axis=1) > 0  # (W, W) in scan order
-    pos = jnp.argmax(occ, axis=1).astype(jnp.int32)
-    found = mask & jnp.any(occ, axis=1)
-    src = order[me, pos]
-    checked = jnp.where(jnp.any(occ, axis=1), pos + 1, W)
+    cand = (sz > 0) & (p < jnp.maximum(n_active, 1))
+    pos_m = jnp.where(cand, pos, W + 1)
+    best = jnp.min(pos_m, axis=1)
+    found_any = best <= W
+    found = mask & found_any
+    src = jnp.where(found_any,
+                    jnp.argmin(pos_m, axis=1).astype(jnp.int32), me)
+    checked = jnp.where(found_any, best + 1, n_active)
     safe_src = jnp.where(found, src, me)
     slot = xq.head[me, safe_src] % capacity(xq)
     task = xq.buf[me, safe_src, slot]
     ts = xq.ts[me, safe_src, slot]
-    head = xq.head.at[me, safe_src].add(found.astype(jnp.int32))
+    # one consumed slot per consumer row: one-hot add, not a scatter
+    head = xq.head + (found[:, None]
+                      & (me[None, :] == safe_src[:, None])).astype(jnp.int32)
     return XQ(xq.buf, xq.ts, head, xq.tail), task, ts, src, found, checked

@@ -1,0 +1,129 @@
+"""Vectorized sweep engine: a vmap-batched grid must be bitwise identical to
+serial per-configuration runs (and to run_schedule), across modes, worker
+counts, and task-graph padding."""
+
+import dataclasses
+
+import pytest
+
+from repro.core import make_params, run_schedule, taskgraph
+from repro.core.scheduler import CTR_NAMES, SimConfig
+from repro.core.sweep import CaseSpec, run_cases, run_grid
+
+CFG = SimConfig(n_workers=16, n_zones=4, max_steps=60_000)
+
+MODES_TESTED = ("xgomptb", "na_ws")   # ≥2 modes (SLB + a DLB policy)
+WORKERS_TESTED = (8, 16)              # ≥2 worker counts
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    return [taskgraph.fib(9), taskgraph.uts(250)]
+
+
+@pytest.fixture(scope="module")
+def specs(graphs):
+    return [
+        CaseSpec(mode=m, n_workers=w, n_zones=4, n_victim=4, n_steal=8,
+                 t_interval=10, p_local=0.8, graph=gi)
+        for gi in range(len(graphs))
+        for m in MODES_TESTED
+        for w in WORKERS_TESTED
+    ]
+
+
+@pytest.fixture(scope="module")
+def batched(graphs, specs):
+    # force the vmap path: the bitwise claims below are about batching
+    return run_cases(graphs, specs, cfg=CFG, strategy="batched")
+
+
+def test_batch_completes(batched, graphs, specs):
+    assert batched.completed.all()
+    assert len(batched.time_ns) == len(specs)
+    # exactly-once execution survives batching
+    for i, s in enumerate(specs):
+        assert batched.counters["exec"][i] == graphs[s.graph].n_tasks
+
+
+def test_vmap_matches_serial_per_config(batched, graphs, specs):
+    """Acceptance criterion: the batched run over ≥2 modes × ≥2 worker counts
+    (× 2 apps) is bitwise identical to running each configuration alone
+    through the same engine — even though the solo runs use different lane
+    paddings (their own max worker count)."""
+    for i, s in enumerate(specs):
+        solo = run_cases(graphs, [s], cfg=CFG)
+        assert int(solo.time_ns[0]) == int(batched.time_ns[i]), (i, s)
+        assert int(solo.steps[0]) == int(batched.steps[i]), (i, s)
+        for name in CTR_NAMES:
+            assert int(solo.counters[name][0]) == \
+                int(batched.counters[name][i]), (i, s, name)
+
+
+def test_engine_matches_run_schedule(batched, graphs, specs):
+    """Single-config engine results equal the classic run_schedule path
+    (which uses unpadded graphs and its own host-side barrier accounting)."""
+    for i, s in enumerate(specs):
+        r = run_schedule(
+            graphs[s.graph], mode=s.mode,
+            cfg=dataclasses.replace(CFG, n_workers=s.n_workers),
+            params=make_params(s.n_victim, s.n_steal, s.t_interval,
+                               s.p_local))
+        assert r.completed
+        assert r.time_ns == int(batched.time_ns[i]), (i, s)
+        for name, v in r.counters.items():
+            assert v == int(batched.counters[name][i]), (i, s, name)
+
+
+def test_run_grid_structure(graphs):
+    res = run_grid(graphs[0], modes=("xgomptb", "na_rp"),
+                   n_workers=(8,), seeds=(0,), cfg=CFG)
+    assert res.grid_axes is not None
+    shape = tuple(len(v) for v in res.grid_axes.values())
+    assert res.makespans.shape == shape
+    assert res.counter("exec").shape == shape
+    assert res.completed.all()
+    assert list(res.grid_axes["mode"]) == ["xgomptb", "na_rp"]
+    # rows carry the full configuration for emission
+    row = res.row(1)
+    assert row["mode"] == "xgomptb" or row["mode"] == "na_rp"
+    assert row["counters"]["exec"] == graphs[0].n_tasks
+
+
+def test_gomp_padding_in_batch(graphs):
+    """A batch mixing gomp with xq modes sizes the global queue for the
+    padded task count; results still match solo runs."""
+    specs = [CaseSpec(mode=m, n_workers=8, n_zones=2, graph=1)
+             for m in ("gomp", "xgomptb")]
+    both = run_cases(graphs, specs, cfg=CFG)
+    assert both.completed.all()
+    solo = run_cases(graphs, [specs[0]], cfg=CFG)
+    assert int(solo.time_ns[0]) == int(both.time_ns[0])
+    assert int(both.counters["exec"][0]) == graphs[1].n_tasks
+
+
+def test_episode_arrays_parity():
+    """The traced barrier-episode selector (for in-graph consumers) matches
+    the host-side episode functions the engine uses, bit for bit."""
+    import jax.numpy as jnp
+
+    from repro.core import barrier
+
+    costs = CFG.costs
+    for mode_id in range(5):
+        for w in (1, 8, 16, 48, 64):
+            ep = barrier.episode_arrays(jnp.int32(mode_id), jnp.int32(w),
+                                        costs)
+            host = (barrier.centralized_episode(w, costs) if mode_id <= 1
+                    else barrier.tree_episode(w, costs))
+            assert int(ep.time_ns) == int(host.time_ns), (mode_id, w)
+            assert int(ep.atomic_ops) == int(host.atomic_ops), (mode_id, w)
+
+
+def test_strategies_agree(graphs, batched, specs):
+    """The engine's execution strategy (vmap chunks vs per-case dispatch)
+    never changes results."""
+    serial = run_cases(graphs, specs, cfg=CFG, strategy="serial")
+    assert (serial.time_ns == batched.time_ns).all()
+    for name in CTR_NAMES:
+        assert (serial.counters[name] == batched.counters[name]).all()
