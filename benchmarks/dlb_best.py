@@ -1,14 +1,22 @@
 """Fig. 7 + Tables I-III: best NA-RP / NA-WS vs SLB (XGOMPTB), with the
 paper's runtime-statistics counters.
 
-All apps × {SLB, NA-RP, NA-WS} run as one vmap-batched sweep."""
+All apps × {SLB, NA-RP, NA-WS} run as one sweep through the experiment
+service.  DLB knobs come from the autotuner's artifacts
+(``experiments/tuned/<smoke|full>/<app>.json``, written by
+``benchmarks.run tune``) when one matches the current scale; the hand-tuned
+static ``BEST`` table below is the fallback.  Every emitted row records
+which source supplied its parameters."""
 
 from benchmarks.common import APPS, SIM, SMOKE, csv_row, emit, graph_for
+from repro.core.plan import DLB_MODES
 from repro.core.sweep import CaseSpec, run_cases
+from repro.core.tune import load_tuned
 
 #: per-app settings in the spirit of paper Table I (scaled T_interval);
 #: retuned with a sweep-engine grid (see docs/BENCHMARKS.md) after the
-#: thief-retry loop became early-exit (which changed the PRNG stream)
+#: thief-retry loop became early-exit (which changed the PRNG stream).
+#: Used when no matching tuned artifact exists.
 BEST = {
     "fib": dict(n_victim=1, n_steal=1, t_interval=300, p_local=1.0),
     "nqueens": dict(n_victim=8, n_steal=1, t_interval=100, p_local=1.0),
@@ -25,21 +33,37 @@ COUNTER_KEYS = ("self", "local", "remote", "static_push", "imm_exec",
                 "req_sent", "req_handled", "req_has_steal", "stolen",
                 "stolen_local")
 
-DLB_MODES = ("na_rp", "na_ws")
+KNOBS = ("n_victim", "n_steal", "t_interval", "p_local")
 
 
-def run():
+def params_for(app: str):
+    """Per-mode DLB knobs for ``app`` plus their source.
+
+    Prefers a tuned artifact matching the current scale (smoke flag,
+    machine size, and the physics signature — capacities, step budget,
+    cost model); returns ``({mode: knob-dict}, "tuned"|"static")``."""
+    rec = load_tuned(app, smoke=SMOKE, cfg=SIM)
+    if rec is not None and all(m in rec["modes"] for m in DLB_MODES):
+        return ({m: {k: rec["modes"][m]["params"][k] for k in KNOBS}
+                 for m in DLB_MODES}, "tuned")
+    return {m: dict(BEST[app]) for m in DLB_MODES}, "static"
+
+
+def run(cache=True):
     apps = list(APPS)
     graphs = [graph_for(app) for app in apps]
+    sources = {}
+    params = {}
     specs = []
     for gi, app in enumerate(apps):
+        params[app], sources[app] = params_for(app)
         specs.append(CaseSpec(mode="xgomptb", n_workers=SIM.n_workers,
                               n_zones=SIM.n_zones, graph=gi))
         for mode in DLB_MODES:
             specs.append(CaseSpec(mode=mode, n_workers=SIM.n_workers,
                                   n_zones=SIM.n_zones, graph=gi,
-                                  **BEST[app]))
-    res = run_cases(graphs, specs, cfg=SIM)
+                                  **params[app][mode]))
+    res = run_cases(graphs, specs, cfg=SIM, cache=cache)
     assert res.completed.all(), "all cases (incl. SLB baselines) must finish"
     per_app = 1 + len(DLB_MODES)
     rows = []
@@ -47,6 +71,7 @@ def run():
         base = gi * per_app
         slb_ns = int(res.time_ns[base])
         row = dict(app=app, slb_ns=slb_ns,
+                   params_source=sources[app],
                    slb_counters={k: int(res.counters[k][base])
                                  for k in COUNTER_KEYS})
         for mi, mode in enumerate(DLB_MODES):
@@ -54,10 +79,12 @@ def run():
             assert res.completed[i], (app, mode)
             row[f"{mode}_ns"] = int(res.time_ns[i])
             row[f"{mode}_improvement"] = slb_ns / int(res.time_ns[i])
+            row[f"{mode}_params"] = dict(params[app][mode])
             row[f"{mode}_counters"] = {k: int(res.counters[k][i])
                                        for k in COUNTER_KEYS}
             csv_row(f"dlb_best/{app}/{mode}", res.time_ns[i] / 1e3,
-                    f"{row[f'{mode}_improvement']:.2f}x over SLB")
+                    f"{row[f'{mode}_improvement']:.2f}x over SLB "
+                    f"[{sources[app]} params]")
         rows.append(row)
     emit(rows, "dlb_best")
     # paper: NA-WS achieves at least (near-)parity on every app, and large

@@ -59,10 +59,10 @@ def _rows_from(res, graphs):
     return rows
 
 
-def run():
+def run(cache=True):
     graphs = [graph_for(app) for app in SWEEP_APPS]
     specs = [s for gi in range(len(graphs)) for s in grid_specs(gi)]
-    res = run_cases(graphs, specs, cfg=SIM)
+    res = run_cases(graphs, specs, cfg=SIM, cache=cache)
     assert res.completed.all(), "sweep configs must complete"
     rows = _rows_from(res, graphs)
     for app in SWEEP_APPS:

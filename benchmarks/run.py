@@ -1,11 +1,15 @@
 # One function per paper table. Prints ``name,us_per_call,derived`` CSV.
 """Benchmark harness: every paper table/figure plus the beyond-paper MoE
-balance study and the roofline aggregation.
+balance study, the roofline aggregation, and the DLB autotuner.
 
-    PYTHONPATH=src python -m benchmarks.run            # all
-    PYTHONPATH=src python -m benchmarks.run posp_throughput  # one
+    PYTHONPATH=src python -m benchmarks.run               # all suites
+    PYTHONPATH=src python -m benchmarks.run <suite> ...   # a subset
+    PYTHONPATH=src python -m benchmarks.run --list        # enumerate suites
+    PYTHONPATH=src python -m benchmarks.run cache stats   # result-cache info
+    PYTHONPATH=src python -m benchmarks.run cache clear   # drop cached results
 """
 
+import importlib
 import os
 import sys
 import time
@@ -15,37 +19,83 @@ import time
 # the sweeps).  Must be set before jax initializes, so: before suite imports.
 os.environ.setdefault("XLA_FLAGS", "--xla_cpu_use_thunk_runtime=false")
 
+#: suite name -> one-line description (shown by --list; import stays lazy so
+#: --list and the cache subcommand answer without initializing jax)
+SUITES = {
+    "bots_speedup": "Fig. 4/5 — per-mode makespans + XGOMP(TB) speedups",
+    "thread_scaling": "Fig. 6 — makespan vs worker count, gomp vs xgomptb",
+    "dlb_best": "Fig. 7 + Tables I-III — best NA-RP/NA-WS vs SLB (§V counters)",
+    "timeline": "Fig. 3 — per-worker utilization timelines",
+    "param_sweep": "Figs. 9/10 + Table IV — DLB improvement over the knob grid",
+    "posp_throughput": "Fig. 8 — proof-of-space hashing throughput",
+    "guidelines": "Fig. 11 — guideline settings vs per-app best",
+    "moe_balance": "beyond-paper — DLB policies as MoE-routing balancers",
+    "roofline": "aggregation — counter-derived roofline summary",
+    "sweep_bench": "engine timing — serial vs batched vs warm-cache re-run",
+    "tune": "DLB autotuner — per-app artifacts under experiments/tuned/ "
+            "(not in the no-args run: it writes artifacts dlb_best then "
+            "prefers, which would make back-to-back full runs differ)",
+}
+
+#: suites whose module name differs from the suite name
+_MODULES = {"tune": "tune_apps"}
+
+#: excluded from the no-args everything run; invoke explicitly
+_EXPLICIT_ONLY = {"tune"}
+
+
+def _suite_fn(name):
+    mod = importlib.import_module(f"benchmarks.{_MODULES.get(name, name)}")
+    return mod.run
+
+
+def _cache_cmd(args) -> None:
+    import importlib.util
+    import json
+    import pathlib
+
+    # load cache.py by path: `import repro.core.cache` would execute the
+    # package __init__ and pull in jax for a pure-admin command
+    path = (pathlib.Path(__file__).resolve().parent.parent
+            / "src" / "repro" / "core" / "cache.py")
+    spec = importlib.util.spec_from_file_location("_repro_cache_admin", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+
+    cache = mod.ResultCache()
+    cmd = args[0] if args else "stats"
+    if cmd == "stats":
+        print(json.dumps(cache.stats(), indent=1))
+    elif cmd == "clear":
+        print(f"removed {cache.clear()} entries from {cache.root}")
+    else:
+        raise SystemExit(f"unknown cache command {cmd!r}; use stats|clear")
+
 
 def main() -> None:
-    from benchmarks import (bots_speedup, dlb_best, guidelines, moe_balance,
-                            param_sweep, posp_throughput, roofline,
-                            sweep_bench, thread_scaling, timeline)
-
-    suites = {
-        "bots_speedup": bots_speedup.run,        # Fig. 4 / Fig. 5
-        "thread_scaling": thread_scaling.run,    # Fig. 6
-        "dlb_best": dlb_best.run,                # Fig. 7 + Tables I-III
-        "timeline": timeline.run,                # Fig. 3 (utilization)
-        "param_sweep": param_sweep.run,          # Figs. 9/10 + Table IV
-        "posp_throughput": posp_throughput.run,  # Fig. 8
-        "guidelines": guidelines.run,            # Fig. 11
-        "moe_balance": moe_balance.run,          # beyond-paper DLB-for-MoE
-        "roofline": roofline.run,                # §Roofline aggregation
-        "sweep_bench": sweep_bench.run,          # engine before/after timing
-    }
-    only = set(sys.argv[1:])
-    unknown = only - set(suites)
+    argv = sys.argv[1:]
+    if "--list" in argv:
+        width = max(map(len, SUITES))
+        for name, desc in SUITES.items():
+            print(f"{name:<{width}}  {desc}")
+        return
+    if argv and argv[0] == "cache":
+        _cache_cmd(argv[1:])
+        return
+    only = set(argv)
+    unknown = only - set(SUITES)
     if unknown:
         raise SystemExit(f"unknown suite(s): {sorted(unknown)}; "
-                         f"available: {sorted(suites)}")
+                         f"available: {sorted(SUITES)} (see --list)")
     failures = []
-    for name, fn in suites.items():
-        if only and name not in only:
+    for name in SUITES:
+        if (only and name not in only) or \
+                (not only and name in _EXPLICIT_ONLY):
             continue
         t0 = time.time()
         print(f"# === {name} ===", flush=True)
         try:
-            fn()
+            _suite_fn(name)()
             print(f"# {name} done in {time.time()-t0:.0f}s", flush=True)
         except Exception as e:  # keep the harness going; report at the end
             failures.append((name, repr(e)))

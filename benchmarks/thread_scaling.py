@@ -12,12 +12,12 @@ WORKERS = (8, 16, 32, 64)
 MODES_SCALE = ("gomp", "xgomptb")
 
 
-def run():
+def run(cache=True):
     graphs = [graph_for(app) for app in APPS_SCALE]
     specs = [CaseSpec(mode=m, n_workers=w, n_zones=max(1, w // 8), graph=gi)
              for gi in range(len(APPS_SCALE)) for w in WORKERS
              for m in MODES_SCALE]
-    res = run_cases(graphs, specs, cfg=SIM)
+    res = run_cases(graphs, specs, cfg=SIM, cache=cache)
     assert res.completed.all()
     rows = []
     for i, s in enumerate(res.specs):

@@ -1,18 +1,35 @@
 """Core: the paper's contribution — lock-less queues, tree barrier, and
 NUMA-aware dynamic load balancing — as (a) a faithful scheduler simulator and
-(b) jittable routing policies used by the TPU training/serving stack."""
+(b) jittable routing policies used by the TPU training/serving stack.
 
-from repro.core import balance, barrier, dlb, messaging, sweep, taskgraph, \
-    xqueue
+The experiment service layers on top of the simulator:
+``plan`` (what to run, in which shapes) → ``cache`` (content-addressed
+on-disk results) → ``executors`` (serial / vmap / sharded) → ``sweep``
+(the ``run_cases``/``run_grid`` entry points) → ``tune`` (the DLB-knob
+autotuner emitting ``experiments/tuned/`` artifacts)."""
+
+from repro.core import balance, barrier, cache, dlb, executors, messaging, \
+    plan, sweep, taskgraph, tune, xqueue
+from repro.core.cache import CODE_VERSION, ResultCache, case_key, graph_digest
 from repro.core.costs import DEFAULT_COSTS, CostModel
+from repro.core.executors import EXECUTORS, Executor, select_executor
+from repro.core.plan import ChunkPlan, SweepPlan, build_plan
 from repro.core.scheduler import (MODES, GraphArrays, Params, SimConfig,
                                   SimResult, SweepCase, graph_arrays,
                                   make_case, make_params, run_schedule)
 from repro.core.sweep import CaseSpec, SweepResult, run_cases, run_grid
+from repro.core.tune import (TunedParams, artifact_path, load_tuned,
+                             save_artifact, tune_mode)
 
 __all__ = [
-    "balance", "barrier", "dlb", "messaging", "sweep", "taskgraph", "xqueue",
+    "balance", "barrier", "cache", "dlb", "executors", "messaging", "plan",
+    "sweep", "taskgraph", "tune", "xqueue",
     "DEFAULT_COSTS", "CostModel", "MODES", "Params", "SimConfig", "SimResult",
     "SweepCase", "GraphArrays", "graph_arrays", "make_case", "make_params",
     "run_schedule", "CaseSpec", "SweepResult", "run_cases", "run_grid",
+    "ChunkPlan", "SweepPlan", "build_plan",
+    "Executor", "EXECUTORS", "select_executor",
+    "ResultCache", "CODE_VERSION", "case_key", "graph_digest",
+    "TunedParams", "tune_mode", "save_artifact", "load_tuned",
+    "artifact_path",
 ]

@@ -1,0 +1,180 @@
+"""Content-addressed on-disk result cache for the experiment service.
+
+A simulated case is a pure function of (task graph, configuration, cost
+model, simulator code).  The cache keys on exactly that content — a SHA-256
+over the graph's arrays, every ``CaseSpec`` knob, the ``SimConfig`` fields
+that can change results, and a code-version tag — so overlapping grids
+re-use results across processes and sessions, skipping both compilation and
+execution.  Keys deliberately exclude anything results are provably
+independent of: padding widths, chunking, execution strategy, and the graph's
+*name* (two identically-shaped graphs share entries).
+
+Entries store the per-case reduction the engine needs to rebuild a
+``SweepResult`` row bit-for-bit: the max per-worker clock (pre-barrier), the
+per-counter sums, and the termination info.  Everything is plain JSON under
+``<root>/<key[:2]>/<key>.json`` (root defaults to ``experiments/cache``,
+overridable via ``REPRO_CACHE_DIR``), one file per case, written atomically.
+
+This module is deliberately jax-free so ``benchmarks.run cache stats/clear``
+answers without initializing a backend.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+from typing import Optional
+
+import numpy as np
+
+#: bump whenever a change anywhere in the simulator (scheduler step, cost
+#: charging, RNG streams, barrier accounting) can alter results for the
+#: same (graph, spec, cfg) — stale entries then miss instead of lying.
+CODE_VERSION = "sweep-engine-v2"
+
+DEFAULT_ROOT = os.path.join("experiments", "cache")
+
+#: record fields every entry must carry (see sweep.py's assembly)
+RECORD_FIELDS = ("clock_max", "counters", "n_done", "overflow", "step_i")
+
+
+def graph_digest(graph) -> str:
+    """Content hash of a TaskGraph: its five arrays plus mem_bound."""
+    d = getattr(graph, "_content_digest", None)
+    if d is not None:
+        return d
+    h = hashlib.sha256()
+    for a in (graph.dur, graph.first_child, graph.n_children, graph.notify,
+              graph.join_dep):
+        arr = np.ascontiguousarray(np.asarray(a, np.int64))
+        h.update(arr.tobytes())
+    # engine quantizes mem_bound to 3 decimals before tracing (sweep.py)
+    h.update(repr(round(float(graph.mem_bound), 3)).encode())
+    d = h.hexdigest()
+    try:
+        graph._content_digest = d   # memoize; graphs are immutable in use
+    except Exception:
+        pass
+    return d
+
+
+def case_key(gdigest: str, spec, cfg) -> str:
+    """Cache key for one (graph, CaseSpec, SimConfig) triple.
+
+    ``zone_size`` (not ``n_zones``) enters the key because it is what the
+    simulator actually consumes; ``cfg.n_workers`` does not (the engine
+    overrides it with the spec's own worker count + padding, and results
+    are padding-invariant by contract).
+    """
+    blob = json.dumps(dict(
+        v=CODE_VERSION,
+        graph=gdigest,
+        mode=spec.mode, n_workers=spec.n_workers, zone_size=spec.zone_size,
+        seed=spec.seed, n_victim=spec.n_victim, n_steal=spec.n_steal,
+        t_interval=spec.t_interval, p_local=repr(float(spec.p_local)),
+        queue_cap=cfg.queue_cap, stack_cap=cfg.stack_cap,
+        max_steps=cfg.max_steps,
+        costs={k: repr(v) for k, v in
+               sorted(dataclasses.asdict(cfg.costs).items())},
+    ), sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+class ResultCache:
+    """Persistent per-case result store with hit/miss accounting."""
+
+    def __init__(self, root: Optional[str] = None):
+        self.root = str(root or os.environ.get("REPRO_CACHE_DIR",
+                                               DEFAULT_ROOT))
+        self.hits = 0
+        self.misses = 0
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, key[:2], key + ".json")
+
+    def get(self, key: str, required_counters=()) -> Optional[dict]:
+        """Fetch an entry; schema-stale records are misses, not hits.
+
+        ``required_counters`` lets the engine demand every counter it will
+        read (an entry written before a counter existed must re-execute)."""
+        try:
+            with open(self._path(key)) as f:
+                rec = json.load(f)
+        except (OSError, ValueError):
+            self.misses += 1
+            return None
+        if (not all(k in rec for k in RECORD_FIELDS)
+                or not all(n in rec["counters"] for n in required_counters)):
+            self.misses += 1
+            return None
+        self.hits += 1
+        return rec
+
+    def put(self, key: str, record: dict) -> None:
+        assert all(k in record for k in RECORD_FIELDS), record.keys()
+        path = self._path(key)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(record, f)
+            os.replace(tmp, path)   # atomic: concurrent writers both win
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def _entries(self):
+        if not os.path.isdir(self.root):
+            return
+        for sub in sorted(os.listdir(self.root)):
+            d = os.path.join(self.root, sub)
+            if not os.path.isdir(d):
+                continue
+            for name in sorted(os.listdir(d)):
+                if name.endswith(".json"):
+                    yield os.path.join(d, name)
+
+    def stats(self) -> dict:
+        n = size = 0
+        for path in self._entries():
+            n += 1
+            try:
+                size += os.path.getsize(path)
+            except OSError:
+                pass
+        return dict(root=self.root, entries=n, bytes=size,
+                    session_hits=self.hits, session_misses=self.misses,
+                    code_version=CODE_VERSION)
+
+    def clear(self) -> int:
+        """Delete every entry; returns how many were removed."""
+        n = 0
+        for path in list(self._entries()):
+            try:
+                os.unlink(path)
+                n += 1
+            except OSError:
+                pass
+        return n
+
+
+def resolve(cache) -> Optional[ResultCache]:
+    """Normalize run_cases' ``cache=`` argument.
+
+    ``None``/``False`` → no caching; ``True`` → the default on-disk cache;
+    a ``ResultCache`` instance → itself (callers pin a root for testing or
+    cold/warm measurement protocols).
+    """
+    if cache is None or cache is False:
+        return None
+    if cache is True:
+        return ResultCache()
+    assert isinstance(cache, ResultCache), cache
+    return cache

@@ -1,0 +1,230 @@
+"""Executor layer of the experiment service: how a planned chunk runs.
+
+Every executor consumes one :class:`~repro.core.plan.ChunkPlan` against the
+shared :class:`ExecContext` (padded graphs + padded ``SimConfig``) and
+returns the same per-case raw arrays — bitwise identical across executors,
+which is the whole point (tests/test_sweep.py asserts it):
+
+* ``serial``  — one jitted dispatch per case; all cases share one compiled
+  shape thanks to the plan's common paddings.  Wins for heterogeneous
+  DLB-knob chunks on single-device CPU hosts, where a vmapped chunk is
+  straggler-bound (it steps until its slowest member finishes).
+* ``vmap``    — today's batched path: stack the chunk, pad it to the plan's
+  power-of-two size with *inert* cases, and run one compiled
+  ``vmap``-of-steps while loop.
+* ``sharded`` — ``shard_map`` of the same batched body over the batch axis
+  and ``jax.devices()``: each device drives its own while loop over its
+  slice (no collectives, so a device whose slice finishes early stops
+  stepping).  Chunks pad up to a device-count multiple; padding lanes are
+  inert cases that terminate before their first step.
+
+Inert padding: a padding lane replays the chunk's first case against a
+zero-task graph, so the step function's ``running`` gate is false from
+step 0 — padding costs (almost) nothing and is dropped on the way out.
+
+``strategy="auto"`` picks ``sharded`` whenever more than one device is
+visible (e.g. ``XLA_FLAGS=--xla_force_host_platform_device_count=8``, or a
+real accelerator mesh), otherwise ``vmap`` with a ``serial`` fallback for
+heterogeneous DLB chunks on CPU (measured: docs/BENCHMARKS.md).
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.core.plan import CaseSpec, ChunkPlan
+from repro.core.scheduler import (NC, GraphArrays, SimConfig, SweepCase,
+                                  _build_step, _init_state, _run_cached,
+                                  make_case, make_params)
+from repro.core.taskgraph import TaskGraph
+
+
+class ChunkRaw(NamedTuple):
+    """Per-case raw outputs of one chunk, real cases only (padding dropped)."""
+    clock: np.ndarray      # (n, W) int
+    ctr: np.ndarray        # (n, W, NC) int
+    n_done: np.ndarray     # (n,)
+    overflow: np.ndarray   # (n,) bool
+    step_i: np.ndarray     # (n,)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecContext:
+    """Shared executor inputs fixed by the plan: padded config + graphs."""
+    cfg: SimConfig                   # n_workers == the plan's w_pad
+    gq_cap: int
+    graphs: Sequence[TaskGraph]
+    garr: Sequence[GraphArrays]      # padded to the plan's t_pad
+
+    def case_for(self, s: CaseSpec) -> SweepCase:
+        return make_case(
+            s.mode, s.n_workers, s.zone_size, s.seed,
+            round(float(self.graphs[s.graph].mem_bound), 3),
+            make_params(s.n_victim, s.n_steal, s.t_interval, s.p_local))
+
+
+def _batch_body(cfg: SimConfig, gq_cap: int, gb, cb: SweepCase):
+    """Run a stacked batch of (graph, case) pairs to completion.
+
+    The while loop is written manually over vmapped *steps* rather than
+    vmapping the whole per-config run: the step function is a strict no-op
+    for finished elements (see ``_build_step``'s ``running`` gate), so the
+    loop needs no per-element freeze — which would otherwise materialize a
+    select over the entire simulator state every iteration.  Returns only
+    the arrays the host needs (clock, counters, termination info)."""
+
+    def init_one(g, case):
+        return _init_state(g, cfg.n_workers, cfg.stack_cap, cfg.queue_cap,
+                           gq_cap, case.seed)
+
+    def step_one(g, case, st):
+        return _build_step(cfg.n_workers, cfg.stack_cap, cfg.costs, g, case,
+                           cfg.max_steps)(st)
+
+    step_b = jax.vmap(step_one)
+
+    def cond(st):
+        return jnp.any((st.n_done < gb.n_tasks)
+                       & (st.step_i < cfg.max_steps) & ~st.overflow)
+
+    st0 = jax.vmap(init_one)(gb, cb)
+    st = jax.lax.while_loop(cond, lambda s: step_b(gb, cb, s), st0)
+    return st.clock, st.ctr, st.n_done, st.overflow, st.step_i
+
+
+_run_batch = jax.jit(_batch_body, static_argnums=(0, 1))
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _run_batch_sharded(cfg: SimConfig, gq_cap: int, n_dev: int, gb,
+                       cb: SweepCase):
+    """``shard_map`` of the batched body over the leading batch axis.
+
+    Each device traces the identical per-shard program (the body has no
+    collectives), so results are bitwise those of ``_run_batch`` on the
+    same lanes — sharding only changes *where* a lane runs."""
+    mesh = Mesh(np.asarray(jax.devices()[:n_dev]), ("b",))
+    body = functools.partial(_batch_body, cfg, gq_cap)
+    # check_rep=False: jax 0.4.x has no replication rule for while_loop;
+    # nothing here is replicated anyway (every in/out is batch-sharded)
+    return shard_map(body, mesh=mesh, in_specs=(P("b"), P("b")),
+                     out_specs=(P("b"),) * 5, check_rep=False)(gb, cb)
+
+
+def _stack_chunk(ctx: ExecContext, specs_chunk: Sequence[CaseSpec],
+                 padded: int):
+    """Stack a chunk's graphs and cases, padding with inert lanes."""
+    cases = [ctx.case_for(s) for s in specs_chunk]
+    garrs = [ctx.garr[s.graph] for s in specs_chunk]
+    if padded > len(specs_chunk):
+        # zero-task graph: the lane's running gate is false from step 0
+        inert = garrs[0]._replace(n_tasks=jnp.int32(0))
+        garrs = garrs + [inert] * (padded - len(specs_chunk))
+        cases = cases + [cases[0]] * (padded - len(cases))
+    gb = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *garrs)
+    cb = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *cases)
+    return gb, cb
+
+
+class Executor(abc.ABC):
+    """One way of running a planned chunk.  Stateless; see EXECUTORS."""
+
+    name: str = "?"
+
+    @abc.abstractmethod
+    def run_chunk(self, ctx: ExecContext, specs: Sequence[CaseSpec],
+                  chunk: ChunkPlan) -> ChunkRaw:
+        """Run ``chunk.indices`` of ``specs``; rows follow chunk order."""
+
+
+class SerialExecutor(Executor):
+    name = "serial"
+
+    def run_chunk(self, ctx, specs, chunk):
+        n, W = chunk.n_real, ctx.cfg.n_workers
+        clock = np.zeros((n, W), np.int64)
+        ctr = np.zeros((n, W, NC), np.int64)
+        n_done = np.zeros(n, np.int64)
+        overflow = np.zeros(n, bool)
+        step_i = np.zeros(n, np.int64)
+        for j, i in enumerate(chunk.indices):
+            s = specs[i]
+            st = jax.block_until_ready(_run_cached(
+                ctx.cfg, ctx.gq_cap, ctx.garr[s.graph], ctx.case_for(s)))
+            clock[j] = np.asarray(st.clock)
+            ctr[j] = np.asarray(st.ctr)
+            n_done[j] = int(st.n_done)
+            overflow[j] = bool(st.overflow)
+            step_i[j] = int(st.step_i)
+        return ChunkRaw(clock, ctr, n_done, overflow, step_i)
+
+
+class VmapExecutor(Executor):
+    name = "vmap"
+
+    def padded_size(self, chunk: ChunkPlan) -> int:
+        return chunk.padded_size
+
+    def run_chunk(self, ctx, specs, chunk):
+        n = chunk.n_real
+        gb, cb = _stack_chunk(ctx, [specs[i] for i in chunk.indices],
+                              self.padded_size(chunk))
+        cl, ct, nd, ov, si = jax.block_until_ready(
+            self._dispatch(ctx, gb, cb))
+        return ChunkRaw(np.asarray(cl)[:n], np.asarray(ct)[:n],
+                        np.asarray(nd)[:n], np.asarray(ov)[:n],
+                        np.asarray(si)[:n])
+
+    def _dispatch(self, ctx, gb, cb):
+        return _run_batch(ctx.cfg, ctx.gq_cap, gb, cb)
+
+
+class ShardedExecutor(VmapExecutor):
+    name = "sharded"
+
+    def padded_size(self, chunk: ChunkPlan) -> int:
+        # device multiple on top of the plan's power of two, so compiled
+        # shapes stay shared *and* every shard gets equal lanes
+        n_dev = jax.device_count()
+        p = chunk.padded_size
+        return -(-p // n_dev) * n_dev
+
+    def _dispatch(self, ctx, gb, cb):
+        return _run_batch_sharded(ctx.cfg, ctx.gq_cap, jax.device_count(),
+                                  gb, cb)
+
+
+EXECUTORS = {e.name: e for e in
+             (SerialExecutor(), VmapExecutor(), ShardedExecutor())}
+
+#: accepted ``strategy=`` values; "batched" is the historical alias of vmap
+STRATEGIES = ("auto",) + tuple(EXECUTORS) + ("batched",)
+
+
+def select_executor(strategy: str, chunk: ChunkPlan) -> Executor:
+    """Resolve a strategy to an executor for one chunk.
+
+    ``auto``: sharded when >1 device is visible; otherwise vmap, except for
+    heterogeneous DLB-knob chunks on CPU where per-case dispatch measures
+    faster (straggler-bound batches; docs/BENCHMARKS.md)."""
+    assert strategy in STRATEGIES, (strategy, STRATEGIES)
+    if strategy == "batched":
+        return EXECUTORS["vmap"]
+    if strategy != "auto":
+        return EXECUTORS[strategy]
+    if jax.device_count() > 1:
+        return EXECUTORS["sharded"]
+    if (chunk.hetero_dlb and chunk.n_real > 1
+            and jax.default_backend() == "cpu"):
+        return EXECUTORS["serial"]
+    return EXECUTORS["vmap"]

@@ -1,0 +1,137 @@
+"""Planning layer of the experiment service: what to run, in which shapes.
+
+``build_plan`` turns a flat list of :class:`CaseSpec` configurations into an
+explicit :class:`SweepPlan` — the paddings every executor must share (worker
+lane width, task count, GOMP queue capacity) plus the (mode, graph)-grouped
+chunks the batch is cut into.  Planning is pure host-side bookkeeping: it
+never touches jax or runs the simulator, so the grouping and padding
+invariants are unit-testable in milliseconds (tests/test_plan.py).
+
+The plan is executor-independent by contract: results are bitwise identical
+whatever the chunking, padding, or execution strategy (tests/test_sweep.py).
+Grouping exists purely for *speed* — a vmapped chunk executes the union of
+its members' control flow, so chunks never cross a mode boundary (one na_ws
+element would drag a whole chunk of cheaper modes through the transfer
+machinery) and sort by graph and DLB knobs so heterogeneity clusters.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+from repro.core.scheduler import MODES
+from repro.core.taskgraph import TaskGraph
+
+#: modes whose DLB knobs (n_victim/n_steal/t_interval/p_local) are live;
+#: a chunk mixing knob values in these modes is straggler-prone under vmap
+DLB_MODES = ("na_rp", "na_ws")
+
+
+@dataclasses.dataclass(frozen=True)
+class CaseSpec:
+    """Host-side description of one simulator configuration."""
+    mode: str = "xgomptb"
+    n_workers: int = 32
+    n_zones: int = 4
+    seed: int = 0
+    n_victim: int = 4
+    n_steal: int = 8
+    t_interval: int = 100
+    p_local: float = 1.0
+    graph: int = 0          # index into the graphs list passed to run_cases
+
+    def __post_init__(self):
+        assert self.mode in MODES, self.mode
+
+    @property
+    def zone_size(self) -> int:
+        return max(self.n_workers // self.n_zones, 1)
+
+    @property
+    def knobs(self) -> tuple:
+        return (self.n_victim, self.n_steal, self.t_interval, self.p_local)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkPlan:
+    """One executor dispatch: a same-mode slice of the planned cases.
+
+    ``indices`` point into the spec list the plan was built from; executors
+    pad the chunk from ``n_real`` up to ``padded_size`` with *inert* cases
+    (the first member's configuration against a zero-task graph, so padding
+    lanes terminate before their first step) and drop the padding rows on
+    the way out.
+    """
+    indices: Tuple[int, ...]
+    mode: str
+    hetero_dlb: bool    # >1 distinct DLB knob tuple in a DLB mode
+
+    @property
+    def n_real(self) -> int:
+        return len(self.indices)
+
+    @property
+    def padded_size(self) -> int:
+        """Next power of two: keeps the set of compiled shapes small."""
+        p = 1
+        while p < self.n_real:
+            p *= 2
+        return p
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPlan:
+    """Everything executors need to agree on before running a sweep."""
+    n_cases: int
+    w_pad: int                      # shared worker lane width (max n_workers)
+    t_pad: int                      # shared task count (max graph size)
+    gq_cap: int                     # GOMP global-queue capacity
+    chunks: Tuple[ChunkPlan, ...]
+
+    def validate(self) -> None:
+        seen = sorted(i for c in self.chunks for i in c.indices)
+        assert seen == list(range(self.n_cases)), "chunks must partition"
+
+
+def build_plan(graphs: Sequence[TaskGraph], specs: Sequence[CaseSpec],
+               chunk_size: int = 64) -> SweepPlan:
+    """Group ``specs`` into same-mode chunks and fix the shared paddings.
+
+    Grouping is stable and deterministic: cases sort by (mode, graph, DLB
+    knobs) and fill chunks greedily up to ``chunk_size``, never crossing a
+    mode boundary.  Results scatter back by index, so execution order never
+    affects the returned arrays.
+    """
+    specs = list(specs)
+    assert specs, "empty sweep"
+    assert chunk_size >= 1
+    assert all(0 <= s.graph < len(graphs) for s in specs)
+    w_pad = max(s.n_workers for s in specs)
+    t_pad = max(g.n_tasks for g in graphs)
+    # GOMP's single global queue must hold every live task; other modes
+    # leave it untouched, so a tiny placeholder keeps the state small
+    gq_cap = t_pad + 2 if any(s.mode == "gomp" for s in specs) else 4
+
+    order = sorted(range(len(specs)), key=lambda i: (
+        MODES.index(specs[i].mode), specs[i].graph, specs[i].n_steal,
+        specs[i].n_victim, specs[i].t_interval, specs[i].p_local,
+        specs[i].seed))
+    groups: List[List[int]] = []
+    for i in order:
+        if (groups and specs[groups[-1][0]].mode == specs[i].mode
+                and len(groups[-1]) < chunk_size):
+            groups[-1].append(i)
+        else:
+            groups.append([i])
+    chunks = []
+    for idxs in groups:
+        mode = specs[idxs[0]].mode
+        hetero = (mode in DLB_MODES
+                  and len({specs[i].knobs for i in idxs}) > 1)
+        chunks.append(ChunkPlan(indices=tuple(idxs), mode=mode,
+                                hetero_dlb=hetero))
+    plan = SweepPlan(n_cases=len(specs), w_pad=w_pad, t_pad=t_pad,
+                     gq_cap=gq_cap, chunks=tuple(chunks))
+    plan.validate()
+    return plan

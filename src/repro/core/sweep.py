@@ -1,14 +1,22 @@
-"""Vectorized experiment engine: whole scheduler-ablation grids per compile.
+"""The experiment service: batched scheduler-ablation sweeps, layered.
 
 The paper's headline results are ablation *grids* — mode × worker count ×
 task granularity × DLB parameters (Figs. 4-11, Tables I-IV) — and the
 simulator's per-configuration cost is dominated by dispatch overhead on tiny
-arrays, not by useful work.  This module batches independent simulations the
-same way Taskgraph amortizes per-task overhead by preprocessing whole task
-graphs: build the full grid host-side, pad every axis to a common shape
-(graphs to a common task count, workers to a common lane width), and run the
-grid through ``jax.vmap`` of the scheduler's fully-traced ``_run_jit`` in one
-(or a few chunked) compiled calls.
+arrays, not by useful work.  This module is the thin orchestration on top of
+three explicit layers:
+
+* **plan** (`repro.core.plan`) — case list → ``SweepPlan``: shared paddings
+  (worker lanes, task counts, GOMP queue capacity) and (mode, graph)-grouped
+  chunks.  Pure host-side; unit-tested without running the simulator.
+* **cache** (`repro.core.cache`) — a content-addressed on-disk result store
+  consulted *per case* before anything executes: re-running overlapping
+  grids skips both compilation and execution, and only cache misses are
+  planned at all.
+* **executors** (`repro.core.executors`) — ``serial`` / ``vmap`` /
+  ``sharded`` ways of running a planned chunk, bitwise identical by
+  contract; ``strategy="auto"`` shards the batch axis over ``jax.devices()``
+  whenever more than one device is visible.
 
 Two entry points:
 
@@ -21,45 +29,26 @@ Two entry points:
 
 Correctness contract (asserted by tests/test_sweep.py): a batched run is
 bitwise identical to running each configuration alone through the same
-engine, and a single-configuration engine run matches ``run_schedule``.
+engine under any executor, a single-configuration engine run matches
+``run_schedule``, and a cache hit reproduces the executed result exactly.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
+import time
 from typing import Dict, List, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import barrier as barrier_mod
-from repro.core.scheduler import (CTR_NAMES, MODES, SimConfig, SweepCase,
-                                  _build_step, _init_state, _run_cached,
-                                  graph_arrays, make_case, make_params)
+from repro.core import cache as cache_mod
+from repro.core.executors import STRATEGIES, ExecContext, select_executor
+from repro.core.plan import CaseSpec, build_plan
+from repro.core.scheduler import CTR_NAMES, SimConfig, graph_arrays
 from repro.core.taskgraph import TaskGraph
 
-
-@dataclasses.dataclass(frozen=True)
-class CaseSpec:
-    """Host-side description of one simulator configuration."""
-    mode: str = "xgomptb"
-    n_workers: int = 32
-    n_zones: int = 4
-    seed: int = 0
-    n_victim: int = 4
-    n_steal: int = 8
-    t_interval: int = 100
-    p_local: float = 1.0
-    graph: int = 0          # index into the graphs list passed to run_cases
-
-    def __post_init__(self):
-        assert self.mode in MODES, self.mode
-
-    @property
-    def zone_size(self) -> int:
-        return max(self.n_workers // self.n_zones, 1)
+__all__ = ["CaseSpec", "SweepResult", "run_cases", "run_grid"]
 
 
 @dataclasses.dataclass
@@ -78,6 +67,7 @@ class SweepResult:
     completed: np.ndarray             # (B,) bool
     steps: np.ndarray                 # (B,) int64
     wall_s: float = 0.0               # engine wall-clock for this sweep
+    cache_hits: int = 0               # cases served from the result cache
     grid_axes: Optional[Dict[str, tuple]] = None
 
     def _grid(self, a: np.ndarray) -> np.ndarray:
@@ -103,151 +93,86 @@ class SweepResult:
             counters={k: int(v[i]) for k, v in self.counters.items()})
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1))
-def _run_batch(cfg: SimConfig, gq_cap: int, gb, cb: SweepCase):
-    """Run a stacked batch of (graph, case) pairs to completion.
-
-    The while loop is written manually over vmapped *steps* rather than
-    vmapping the whole per-config run: the step function is a strict no-op
-    for finished elements (see ``_build_step``'s ``running`` gate), so the
-    loop needs no per-element freeze — which would otherwise materialize a
-    select over the entire simulator state every iteration.  Returns only
-    the arrays the host needs (clock, counters, termination info)."""
-
-    def init_one(g, case):
-        return _init_state(g, cfg.n_workers, cfg.stack_cap, cfg.queue_cap,
-                           gq_cap, case.seed)
-
-    def step_one(g, case, st):
-        return _build_step(cfg.n_workers, cfg.stack_cap, cfg.costs, g, case,
-                           cfg.max_steps)(st)
-
-    step_b = jax.vmap(step_one)
-
-    def cond(st):
-        return jnp.any((st.n_done < gb.n_tasks)
-                       & (st.step_i < cfg.max_steps) & ~st.overflow)
-
-    st0 = jax.vmap(init_one)(gb, cb)
-    st = jax.lax.while_loop(cond, lambda s: step_b(gb, cb, s), st0)
-    return st.clock, st.ctr, st.n_done, st.overflow, st.step_i
-
-
-def _stack_cases(specs: Sequence[CaseSpec],
-                 graphs: Sequence[TaskGraph]) -> SweepCase:
-    cases = [make_case(s.mode, s.n_workers, s.zone_size, s.seed,
-                       round(float(graphs[s.graph].mem_bound), 3),
-                       make_params(s.n_victim, s.n_steal, s.t_interval,
-                                   s.p_local))
-             for s in specs]
-    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *cases)
-
-
 def run_cases(graphs: Sequence[TaskGraph] | TaskGraph,
               specs: Sequence[CaseSpec], cfg: SimConfig | None = None,
-              chunk_size: int = 64, strategy: str = "auto") -> SweepResult:
-    """Run every ``CaseSpec`` through the sweep engine.
+              chunk_size: int = 64, strategy: str = "auto",
+              cache=None) -> SweepResult:
+    """Run every ``CaseSpec`` through the experiment service.
 
-    Graphs are padded to a common task count, worker lanes to the maximum
-    ``n_workers`` in the batch.  Cases are grouped by (mode, graph) before
-    chunking: a vmapped batch runs the union of its members' control flow
-    (any element with a pending steal request drags the whole chunk through
-    the thief/transfer machinery), so homogeneous chunks are several times
-    cheaper than mixed ones.  Per-case results are returned in the original
-    ``specs`` order and are bitwise independent of the grouping — or of the
-    execution strategy.  Chunks beyond ``chunk_size`` are padded with
-    repeats to a full chunk so every call shares one compiled shape.
+    The result cache (``cache=True`` for the default on-disk store, or a
+    ``ResultCache`` instance) is consulted per case first; only misses are
+    planned, padded, and executed.  Graphs are padded to a common task
+    count, worker lanes to the maximum ``n_workers`` among the misses.
+    Per-case results return in the original ``specs`` order and are bitwise
+    independent of grouping, padding, caching, and execution strategy.
 
-    ``strategy``:
-
-    * ``"batched"`` — always vmap each chunk.
-    * ``"serial"``  — one jitted dispatch per case (still one compile for
-      the whole sweep, thanks to the shared padded shapes).
-    * ``"auto"``    — vmap a chunk unless it is a heterogeneous DLB-knob
-      group on a CPU backend.  Measured on CPU hosts, uniform-config
-      chunks (seed replicas, the GOMP→XGOMPTB ladders) batch at ~4-5x
-      over per-config dispatch, but DLB chunks with mixed
-      n_victim/n_steal/t_interval are bandwidth- and straggler-bound (the
-      chunk steps until its slowest member finishes) and lose to serial
-      dispatch; accelerator backends always batch.
+    ``strategy``: ``"serial"`` / ``"vmap"`` (alias ``"batched"``) /
+    ``"sharded"`` force one executor; ``"auto"`` shards over
+    ``jax.devices()`` when more than one is visible, else vmaps uniform
+    chunks and serializes heterogeneous DLB-knob chunks on CPU (see
+    repro.core.executors).
     """
-    import time as _time
-
     if isinstance(graphs, TaskGraph):
         graphs = [graphs]
     graphs = list(graphs)
     specs = list(specs)
     assert specs, "empty sweep"
     assert all(0 <= s.graph < len(graphs) for s in specs)
+    assert strategy in STRATEGIES, (strategy, STRATEGIES)
     cfg = cfg or SimConfig()
 
-    t0 = _time.perf_counter()
-    w_pad = max(s.n_workers for s in specs)
-    t_pad = max(g.n_tasks for g in graphs)
-    gq_cap = t_pad + 2 if any(s.mode == "gomp" for s in specs) else 4
-    run_cfg = dataclasses.replace(cfg, n_workers=w_pad)
-    garr = [graph_arrays(g, t_pad) for g in graphs]
-
+    t0 = time.perf_counter()
     B = len(specs)
-    # stable grouping by (mode, graph, knobs); results scatter back by index.
-    # Chunks never cross a mode boundary — one na_ws element would drag a
-    # whole chunk of cheaper modes through the transfer machinery — and each
-    # chunk pads to a power of two so compiled shapes stay few.
-    order = sorted(range(B), key=lambda i: (
-        MODES.index(specs[i].mode), specs[i].graph, specs[i].n_steal,
-        specs[i].n_victim, specs[i].t_interval))
-    batches: List[List[int]] = []
-    for i in order:
-        if (batches and specs[batches[-1][0]].mode == specs[i].mode
-                and len(batches[-1]) < chunk_size):
-            batches[-1].append(i)
-        else:
-            batches.append([i])
-    clock = np.zeros((B, w_pad), np.int64)
-    ctr = np.zeros((B, w_pad, len(CTR_NAMES)), np.int64)
+    clock_max = np.zeros(B, np.int64)
+    ctr_sum = np.zeros((B, len(CTR_NAMES)), np.int64)
     n_done = np.zeros(B, np.int64)
     overflow = np.zeros(B, bool)
     step_i = np.zeros(B, np.int64)
-    assert strategy in ("auto", "batched", "serial"), strategy
-    on_cpu = jax.default_backend() == "cpu"
-    for idxs in batches:
-        chunk = [specs[i] for i in idxs]
-        hetero_dlb = (chunk[0].mode in ("na_rp", "na_ws") and len(
-            {(s.n_victim, s.n_steal, s.t_interval, s.p_local)
-             for s in chunk}) > 1)
-        serialize = strategy == "serial" or (
-            strategy == "auto" and on_cpu and hetero_dlb and len(chunk) > 1)
-        if serialize:
-            for i in idxs:
-                s = specs[i]
-                case = make_case(
-                    s.mode, s.n_workers, s.zone_size, s.seed,
-                    round(float(graphs[s.graph].mem_bound), 3),
-                    make_params(s.n_victim, s.n_steal, s.t_interval,
-                                s.p_local))
-                st = jax.block_until_ready(
-                    _run_cached(run_cfg, gq_cap, garr[s.graph], case))
-                clock[i] = np.asarray(st.clock)
-                ctr[i] = np.asarray(st.ctr)
-                n_done[i] = int(st.n_done)
-                overflow[i] = bool(st.overflow)
-                step_i[i] = int(st.step_i)
-            continue
-        n_real = len(chunk)
-        padded = 1
-        while padded < n_real:
-            padded *= 2
-        chunk = chunk + [chunk[0]] * (padded - n_real)
-        gb = jax.tree_util.tree_map(
-            lambda *xs: jnp.stack(xs), *[garr[s.graph] for s in chunk])
-        cb = _stack_cases(chunk, graphs)
-        cl, ct, nd, ov, si = jax.block_until_ready(
-            _run_batch(run_cfg, gq_cap, gb, cb))
-        clock[idxs] = np.asarray(cl)[:n_real]
-        ctr[idxs] = np.asarray(ct)[:n_real]
-        n_done[idxs] = np.asarray(nd)[:n_real]
-        overflow[idxs] = np.asarray(ov)[:n_real]
-        step_i[idxs] = np.asarray(si)[:n_real]
+
+    store = cache_mod.resolve(cache)
+    keys: List[Optional[str]] = [None] * B
+    miss = list(range(B))
+    hits = 0
+    if store is not None:
+        digests = [cache_mod.graph_digest(g) for g in graphs]
+        miss = []
+        for i, s in enumerate(specs):
+            keys[i] = cache_mod.case_key(digests[s.graph], s, cfg)
+            rec = store.get(keys[i], required_counters=CTR_NAMES)
+            if rec is None:
+                miss.append(i)
+                continue
+            hits += 1
+            clock_max[i] = int(rec["clock_max"])
+            ctr_sum[i] = [int(rec["counters"][n]) for n in CTR_NAMES]
+            n_done[i] = int(rec["n_done"])
+            overflow[i] = bool(rec["overflow"])
+            step_i[i] = int(rec["step_i"])
+
+    if miss:
+        miss_specs = [specs[i] for i in miss]
+        plan = build_plan(graphs, miss_specs, chunk_size=chunk_size)
+        run_cfg = dataclasses.replace(cfg, n_workers=plan.w_pad)
+        ctx = ExecContext(
+            cfg=run_cfg, gq_cap=plan.gq_cap, graphs=graphs,
+            garr=[graph_arrays(g, plan.t_pad) for g in graphs])
+        for chunk in plan.chunks:
+            ex = select_executor(strategy, chunk)
+            raw = ex.run_chunk(ctx, miss_specs, chunk)
+            for j, mi in enumerate(chunk.indices):
+                i = miss[mi]
+                clock_max[i] = int(raw.clock[j].max())
+                ctr_sum[i] = raw.ctr[j].sum(axis=0)
+                n_done[i] = int(raw.n_done[j])
+                overflow[i] = bool(raw.overflow[j])
+                step_i[i] = int(raw.step_i[j])
+                if store is not None:
+                    store.put(keys[i], dict(
+                        clock_max=int(clock_max[i]),
+                        counters={n: int(ctr_sum[i][k])
+                                  for k, n in enumerate(CTR_NAMES)},
+                        n_done=int(n_done[i]), overflow=bool(overflow[i]),
+                        step_i=int(step_i[i])))
 
     # barrier episode per case (host-side: mode and W are known per spec,
     # matching run_schedule's accounting bit-for-bit)
@@ -261,9 +186,8 @@ def run_cases(graphs: Sequence[TaskGraph] | TaskGraph,
         ep_t[i] = int(ep.time_ns)
         ep_a[i] = int(ep.atomic_ops)
 
-    time_ns = clock.max(axis=1).astype(np.int64) + ep_t
-    counters = {n: ctr[:, :, i].sum(axis=1).astype(np.int64)
-                for i, n in enumerate(CTR_NAMES)}
+    time_ns = clock_max + ep_t
+    counters = {n: ctr_sum[:, i].copy() for i, n in enumerate(CTR_NAMES)}
     counters["atomic_ops"] = counters["atomic_ops"] + ep_a
     completed = np.array(
         [n_done[i] == graphs[s.graph].n_tasks and not overflow[i]
@@ -271,8 +195,7 @@ def run_cases(graphs: Sequence[TaskGraph] | TaskGraph,
     return SweepResult(
         specs=specs, graph_names=[g.name for g in graphs],
         time_ns=time_ns, counters=counters, completed=completed,
-        steps=step_i.astype(np.int64),
-        wall_s=_time.perf_counter() - t0)
+        steps=step_i, wall_s=time.perf_counter() - t0, cache_hits=hits)
 
 
 def run_grid(graphs: Sequence[TaskGraph] | TaskGraph,
@@ -285,7 +208,8 @@ def run_grid(graphs: Sequence[TaskGraph] | TaskGraph,
              p_local: Sequence[float] = (1.0,),
              n_zones: int | None = None,
              cfg: SimConfig | None = None,
-             chunk_size: int = 64, strategy: str = "auto") -> SweepResult:
+             chunk_size: int = 64, strategy: str = "auto",
+             cache=None) -> SweepResult:
     """Cartesian sweep: app × mode × workers × seed × DLB knobs.
 
     Returns a ``SweepResult`` whose ``grid_axes`` names every axis (in that
@@ -308,6 +232,6 @@ def run_grid(graphs: Sequence[TaskGraph] | TaskGraph,
         for ti in t_interval for pl in p_local
     ]
     res = run_cases(graphs, specs, cfg=cfg, chunk_size=chunk_size,
-                    strategy=strategy)
+                    strategy=strategy, cache=cache)
     res.grid_axes = axes
     return res

@@ -1,0 +1,132 @@
+"""Result-cache tests: content addressing, round-trips, and the engine
+integration contract (a cache hit replays the executed result bit-for-bit)."""
+
+import dataclasses
+
+import pytest
+
+from repro.core import taskgraph
+from repro.core.cache import (ResultCache, case_key, graph_digest, resolve)
+from repro.core.costs import CostModel
+from repro.core.plan import CaseSpec
+from repro.core.scheduler import CTR_NAMES, SimConfig
+from repro.core.sweep import run_cases
+
+CFG = SimConfig(n_workers=8, n_zones=2, max_steps=60_000)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return taskgraph.fib(7)
+
+
+def test_graph_digest_is_content_addressed(graph):
+    same = taskgraph.fib(7)
+    other = taskgraph.fib(8)
+    assert graph_digest(graph) == graph_digest(same)
+    assert graph_digest(graph) != graph_digest(other)
+    # mem_bound participates (it changes execution physics)
+    bumped = dataclasses.replace(same, mem_bound=same.mem_bound + 0.1)
+    assert graph_digest(graph) != graph_digest(bumped)
+
+
+def test_case_key_sensitivity(graph):
+    g = graph_digest(graph)
+    base = CaseSpec(mode="na_ws", n_workers=8, n_zones=2)
+    k0 = case_key(g, base, CFG)
+    assert k0 == case_key(g, base, CFG)
+    for change in (dict(mode="na_rp"), dict(seed=1), dict(n_victim=2),
+                   dict(n_steal=4), dict(t_interval=30), dict(p_local=0.5),
+                   dict(n_workers=4)):
+        assert case_key(g, dataclasses.replace(base, **change), CFG) != k0, \
+            change
+    # simulator shape/limit fields change results -> change keys
+    assert case_key(g, base, dataclasses.replace(CFG, max_steps=10)) != k0
+    assert case_key(g, base, dataclasses.replace(CFG, queue_cap=8)) != k0
+    assert case_key(g, base, dataclasses.replace(
+        CFG, costs=CostModel(c_cache=3))) != k0
+    # cfg.n_workers is engine padding, provably result-independent
+    assert case_key(g, base, dataclasses.replace(CFG, n_workers=64)) == k0
+
+
+def test_put_get_roundtrip(tmp_path):
+    c = ResultCache(str(tmp_path))
+    rec = dict(clock_max=123, counters={n: 1 for n in CTR_NAMES},
+               n_done=7, overflow=False, step_i=42)
+    assert c.get("ab" + "0" * 62) is None
+    c.put("ab" + "0" * 62, rec)
+    assert c.get("ab" + "0" * 62) == rec
+    assert c.hits == 1 and c.misses == 1
+
+
+def test_stats_and_clear(tmp_path):
+    c = ResultCache(str(tmp_path))
+    rec = dict(clock_max=1, counters={}, n_done=0, overflow=False, step_i=0)
+    for i in range(3):
+        c.put(f"{i:02d}" + "f" * 62, rec)
+    st = c.stats()
+    assert st["entries"] == 3 and st["bytes"] > 0
+    assert c.clear() == 3
+    assert c.stats()["entries"] == 0
+
+
+def test_resolve(tmp_path):
+    assert resolve(None) is None
+    assert resolve(False) is None
+    assert isinstance(resolve(True), ResultCache)
+    c = ResultCache(str(tmp_path))
+    assert resolve(c) is c
+
+
+def test_engine_cache_hit_is_bitwise(tmp_path, graph):
+    """A warm re-run must reproduce the executed SweepResult exactly —
+    including counters and completion flags."""
+    c = ResultCache(str(tmp_path))
+    specs = [CaseSpec(mode=m, n_workers=w, n_zones=2, graph=0)
+             for m in ("xgomptb", "na_ws") for w in (4, 8)]
+    cold = run_cases(graph, specs, cfg=CFG, cache=c)
+    assert cold.cache_hits == 0
+    assert c.stats()["entries"] == len(specs)
+    warm = run_cases(graph, specs, cfg=CFG, cache=c)
+    assert warm.cache_hits == len(specs)
+    assert (warm.time_ns == cold.time_ns).all()
+    assert (warm.steps == cold.steps).all()
+    assert (warm.completed == cold.completed).all()
+    for n in CTR_NAMES:
+        assert (warm.counters[n] == cold.counters[n]).all(), n
+    # uncached engine run agrees too (the cache never changes physics)
+    plain = run_cases(graph, specs, cfg=CFG)
+    assert (plain.time_ns == cold.time_ns).all()
+
+
+def test_schema_stale_entry_is_a_miss(tmp_path, graph):
+    """An entry written before a counter existed re-executes instead of
+    crashing the assembly loop."""
+    import json
+    import os
+    c = ResultCache(str(tmp_path))
+    spec = CaseSpec(mode="xgomptb", n_workers=8, n_zones=2)
+    run_cases(graph, [spec], cfg=CFG, cache=c)
+    # strip one counter from the stored record, as if CTR_NAMES grew since
+    (path,) = [os.path.join(r, f) for r, _, fs in os.walk(str(tmp_path))
+               for f in fs]
+    with open(path) as f:
+        rec = json.load(f)
+    del rec["counters"]["exec"]
+    with open(path, "w") as f:
+        json.dump(rec, f)
+    res = run_cases(graph, [spec], cfg=CFG, cache=c)
+    assert res.cache_hits == 0
+    assert int(res.counters["exec"][0]) == graph.n_tasks
+
+
+def test_engine_partial_overlap(tmp_path, graph):
+    """Overlapping grids: only new cases execute; results are unaffected."""
+    c = ResultCache(str(tmp_path))
+    first = [CaseSpec(mode="xgomptb", n_workers=8, seed=s) for s in (0, 1)]
+    run_cases(graph, first, cfg=CFG, cache=c)
+    wider = first + [CaseSpec(mode="xgomptb", n_workers=8, seed=2)]
+    res = run_cases(graph, wider, cfg=CFG, cache=c)
+    assert res.cache_hits == 2
+    plain = run_cases(graph, wider, cfg=CFG)
+    assert (res.time_ns == plain.time_ns).all()

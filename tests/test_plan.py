@@ -1,0 +1,101 @@
+"""Plan-layer unit tests: chunk grouping and padding invariants.
+
+Everything here is host-side planning only — no simulator execution, no
+compiled code; the whole module runs in milliseconds."""
+
+import pytest
+
+from repro.core import taskgraph
+from repro.core.plan import CaseSpec, build_plan
+from repro.core.scheduler import MODES
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    return [taskgraph.fib(5), taskgraph.fib(7)]
+
+
+def _mixed_specs(graphs):
+    return [
+        CaseSpec(mode=m, n_workers=w, n_zones=2, n_victim=nv, graph=gi)
+        for gi in range(len(graphs))
+        for m in ("gomp", "xgomptb", "na_ws")
+        for w in (4, 8)
+        for nv in (1, 4)
+    ]
+
+
+def test_chunks_partition_specs(graphs):
+    specs = _mixed_specs(graphs)
+    plan = build_plan(graphs, specs)
+    seen = sorted(i for c in plan.chunks for i in c.indices)
+    assert seen == list(range(len(specs)))
+    assert plan.n_cases == len(specs)
+
+
+def test_chunks_never_cross_modes(graphs):
+    specs = _mixed_specs(graphs)
+    plan = build_plan(graphs, specs)
+    for c in plan.chunks:
+        modes = {specs[i].mode for i in c.indices}
+        assert modes == {c.mode}
+
+
+def test_chunk_size_cap(graphs):
+    specs = [CaseSpec(mode="xgomptb", n_workers=8, seed=s) for s in range(10)]
+    plan = build_plan(graphs, specs, chunk_size=4)
+    sizes = [c.n_real for c in plan.chunks]
+    assert all(s <= 4 for s in sizes)
+    assert sum(sizes) == 10
+
+
+def test_padding_invariants(graphs):
+    specs = _mixed_specs(graphs)
+    plan = build_plan(graphs, specs)
+    assert plan.w_pad == max(s.n_workers for s in specs)
+    assert plan.t_pad == max(g.n_tasks for g in graphs)
+    for c in plan.chunks:
+        p = c.padded_size
+        assert p >= c.n_real
+        assert p & (p - 1) == 0, "padded size must be a power of two"
+        assert p < 2 * max(c.n_real, 1), "padding must be minimal"
+
+
+def test_gq_cap_rule(graphs):
+    with_gomp = [CaseSpec(mode="gomp", n_workers=4),
+                 CaseSpec(mode="xgomptb", n_workers=4)]
+    without = [CaseSpec(mode="xgomptb", n_workers=4),
+               CaseSpec(mode="na_ws", n_workers=4)]
+    t_pad = max(g.n_tasks for g in graphs)
+    assert build_plan(graphs, with_gomp).gq_cap == t_pad + 2
+    assert build_plan(graphs, without).gq_cap == 4
+
+
+def test_hetero_dlb_flag(graphs):
+    uniform = [CaseSpec(mode="na_ws", n_workers=8, n_victim=4, seed=s)
+               for s in range(4)]
+    mixed = [CaseSpec(mode="na_ws", n_workers=8, n_victim=nv)
+             for nv in (1, 4, 8)]
+    slb_mixed = [CaseSpec(mode="xgomptb", n_workers=8, n_victim=nv)
+                 for nv in (1, 4, 8)]
+    assert not build_plan(graphs, uniform).chunks[0].hetero_dlb
+    assert build_plan(graphs, mixed).chunks[0].hetero_dlb
+    # knob diversity is irrelevant outside the DLB modes
+    assert not build_plan(graphs, slb_mixed).chunks[0].hetero_dlb
+
+
+def test_grouping_sorts_by_mode_ladder(graphs):
+    specs = _mixed_specs(graphs)
+    plan = build_plan(graphs, specs)
+    chunk_modes = [MODES.index(c.mode) for c in plan.chunks]
+    assert chunk_modes == sorted(chunk_modes)
+
+
+def test_plan_deterministic(graphs):
+    specs = _mixed_specs(graphs)
+    assert build_plan(graphs, specs) == build_plan(graphs, specs)
+
+
+def test_zone_size_floor():
+    s = CaseSpec(mode="na_ws", n_workers=2, n_zones=4)
+    assert s.zone_size == 1

@@ -1,0 +1,113 @@
+"""Autotuner tests: ladder refinement, reference seeding, artifact I/O.
+
+Search runs use a tiny graph and machine so the whole module stays in
+unit-test time."""
+
+import pytest
+
+from repro.core import taskgraph, tune
+from repro.core.plan import CaseSpec
+from repro.core.scheduler import SimConfig
+from repro.core.sweep import run_cases
+from repro.core.tune import LADDERS, TunedParams
+
+CFG = SimConfig(n_workers=8, n_zones=2, max_steps=60_000)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return taskgraph.fib(8)
+
+
+def test_neighbors_stay_on_ladders():
+    p = TunedParams(n_victim=4, n_steal=8, t_interval=100, p_local=1.0)
+    for n in tune._neighbors(p):
+        assert n != p
+        for knob, ladder in LADDERS.items():
+            assert getattr(n, knob) in ladder
+    # edge of a ladder only has inward neighbors
+    edge = TunedParams(n_victim=1, n_steal=1, t_interval=10, p_local=0.25)
+    assert all(getattr(n, k) >= getattr(edge, k)
+               for n in tune._neighbors(edge) for k in LADDERS)
+
+
+def test_off_ladder_point_snaps():
+    p = TunedParams(n_victim=5, n_steal=8, t_interval=100, p_local=1.0)
+    nv = {n.n_victim for n in tune._neighbors(p) if n.n_victim != 5}
+    assert nv <= set(LADDERS["n_victim"])
+    assert nv, "an off-ladder knob must still produce ladder neighbors"
+
+
+def test_tune_matches_or_beats_seeded_reference(graph, tmp_path):
+    from repro.core.cache import ResultCache
+    cache = ResultCache(str(tmp_path))
+    ref = TunedParams(n_victim=4, n_steal=8, t_interval=100, p_local=1.0)
+    small = dict(n_victim=(1, 4), n_steal=(1, 8), t_interval=(10,),
+                 p_local=(1.0,))
+    r = tune.tune_mode(graph, "na_ws", CFG, coarse=small, extra=(ref,),
+                       rounds=1, survivors=2, cache=cache)
+    # the reference was evaluated, so the pick can only match or beat it
+    ref_res = run_cases(graph, [CaseSpec(
+        mode="na_ws", n_workers=CFG.n_workers, n_zones=CFG.n_zones,
+        n_victim=ref.n_victim, n_steal=ref.n_steal,
+        t_interval=ref.t_interval, p_local=ref.p_local)],
+        cfg=CFG, cache=cache)
+    assert r["makespan_ns"] <= int(ref_res.time_ns[0])
+    assert r["n_configs"] >= len(small["n_victim"]) * len(small["n_steal"])
+    # the winning point reproduces its reported makespan through the engine
+    p = r["params"]
+    win = run_cases(graph, [CaseSpec(
+        mode="na_ws", n_workers=CFG.n_workers, n_zones=CFG.n_zones,
+        n_victim=p.n_victim, n_steal=p.n_steal, t_interval=p.t_interval,
+        p_local=p.p_local)], cfg=CFG, cache=cache)
+    assert int(win.time_ns[0]) == r["makespan_ns"]
+
+
+def test_artifact_roundtrip(tmp_path):
+    d = str(tmp_path)
+    res = dict(params=TunedParams(1, 2, 30, 0.5), makespan_ns=1234,
+               n_configs=10, n_sims=12, seeds=(0,))
+    path = tune.save_artifact("fib", {"na_ws": res}, CFG, smoke=True,
+                              slb_ns=2000, tuned_dir=d)
+    # per-scale slot: smoke and full artifacts never clobber each other
+    assert path == tune.artifact_path("fib", True, d)
+    assert path.endswith("smoke/fib.json")
+    rec = tune.load_tuned("fib", smoke=True, n_workers=CFG.n_workers,
+                          tuned_dir=d)
+    assert rec is not None
+    assert rec["modes"]["na_ws"]["params"] == dict(
+        n_victim=1, n_steal=2, t_interval=30, p_local=0.5)
+    assert rec["slb_ns"] == 2000
+    # scale mismatches refuse to load (callers fall back to static tables)
+    assert tune.load_tuned("fib", smoke=False, tuned_dir=d) is None
+    assert tune.load_tuned("fib", smoke=True, n_workers=99, tuned_dir=d) \
+        is None
+    assert tune.load_tuned("fib", smoke=True, n_zones=99, tuned_dir=d) \
+        is None
+    assert tune.load_tuned("fib", smoke=True, max_steps=1, tuned_dir=d) \
+        is None
+    assert tune.load_tuned("missing", smoke=True, tuned_dir=d) is None
+    # the full-cfg check also gates on the physics signature: capacities
+    # and cost model, not just machine size
+    import dataclasses
+    assert tune.load_tuned("fib", smoke=True, cfg=CFG, tuned_dir=d) \
+        is not None
+    other_physics = dataclasses.replace(CFG, stack_cap=CFG.stack_cap * 2)
+    assert tune.load_tuned("fib", smoke=True, cfg=other_physics,
+                           tuned_dir=d) is None
+
+
+def test_stale_code_version_refuses_to_load(tmp_path):
+    import json
+    d = str(tmp_path)
+    res = dict(params=TunedParams(), makespan_ns=1, n_configs=1, n_sims=1,
+               seeds=(0,))
+    path = tune.save_artifact("fib", {"na_ws": res}, CFG, smoke=True,
+                              tuned_dir=d)
+    assert tune.load_tuned("fib", smoke=True, tuned_dir=d) is not None
+    with open(path) as f:
+        rec = json.load(f)
+    rec["code_version"] = "older-semantics"
+    with open(path, "w") as f:
+        json.dump(rec, f)
+    assert tune.load_tuned("fib", smoke=True, tuned_dir=d) is None
