@@ -1,0 +1,152 @@
+"""Full queue × barrier × balance ablation lattice — the paper's Fig.-level
+ablation, but finer.
+
+The paper's five-rung mode ladder walks one path through the runtime design
+space; the composable :class:`~repro.core.spec.RuntimeSpec` API exposes the
+whole 2 × 2 × 3 = 12-point lattice, including the seven off-ladder
+combinations the paper could not isolate (locked queue + tree barrier,
+NA-WS under the centralized atomic count, ...).  This suite:
+
+* sweeps the full lattice over a few apps through ``run_grid`` on **all
+  three executors** (serial / vmap / sharded) and asserts the results are
+  bitwise identical and every makespan is finite and completed;
+* attributes speedup **per axis**: for each axis, the geometric-mean
+  makespan ratio of flipping that axis while holding the other two fixed
+  (e.g. "what does XQueue buy under *every* barrier/balancer combination",
+  not just on the ladder path);
+* records the attribution table under the ``ablation_lattice`` key of
+  ``BENCH_sweep.json`` (the smoke-mode copy goes to
+  ``experiments/bench/BENCH_sweep_smoke.json``).
+"""
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import SIM, SMOKE, csv_row, emit, graph_for
+from repro.core.spec import BALANCERS, BARRIERS, QUEUES, RuntimeSpec
+from repro.core.sweep import run_grid
+
+LATTICE_APPS = ("fib",) if SMOKE else ("fib", "sort", "health")
+
+#: fixed DLB knobs: the lattice isolates the runtime axes, not the knobs
+#: (the autotuner owns knob search); defaults match the engine's defaults
+KNOBS = dict(n_victim=(4,), n_steal=(8,), t_interval=(100,), p_local=(1.0,))
+
+#: executors the lattice must agree on bitwise ("batched" is the vmap path)
+EXECUTOR_STRATEGIES = ("serial", "batched", "sharded")
+
+BENCH_PATH = (os.path.join("experiments", "bench", "BENCH_sweep_smoke.json")
+              if SMOKE else
+              os.path.join(os.path.dirname(os.path.dirname(
+                  os.path.abspath(__file__))), "BENCH_sweep.json"))
+
+
+def _geomean(x: np.ndarray) -> float:
+    return float(np.exp(np.log(np.asarray(x, float)).mean()))
+
+
+def attribution(ms: np.ndarray) -> dict:
+    """Per-axis speedup from a (apps, queue, barrier, balance) makespan grid.
+
+    Each entry is the geometric mean, over every combination of the *other*
+    axes (and apps), of makespan(baseline value) / makespan(flipped value) —
+    i.e. how much switching that one component speeds things up with
+    everything else held fixed.
+    """
+    return {
+        "queue": {"xqueue_over_locked_global":
+                  _geomean(ms[:, 0] / ms[:, 1])},
+        "barrier": {"tree_over_centralized_count":
+                    _geomean(ms[:, :, 0] / ms[:, :, 1])},
+        "balance": {"na_rp_over_static_rr":
+                    _geomean(ms[..., 0] / ms[..., 1]),
+                    "na_ws_over_static_rr":
+                    _geomean(ms[..., 0] / ms[..., 2])},
+    }
+
+
+def run(cache=None):
+    graphs = [graph_for(app) for app in LATTICE_APPS]
+
+    results = {}
+    for strategy in EXECUTOR_STRATEGIES:
+        # no cache: a warm hit would skip execution and void the
+        # executor-equivalence claim below
+        results[strategy] = run_grid(
+            graphs, queues=QUEUES, barriers=BARRIERS, balancers=BALANCERS,
+            n_workers=(SIM.n_workers,), n_zones=SIM.n_zones, cfg=SIM,
+            strategy=strategy, cache=None, **KNOBS)
+    ref = results["batched"]
+    assert ref.completed.all(), "every lattice point must complete"
+    for strategy, res in results.items():
+        assert res.completed.all(), strategy
+        assert (res.time_ns == ref.time_ns).all(), \
+            f"{strategy} executor diverged from vmap on the lattice"
+        for name in ("exec", "stolen", "atomic_ops"):
+            assert (res.counters[name] == ref.counters[name]).all(), \
+                (strategy, name)
+
+    n_spec = len(QUEUES) * len(BARRIERS) * len(BALANCERS)
+    ms = ref.makespans.reshape(
+        len(LATTICE_APPS), len(QUEUES), len(BARRIERS), len(BALANCERS))
+    assert np.isfinite(ms).all() and (ms > 0).all(), \
+        "non-finite/non-positive makespan on the lattice"
+
+    rows = []
+    for i, s in enumerate(ref.specs):
+        row = ref.row(i)
+        row["off_ladder"] = s.spec.mode is None
+        row["spec_slug"] = s.spec.slug
+        rows.append(row)
+        if i % n_spec == 0 or s.spec.mode is None:
+            csv_row(f"ablation_lattice/{row['app']}/{s.spec.slug}",
+                    row["time_ns"] / 1e3,
+                    "off-ladder" if row["off_ladder"] else
+                    f"ladder:{s.spec.mode}")
+    emit(rows, "ablation_lattice")
+
+    attr = attribution(ms)
+    per_app = {
+        app: attribution(ms[i:i + 1])
+        for i, app in enumerate(LATTICE_APPS)
+    }
+    record = dict(
+        apps=list(LATTICE_APPS),
+        n_workers=SIM.n_workers,
+        knobs={k: v[0] for k, v in KNOBS.items()},
+        executors=list(EXECUTOR_STRATEGIES),
+        bitwise_identical_across_executors=True,
+        n_lattice_points=n_spec,
+        off_ladder_points=sorted({r["spec_slug"] for r in rows
+                                  if r["off_ladder"]}),
+        speedup_attribution=attr,
+        speedup_attribution_per_app=per_app,
+        note=("geometric-mean makespan ratios of flipping one RuntimeSpec "
+              "axis with the other two held fixed, over all combinations "
+              "of the other axes and apps; all 12 lattice points ran "
+              "end-to-end on serial, vmap, and sharded executors with "
+              "bitwise-identical results"),
+    )
+
+    # merge (don't clobber) the shared BENCH_sweep record
+    try:
+        with open(BENCH_PATH) as f:
+            bench = json.load(f)
+    except (OSError, ValueError):
+        bench = {}
+    bench["ablation_lattice"] = record
+    os.makedirs(os.path.dirname(BENCH_PATH) or ".", exist_ok=True)
+    with open(BENCH_PATH, "w") as f:
+        json.dump(bench, f, indent=1)
+        f.write("\n")
+
+    q = attr["queue"]["xqueue_over_locked_global"]
+    b = attr["barrier"]["tree_over_centralized_count"]
+    print(f"# ablation_lattice: {len(rows)} cells "
+          f"({len(record['off_ladder_points'])} off-ladder specs), "
+          f"xqueue {q:.1f}x, tree-barrier {b:.2f}x, "
+          f"na_rp {attr['balance']['na_rp_over_static_rr']:.2f}x, "
+          f"na_ws {attr['balance']['na_ws_over_static_rr']:.2f}x")
+    return rows

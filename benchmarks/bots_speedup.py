@@ -5,6 +5,7 @@ All apps × modes run as one vmap-batched sweep (graphs padded to a common
 task count) instead of one ``jit`` dispatch per (app, mode)."""
 
 from benchmarks.common import APPS, SIM, SMOKE, csv_row, emit, graph_for
+from repro.core.spec import MODE_SPECS
 from repro.core.sweep import CaseSpec, run_cases
 
 LADDER = ("gomp", "xgomp", "xgomptb")
@@ -13,8 +14,8 @@ LADDER = ("gomp", "xgomp", "xgomptb")
 def run():
     apps = list(APPS)
     graphs = [graph_for(app) for app in apps]
-    specs = [CaseSpec(mode=m, n_workers=SIM.n_workers, n_zones=SIM.n_zones,
-                      graph=gi)
+    specs = [CaseSpec(spec=MODE_SPECS[m], n_workers=SIM.n_workers,
+                      n_zones=SIM.n_zones, graph=gi)
              for gi in range(len(apps)) for m in LADDER]
     res = run_cases(graphs, specs, cfg=SIM)
     rows = []

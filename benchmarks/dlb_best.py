@@ -2,14 +2,14 @@
 paper's runtime-statistics counters.
 
 All apps × {SLB, NA-RP, NA-WS} run as one sweep through the experiment
-service.  DLB knobs come from the autotuner's artifacts
-(``experiments/tuned/<smoke|full>/<app>.json``, written by
+service.  DLB knobs come from the autotuner's per-spec artifacts
+(``experiments/tuned/<smoke|full>/<app>__<spec-slug>.json``, written by
 ``benchmarks.run tune``) when one matches the current scale; the hand-tuned
 static ``BEST`` table below is the fallback.  Every emitted row records
 which source supplied its parameters."""
 
 from benchmarks.common import APPS, SIM, SMOKE, csv_row, emit, graph_for
-from repro.core.plan import DLB_MODES
+from repro.core.spec import DLB_BALANCERS, SLB_SPEC, dlb_spec
 from repro.core.sweep import CaseSpec, run_cases
 from repro.core.tune import load_tuned
 
@@ -39,14 +39,18 @@ KNOBS = ("n_victim", "n_steal", "t_interval", "p_local")
 def params_for(app: str):
     """Per-mode DLB knobs for ``app`` plus their source.
 
-    Prefers a tuned artifact matching the current scale (smoke flag,
-    machine size, and the physics signature — capacities, step budget,
-    cost model); returns ``({mode: knob-dict}, "tuned"|"static")``."""
-    rec = load_tuned(app, smoke=SMOKE, cfg=SIM)
-    if rec is not None and all(m in rec["modes"] for m in DLB_MODES):
-        return ({m: {k: rec["modes"][m]["params"][k] for k in KNOBS}
-                 for m in DLB_MODES}, "tuned")
-    return {m: dict(BEST[app]) for m in DLB_MODES}, "static"
+    Prefers per-spec tuned artifacts matching the current scale (smoke
+    flag, machine size, and the physics signature — capacities, step
+    budget, cost model); falls back to the static table unless *every*
+    DLB balancer has a matching artifact.  Returns
+    ``({balance: knob-dict}, "tuned"|"static")``."""
+    tuned = {}
+    for m in DLB_BALANCERS:
+        rec = load_tuned(app, dlb_spec(m), smoke=SMOKE, cfg=SIM)
+        if rec is None:
+            return {b: dict(BEST[app]) for b in DLB_BALANCERS}, "static"
+        tuned[m] = {k: rec["params"][k] for k in KNOBS}
+    return tuned, "tuned"
 
 
 def run(cache=True):
@@ -57,15 +61,16 @@ def run(cache=True):
     specs = []
     for gi, app in enumerate(apps):
         params[app], sources[app] = params_for(app)
-        specs.append(CaseSpec(mode="xgomptb", n_workers=SIM.n_workers,
+        specs.append(CaseSpec(spec=SLB_SPEC, n_workers=SIM.n_workers,
                               n_zones=SIM.n_zones, graph=gi))
-        for mode in DLB_MODES:
-            specs.append(CaseSpec(mode=mode, n_workers=SIM.n_workers,
+        for mode in DLB_BALANCERS:
+            specs.append(CaseSpec(spec=dlb_spec(mode),
+                                  n_workers=SIM.n_workers,
                                   n_zones=SIM.n_zones, graph=gi,
                                   **params[app][mode]))
     res = run_cases(graphs, specs, cfg=SIM, cache=cache)
     assert res.completed.all(), "all cases (incl. SLB baselines) must finish"
-    per_app = 1 + len(DLB_MODES)
+    per_app = 1 + len(DLB_BALANCERS)
     rows = []
     for gi, app in enumerate(apps):
         base = gi * per_app
@@ -74,7 +79,7 @@ def run(cache=True):
                    params_source=sources[app],
                    slb_counters={k: int(res.counters[k][base])
                                  for k in COUNTER_KEYS})
-        for mi, mode in enumerate(DLB_MODES):
+        for mi, mode in enumerate(DLB_BALANCERS):
             i = base + 1 + mi
             assert res.completed[i], (app, mode)
             row[f"{mode}_ns"] = int(res.time_ns[i])

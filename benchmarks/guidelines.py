@@ -3,6 +3,7 @@ task-size bucket must beat (or match) SLB on held-out instances."""
 
 from benchmarks.common import SIM, csv_row, emit, graph_for
 from repro.core import make_params, run_schedule, taskgraph
+from repro.core.spec import SLB_SPEC, dlb_spec
 
 #: Table IV analogue (scaled T_interval; derived from param_sweep)
 GUIDE = [
@@ -36,10 +37,10 @@ def run():
     wins = 0
     for app, kw in HELD_OUT.items():
         g = taskgraph.build(app, **kw)
-        slb = run_schedule(g, mode="xgomptb", cfg=SIM)
+        slb = run_schedule(g, spec=SLB_SPEC, cfg=SIM)
         strategy, params = pick(g.mean_task_ns)
-        r = run_schedule(g, mode=strategy, params=make_params(**params),
-                         cfg=SIM)
+        r = run_schedule(g, spec=dlb_spec(strategy),
+                         params=make_params(**params), cfg=SIM)
         imp = slb.time_ns / r.time_ns
         wins += imp >= 0.98
         rows.append(dict(app=app, task_ns=g.mean_task_ns,

@@ -13,6 +13,7 @@ import math
 
 from benchmarks.common import SIM, SMOKE, csv_row, emit, graph_for
 from repro.core import make_params, run_schedule
+from repro.core.spec import SLB_SPEC, dlb_spec
 from repro.core.sweep import CaseSpec, run_cases
 
 #: apps spanning the paper's task-size buckets
@@ -26,14 +27,15 @@ GRID = (dict(n_victim=(1, 4), n_steal=(8,), t_interval=(30,), p_local=(1.0,))
 def grid_specs(graph_idx: int = 0):
     """One app's worth of cases: the SLB baseline first, then the full
     NA-RP / NA-WS knob grid (same order as the legacy serial loop)."""
-    specs = [CaseSpec(mode="xgomptb", n_workers=SIM.n_workers,
+    specs = [CaseSpec(spec=SLB_SPEC, n_workers=SIM.n_workers,
                       n_zones=SIM.n_zones, graph=graph_idx)]
-    for mode in ("na_rp", "na_ws"):
+    for balance in ("na_rp", "na_ws"):
         for nv, ns, ti, pl in itertools.product(
                 GRID["n_victim"], GRID["n_steal"], GRID["t_interval"],
                 GRID["p_local"]):
             specs.append(CaseSpec(
-                mode=mode, n_workers=SIM.n_workers, n_zones=SIM.n_zones,
+                spec=dlb_spec(balance), n_workers=SIM.n_workers,
+                n_zones=SIM.n_zones,
                 n_victim=nv, n_steal=ns, t_interval=ti, p_local=pl,
                 graph=graph_idx))
     return specs
@@ -85,10 +87,10 @@ def run_serial_loop():
     rows = []
     for app in SWEEP_APPS:
         g = graph_for(app)
-        slb = run_schedule(g, mode="xgomptb", cfg=SIM)
+        slb = run_schedule(g, spec=SLB_SPEC, cfg=SIM)
         for spec in grid_specs()[1:]:
             r = run_schedule(
-                g, mode=spec.mode, cfg=SIM,
+                g, spec=spec.spec, cfg=SIM,
                 params=make_params(spec.n_victim, spec.n_steal,
                                    spec.t_interval, spec.p_local))
             rows.append(dict(

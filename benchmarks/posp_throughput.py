@@ -3,6 +3,7 @@ the batch size grows (batch 1 stresses per-task runtime overhead)."""
 
 from benchmarks.common import SIM, csv_row, emit
 from repro.core import run_schedule, taskgraph
+from repro.core.spec import MODE_SPECS
 
 K = 13   # 2^13 puzzles (scaled; shape of the curve is what matters)
 
@@ -13,7 +14,7 @@ def run():
         g = taskgraph.posp(k=K, batch=batch)
         rec = dict(batch=batch, n_tasks=g.n_tasks)
         for mode in ("gomp", "xgomptb"):
-            r = run_schedule(g, mode=mode, cfg=SIM)
+            r = run_schedule(g, spec=MODE_SPECS[mode], cfg=SIM)
             assert r.completed
             hashes_per_s = (2 ** K) / (r.time_ns / 1e9)
             rec[f"{mode}_mh_s"] = hashes_per_s / 1e6

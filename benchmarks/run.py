@@ -1,10 +1,15 @@
 # One function per paper table. Prints ``name,us_per_call,derived`` CSV.
 """Benchmark harness: every paper table/figure plus the beyond-paper MoE
-balance study, the roofline aggregation, and the DLB autotuner.
+balance study, the roofline aggregation, the DLB autotuner, and the full
+RuntimeSpec ablation lattice.
 
     PYTHONPATH=src python -m benchmarks.run               # all suites
     PYTHONPATH=src python -m benchmarks.run <suite> ...   # a subset
-    PYTHONPATH=src python -m benchmarks.run --list        # enumerate suites
+    PYTHONPATH=src python -m benchmarks.run --list        # suites, grouped
+                                                          # by spec axes
+    PYTHONPATH=src python -m benchmarks.run \\
+        --spec queue=xqueue,barrier=tree,balance=na_ws    # only suites
+                                                          # covering a spec
     PYTHONPATH=src python -m benchmarks.run cache stats   # result-cache info
     PYTHONPATH=src python -m benchmarks.run cache clear   # drop cached results
 """
@@ -19,22 +24,64 @@ import time
 # the sweeps).  Must be set before jax initializes, so: before suite imports.
 os.environ.setdefault("XLA_FLAGS", "--xla_cpu_use_thunk_runtime=false")
 
-#: suite name -> one-line description (shown by --list; import stays lazy so
-#: --list and the cache subcommand answer without initializing jax)
+# RuntimeSpec axis values, spelled out here so --list/--spec answer without
+# importing jax (keep in sync with repro.core.spec — test_spec asserts it)
+AXIS_VALUES = dict(
+    queue=("locked_global", "xqueue"),
+    barrier=("centralized_count", "tree"),
+    balance=("static_rr", "na_rp", "na_ws"),
+)
+
+_Q, _B, _L = AXIS_VALUES["queue"], AXIS_VALUES["barrier"], \
+    AXIS_VALUES["balance"]
+
+#: suite name -> (description, swept spec-axis values).  ``axes`` records
+#: which RuntimeSpec axis values each suite touches: --list groups by the
+#: axes a suite *varies* and --spec filters on value coverage.  Import
+#: stays lazy so --list and the cache subcommand answer without
+#: initializing jax.
 SUITES = {
-    "bots_speedup": "Fig. 4/5 — per-mode makespans + XGOMP(TB) speedups",
-    "thread_scaling": "Fig. 6 — makespan vs worker count, gomp vs xgomptb",
-    "dlb_best": "Fig. 7 + Tables I-III — best NA-RP/NA-WS vs SLB (§V counters)",
-    "timeline": "Fig. 3 — per-worker utilization timelines",
-    "param_sweep": "Figs. 9/10 + Table IV — DLB improvement over the knob grid",
-    "posp_throughput": "Fig. 8 — proof-of-space hashing throughput",
-    "guidelines": "Fig. 11 — guideline settings vs per-app best",
-    "moe_balance": "beyond-paper — DLB policies as MoE-routing balancers",
-    "roofline": "aggregation — counter-derived roofline summary",
-    "sweep_bench": "engine timing — serial vs batched vs warm-cache re-run",
-    "tune": "DLB autotuner — per-app artifacts under experiments/tuned/ "
-            "(not in the no-args run: it writes artifacts dlb_best then "
-            "prefers, which would make back-to-back full runs differ)",
+    "ablation_lattice": dict(
+        desc="full 2x2x3 RuntimeSpec lattice on all executors + per-axis "
+             "speedup attribution (BENCH_sweep.json)",
+        axes=dict(queue=_Q, barrier=_B, balance=_L)),
+    "bots_speedup": dict(
+        desc="Fig. 4/5 — per-mode makespans + XGOMP(TB) speedups",
+        axes=dict(queue=_Q, barrier=_B, balance=("static_rr",))),
+    "thread_scaling": dict(
+        desc="Fig. 6 — makespan vs worker count, gomp vs xgomptb",
+        axes=dict(queue=_Q, barrier=_B, balance=("static_rr",))),
+    "posp_throughput": dict(
+        desc="Fig. 8 — proof-of-space hashing throughput",
+        axes=dict(queue=_Q, barrier=_B, balance=("static_rr",))),
+    "dlb_best": dict(
+        desc="Fig. 7 + Tables I-III — best NA-RP/NA-WS vs SLB (§V counters)",
+        axes=dict(queue=("xqueue",), barrier=("tree",), balance=_L)),
+    "timeline": dict(
+        desc="Fig. 3 — per-worker utilization timelines",
+        axes=dict(queue=("xqueue",), barrier=("tree",), balance=_L)),
+    "param_sweep": dict(
+        desc="Figs. 9/10 + Table IV — DLB improvement over the knob grid",
+        axes=dict(queue=("xqueue",), barrier=("tree",), balance=_L)),
+    "guidelines": dict(
+        desc="Fig. 11 — guideline settings vs per-app best",
+        axes=dict(queue=("xqueue",), barrier=("tree",), balance=_L)),
+    "sweep_bench": dict(
+        desc="engine timing — serial vs batched vs warm-cache re-run",
+        axes=dict(queue=("xqueue",), barrier=("tree",), balance=_L)),
+    "tune": dict(
+        desc="DLB autotuner — per-(app, spec) artifacts under "
+             "experiments/tuned/ (not in the no-args run: it writes "
+             "artifacts dlb_best then prefers, which would make "
+             "back-to-back full runs differ)",
+        axes=dict(queue=("xqueue",), barrier=("tree",),
+                  balance=("na_rp", "na_ws"))),
+    "moe_balance": dict(
+        desc="beyond-paper — DLB policies as MoE-routing balancers",
+        axes=None),
+    "roofline": dict(
+        desc="aggregation — counter-derived roofline summary",
+        axes=None),
 }
 
 #: suites whose module name differs from the suite name
@@ -47,6 +94,54 @@ _EXPLICIT_ONLY = {"tune"}
 def _suite_fn(name):
     mod = importlib.import_module(f"benchmarks.{_MODULES.get(name, name)}")
     return mod.run
+
+
+def _varied_axes(axes):
+    """The spec axes a suite actually sweeps (>1 value)."""
+    if axes is None:
+        return ()
+    return tuple(a for a in ("queue", "barrier", "balance")
+                 if len(axes.get(a, ())) > 1)
+
+
+def _list_suites() -> None:
+    """Print suites grouped by the spec axes they vary."""
+    groups = {}
+    for name, info in SUITES.items():
+        groups.setdefault(_varied_axes(info["axes"]), []).append(name)
+    width = max(map(len, SUITES))
+    for varied in sorted(groups, key=lambda v: (-len(v), v)):
+        if varied:
+            print(f"[sweeps {' x '.join(varied)}]")
+        else:
+            print("[fixed spec / no spec axes]")
+        for name in groups[varied]:
+            print(f"  {name:<{width}}  {SUITES[name]['desc']}")
+        print()
+
+
+def parse_spec_filter(arg: str) -> dict:
+    """Parse ``queue=xqueue,barrier=tree,balance=na_ws`` (any subset)."""
+    sel = {}
+    for part in filter(None, arg.split(",")):
+        if "=" not in part:
+            raise SystemExit(f"bad --spec entry {part!r}; use axis=value")
+        axis, _, value = part.partition("=")
+        if axis not in AXIS_VALUES:
+            raise SystemExit(f"unknown spec axis {axis!r}; "
+                             f"axes: {sorted(AXIS_VALUES)}")
+        if value not in AXIS_VALUES[axis]:
+            raise SystemExit(f"unknown {axis} value {value!r}; "
+                             f"values: {AXIS_VALUES[axis]}")
+        sel[axis] = value
+    return sel
+
+
+def spec_covers(axes, sel: dict) -> bool:
+    """Does a suite's swept lattice include every selected axis value?"""
+    if axes is None:
+        return False
+    return all(v in axes.get(a, ()) for a, v in sel.items())
 
 
 def _cache_cmd(args) -> None:
@@ -75,23 +170,34 @@ def _cache_cmd(args) -> None:
 def main() -> None:
     argv = sys.argv[1:]
     if "--list" in argv:
-        width = max(map(len, SUITES))
-        for name, desc in SUITES.items():
-            print(f"{name:<{width}}  {desc}")
+        _list_suites()
         return
     if argv and argv[0] == "cache":
         _cache_cmd(argv[1:])
         return
+    spec_sel = None
+    if "--spec" in argv:
+        i = argv.index("--spec")
+        if i + 1 >= len(argv):
+            raise SystemExit("--spec needs an argument, e.g. "
+                             "--spec queue=xqueue,barrier=tree,"
+                             "balance=na_ws")
+        spec_sel = parse_spec_filter(argv[i + 1])
+        argv = argv[:i] + argv[i + 2:]
     only = set(argv)
     unknown = only - set(SUITES)
     if unknown:
         raise SystemExit(f"unknown suite(s): {sorted(unknown)}; "
                          f"available: {sorted(SUITES)} (see --list)")
     failures = []
-    for name in SUITES:
+    ran = 0
+    for name, info in SUITES.items():
         if (only and name not in only) or \
                 (not only and name in _EXPLICIT_ONLY):
             continue
+        if spec_sel is not None and not spec_covers(info["axes"], spec_sel):
+            continue
+        ran += 1
         t0 = time.time()
         print(f"# === {name} ===", flush=True)
         try:
@@ -103,7 +209,12 @@ def main() -> None:
     if failures:
         print("# FAILURES:", failures)
         raise SystemExit(1)
-    print("# all benchmarks passed")
+    if ran == 0:
+        # e.g. a named suite whose lattice the --spec filter excludes;
+        # succeeding after running nothing would green-light a broken CI
+        raise SystemExit("no suites matched the given selection/--spec "
+                         "filter; see --list for suite lattices")
+    print(f"# all {ran} selected benchmarks passed")
 
 
 if __name__ == '__main__':

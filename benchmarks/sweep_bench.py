@@ -123,6 +123,16 @@ def run():
               "seed-era serial loop measured in-session on this container "
               "(see benchmarks/sweep_bench.py docstring)."),
     )
+    # keep sections other suites own (e.g. ablation_lattice's per-axis
+    # attribution): carry over every prior key this suite doesn't write
+    try:
+        with open(BENCH_PATH) as f:
+            prior = json.load(f)
+    except (OSError, ValueError):
+        prior = {}
+    for k, v in prior.items():
+        if k not in result:
+            result[k] = v
     os.makedirs(os.path.dirname(BENCH_PATH) or ".", exist_ok=True)
     with open(BENCH_PATH, "w") as f:
         json.dump(result, f, indent=1)

@@ -5,6 +5,7 @@ to the largest worker count and the traced ``n_workers`` masks the rest, so
 every scaling point shares one compiled call."""
 
 from benchmarks.common import SIM, SMOKE, csv_row, emit, graph_for
+from repro.core.spec import MODE_SPECS
 from repro.core.sweep import CaseSpec, run_cases
 
 APPS_SCALE = ("fib", "sort", "health")
@@ -14,7 +15,8 @@ MODES_SCALE = ("gomp", "xgomptb")
 
 def run(cache=True):
     graphs = [graph_for(app) for app in APPS_SCALE]
-    specs = [CaseSpec(mode=m, n_workers=w, n_zones=max(1, w // 8), graph=gi)
+    specs = [CaseSpec(spec=MODE_SPECS[m], n_workers=w,
+                      n_zones=max(1, w // 8), graph=gi)
              for gi in range(len(APPS_SCALE)) for w in WORKERS
              for m in MODES_SCALE]
     res = run_cases(graphs, specs, cfg=SIM, cache=cache)

@@ -9,6 +9,7 @@ import numpy as np
 
 from benchmarks.common import SIM, csv_row, emit, graph_for
 from repro.core import make_params, run_schedule
+from repro.core.spec import SLB_SPEC, dlb_spec
 
 
 def _stats(r):
@@ -33,9 +34,9 @@ def run():
             ("uts", "na_rp", dict(n_victim=4, n_steal=16, t_interval=100,
                                   p_local=1.0))):
         g = graph_for(app)
-        slb = run_schedule(g, mode="xgomptb", cfg=SIM)
-        dlb = run_schedule(g, mode=mode, params=make_params(**params),
-                           cfg=SIM)
+        slb = run_schedule(g, spec=SLB_SPEC, cfg=SIM)
+        dlb = run_schedule(g, spec=dlb_spec(mode),
+                           params=make_params(**params), cfg=SIM)
         row = dict(app=app, mode=mode, slb=_stats(slb), dlb=_stats(dlb))
         rows.append(row)
         csv_row(f"timeline/{app}", slb.time_ns / 1e3,

@@ -1,9 +1,10 @@
 """Table I by search instead of by hand: tune the DLB knobs per app.
 
 Runs the successive-halving / grid-refinement tuner (``repro.core.tune``)
-over NA-RP and NA-WS for every app, entirely through the experiment service
-(so rungs batch/shard and the result cache makes re-runs nearly free), and
-persists one artifact per app under ``experiments/tuned/`` —
+over the NA-RP and NA-WS runtime specs for every app, entirely through the
+experiment service (so rungs batch/shard and the result cache makes re-runs
+nearly free), and persists one artifact per (app, spec) under
+``experiments/tuned/`` (filenames carry the spec slug) —
 ``benchmarks/dlb_best.py`` picks those up in place of its static table.
 
 The hand-tuned ``BEST`` entry is seeded into rung 0, so the tuned pick can
@@ -11,8 +12,9 @@ only match or beat it under the same seeds; the run asserts that holds for
 at least 7 of the 9 apps and records the comparison in every row."""
 
 from benchmarks.common import APPS, SIM, SMOKE, csv_row, emit, graph_for
-from benchmarks.dlb_best import BEST, DLB_MODES
+from benchmarks.dlb_best import BEST
 from repro.core import tune as tune_mod
+from repro.core.spec import DLB_BALANCERS, SLB_SPEC, dlb_spec
 from repro.core.sweep import CaseSpec, run_cases
 
 #: search budget: rung-0 coarse grid + ROUNDS refinement rounds of the
@@ -27,40 +29,45 @@ def run(cache=True, tuned_dir=tune_mod.DEFAULT_TUNED_DIR):
     wins = 0
     for app in apps:
         g = graph_for(app)
-        slb = run_cases(g, [CaseSpec(mode="xgomptb", n_workers=SIM.n_workers,
+        slb = run_cases(g, [CaseSpec(spec=SLB_SPEC, n_workers=SIM.n_workers,
                                      n_zones=SIM.n_zones)],
                         cfg=SIM, cache=cache)
         assert slb.completed.all(), app
         slb_ns = int(slb.time_ns[0])
         ref_params = tune_mod.TunedParams(**BEST[app])
-        modes_result = {}
+        results = {}
         ref_ns = {}
-        for mode in DLB_MODES:
-            modes_result[mode] = tune_mod.tune_mode(
-                g, mode, SIM, extra=(ref_params,), rounds=ROUNDS,
+        paths = []
+        for balance in DLB_BALANCERS:
+            spec = dlb_spec(balance)
+            results[balance] = tune_mod.tune_spec(
+                g, spec, SIM, extra=(ref_params,), rounds=ROUNDS,
                 survivors=SURVIVORS, cache=cache)
-            ref = run_cases(g, [CaseSpec(mode=mode, n_workers=SIM.n_workers,
+            ref = run_cases(g, [CaseSpec(spec=spec, n_workers=SIM.n_workers,
                                          n_zones=SIM.n_zones, **BEST[app])],
                             cfg=SIM, cache=cache)
-            assert ref.completed.all(), (app, mode)
-            ref_ns[mode] = int(ref.time_ns[0])
-        tuned_best = min(r["makespan_ns"] for r in modes_result.values())
+            assert ref.completed.all(), (app, balance)
+            ref_ns[balance] = int(ref.time_ns[0])
+            paths.append(tune_mod.save_artifact(
+                app, spec, results[balance], SIM, smoke=SMOKE,
+                slb_ns=slb_ns,
+                ref=dict(params=dict(BEST[app]),
+                         makespan_ns=ref_ns[balance]),
+                tuned_dir=tuned_dir))
+        tuned_best = min(r["makespan_ns"] for r in results.values())
         ref_best = min(ref_ns.values())
         win = tuned_best <= ref_best
         wins += win
-        path = tune_mod.save_artifact(
-            app, modes_result, SIM, smoke=SMOKE, slb_ns=slb_ns,
-            ref=dict(params=dict(BEST[app]), makespan_ns=ref_ns),
-            tuned_dir=tuned_dir)
         rows.append(dict(
             app=app, slb_ns=slb_ns,
-            tuned={m: modes_result[m]["params"].asdict() for m in DLB_MODES},
-            tuned_ns={m: int(modes_result[m]["makespan_ns"])
-                      for m in DLB_MODES},
+            tuned={m: results[m]["params"].asdict()
+                   for m in DLB_BALANCERS},
+            tuned_ns={m: int(results[m]["makespan_ns"])
+                      for m in DLB_BALANCERS},
             ref_params=dict(BEST[app]), ref_ns=ref_ns,
             improvement=slb_ns / tuned_best,
-            beats_ref=bool(win), artifact=path,
-            n_sims=sum(r["n_sims"] for r in modes_result.values())))
+            beats_ref=bool(win), artifacts=paths,
+            n_sims=sum(r["n_sims"] for r in results.values())))
         csv_row(f"tune/{app}", tuned_best / 1e3,
                 f"{slb_ns / tuned_best:.2f}x over SLB; "
                 f"{'matches/beats' if win else 'LOSES to'} hand-tuned "

@@ -9,6 +9,7 @@ import sys
 
 from repro.core import make_params, run_schedule, taskgraph
 from repro.core.scheduler import SimConfig
+from repro.core.spec import MODE_SPECS
 
 
 def main(app="fib", workers=32):
@@ -17,10 +18,10 @@ def main(app="fib", workers=32):
     print(f"{g.name}: {g.n_tasks} tasks, mean {g.mean_task_ns:.0f} ns, "
           f"{workers} workers / 4 zones")
     base = None
-    for mode in ("gomp", "xgomp", "xgomptb", "na_rp", "na_ws"):
+    for mode, spec in MODE_SPECS.items():
         params = make_params(n_victim=4, n_steal=8, t_interval=100,
                              p_local=1.0)
-        r = run_schedule(g, mode=mode, params=params, cfg=cfg)
+        r = run_schedule(g, spec=spec, params=params, cfg=cfg)
         base = base or r.time_ns
         print(f"  {mode:8s} {r.time_ns/1e3:10.1f} us   "
               f"speedup over gomp: {base / r.time_ns:8.1f}x   "

@@ -2,14 +2,18 @@
 NUMA-aware dynamic load balancing — as (a) a faithful scheduler simulator and
 (b) jittable routing policies used by the TPU training/serving stack.
 
+A runtime configuration is a :class:`~repro.core.spec.RuntimeSpec` — a point
+on the queue × barrier × balance lattice (``spec.py``); the paper's
+five-rung mode ladder is the canned subset ``MODE_SPECS`` of that lattice.
+
 The experiment service layers on top of the simulator:
 ``plan`` (what to run, in which shapes) → ``cache`` (content-addressed
 on-disk results) → ``executors`` (serial / vmap / sharded) → ``sweep``
 (the ``run_cases``/``run_grid`` entry points) → ``tune`` (the DLB-knob
-autotuner emitting ``experiments/tuned/`` artifacts)."""
+autotuner emitting per-(app, spec) ``experiments/tuned/`` artifacts)."""
 
 from repro.core import balance, barrier, cache, dlb, executors, messaging, \
-    plan, sweep, taskgraph, tune, xqueue
+    plan, spec, sweep, taskgraph, tune, xqueue
 from repro.core.cache import CODE_VERSION, ResultCache, case_key, graph_digest
 from repro.core.costs import DEFAULT_COSTS, CostModel
 from repro.core.executors import EXECUTORS, Executor, select_executor
@@ -17,19 +21,24 @@ from repro.core.plan import ChunkPlan, SweepPlan, build_plan
 from repro.core.scheduler import (MODES, GraphArrays, Params, SimConfig,
                                   SimResult, SweepCase, graph_arrays,
                                   make_case, make_params, run_schedule)
+from repro.core.spec import (AXES, BALANCERS, BARRIERS, DLB_BALANCERS,
+                             LATTICE, MODE_SPECS, OFF_LADDER, QUEUES,
+                             RuntimeSpec, spec_product)
 from repro.core.sweep import CaseSpec, SweepResult, run_cases, run_grid
 from repro.core.tune import (TunedParams, artifact_path, load_tuned,
-                             save_artifact, tune_mode)
+                             save_artifact, tune_mode, tune_spec)
 
 __all__ = [
     "balance", "barrier", "cache", "dlb", "executors", "messaging", "plan",
-    "sweep", "taskgraph", "tune", "xqueue",
+    "spec", "sweep", "taskgraph", "tune", "xqueue",
+    "RuntimeSpec", "QUEUES", "BARRIERS", "BALANCERS", "AXES",
+    "DLB_BALANCERS", "MODE_SPECS", "LATTICE", "OFF_LADDER", "spec_product",
     "DEFAULT_COSTS", "CostModel", "MODES", "Params", "SimConfig", "SimResult",
     "SweepCase", "GraphArrays", "graph_arrays", "make_case", "make_params",
     "run_schedule", "CaseSpec", "SweepResult", "run_cases", "run_grid",
     "ChunkPlan", "SweepPlan", "build_plan",
     "Executor", "EXECUTORS", "select_executor",
     "ResultCache", "CODE_VERSION", "case_key", "graph_digest",
-    "TunedParams", "tune_mode", "save_artifact", "load_tuned",
+    "TunedParams", "tune_spec", "tune_mode", "save_artifact", "load_tuned",
     "artifact_path",
 ]

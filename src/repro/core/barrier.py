@@ -60,12 +60,13 @@ def tree_episode(n_workers: int, costs: CostModel) -> BarrierStats:
     return BarrierStats(jnp.int32(t), jnp.int32(n_workers - 1))
 
 
-def episode_arrays(mode_id: jax.Array, n_workers: jax.Array,
+def episode_arrays(barrier_id: jax.Array, n_workers: jax.Array,
                    costs: CostModel) -> BarrierStats:
-    """Traced-friendly episode selector for the batched sweep engine: modes
-    gomp/xgomp (ids 0/1) pay the centralized barrier, the rest the tree
-    barrier.  ``mode_id`` and ``n_workers`` are traced scalars, so one compiled
-    sweep can mix barrier flavors and worker counts; matches
+    """Traced-friendly episode selector for the batched sweep engine:
+    ``barrier_id`` indexes ``spec.BARRIERS`` (0 = centralized_count pays the
+    centralized barrier, 1 = tree pays the tree barrier).  ``barrier_id``
+    and ``n_workers`` are traced scalars, so one compiled sweep can mix
+    barrier flavors and worker counts; matches
     ``centralized_episode``/``tree_episode`` bit-for-bit."""
     nw = jnp.asarray(n_workers, jnp.int32)
     cent_t = 2 * (nw - 1) * (costs.c_atomic + costs.c_contend)
@@ -74,7 +75,7 @@ def episode_arrays(mode_id: jax.Array, n_workers: jax.Array,
         1, jnp.ceil(jnp.log2(nw.astype(jnp.float32))).astype(jnp.int32))
     tree_t = depth * (costs.c_atomic + costs.c_zone) + depth * costs.c_zone
     tree_a = nw - 1
-    is_cent = jnp.asarray(mode_id) <= 1
+    is_cent = jnp.asarray(barrier_id) == 0
     return BarrierStats(
         time_ns=jnp.where(is_cent, cent_t, tree_t).astype(jnp.int32),
         atomic_ops=jnp.where(is_cent, cent_a, tree_a).astype(jnp.int32))

@@ -33,7 +33,9 @@ import numpy as np
 #: bump whenever a change anywhere in the simulator (scheduler step, cost
 #: charging, RNG streams, barrier accounting) can alter results for the
 #: same (graph, spec, cfg) — stale entries then miss instead of lying.
-CODE_VERSION = "sweep-engine-v2"
+#: v3: runtime configurations became RuntimeSpec lattice points; keys carry
+#: the (queue, barrier, balance) axis tuple instead of the legacy mode name.
+CODE_VERSION = "runtime-spec-v3"
 
 DEFAULT_ROOT = os.path.join("experiments", "cache")
 
@@ -72,7 +74,9 @@ def case_key(gdigest: str, spec, cfg) -> str:
     blob = json.dumps(dict(
         v=CODE_VERSION,
         graph=gdigest,
-        mode=spec.mode, n_workers=spec.n_workers, zone_size=spec.zone_size,
+        queue=spec.spec.queue, barrier=spec.spec.barrier,
+        balance=spec.spec.balance,
+        n_workers=spec.n_workers, zone_size=spec.zone_size,
         seed=spec.seed, n_victim=spec.n_victim, n_steal=spec.n_steal,
         t_interval=spec.t_interval, p_local=repr(float(spec.p_local)),
         queue_cap=cfg.queue_cap, stack_cap=cfg.stack_cap,
@@ -115,6 +119,9 @@ class ResultCache:
 
     def put(self, key: str, record: dict) -> None:
         assert all(k in record for k in RECORD_FIELDS), record.keys()
+        # stamp the writing code version so `stats` can report the split
+        # between live and stale (pre-bump) entries without re-deriving keys
+        record = dict(record, code_version=CODE_VERSION)
         path = self._path(key)
         os.makedirs(os.path.dirname(path), exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
@@ -142,16 +149,28 @@ class ResultCache:
                     yield os.path.join(d, name)
 
     def stats(self) -> dict:
+        """Entry counts and sizes, split by the code version that wrote
+        each entry — after a ``CODE_VERSION`` bump the split shows how much
+        of the store is stale (legacy-keyed entries can never hit again;
+        pre-stamp entries count as ``unversioned``)."""
         n = size = 0
+        versions: dict = {}
         for path in self._entries():
             n += 1
             try:
                 size += os.path.getsize(path)
             except OSError:
                 pass
+            try:
+                with open(path) as f:
+                    v = json.load(f).get("code_version", "unversioned")
+            except (OSError, ValueError):
+                v = "unreadable"
+            versions[v] = versions.get(v, 0) + 1
         return dict(root=self.root, entries=n, bytes=size,
                     session_hits=self.hits, session_misses=self.misses,
-                    code_version=CODE_VERSION)
+                    code_version=CODE_VERSION, versions=versions,
+                    stale_entries=n - versions.get(CODE_VERSION, 0))
 
     def clear(self) -> int:
         """Delete every entry; returns how many were removed."""

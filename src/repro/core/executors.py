@@ -68,7 +68,7 @@ class ExecContext:
 
     def case_for(self, s: CaseSpec) -> SweepCase:
         return make_case(
-            s.mode, s.n_workers, s.zone_size, s.seed,
+            s.spec, s.n_workers, s.zone_size, s.seed,
             round(float(self.graphs[s.graph].mem_bound), 3),
             make_params(s.n_victim, s.n_steal, s.t_interval, s.p_local))
 

@@ -2,17 +2,18 @@
 
 ``build_plan`` turns a flat list of :class:`CaseSpec` configurations into an
 explicit :class:`SweepPlan` — the paddings every executor must share (worker
-lane width, task count, GOMP queue capacity) plus the (mode, graph)-grouped
-chunks the batch is cut into.  Planning is pure host-side bookkeeping: it
-never touches jax or runs the simulator, so the grouping and padding
-invariants are unit-testable in milliseconds (tests/test_plan.py).
+lane width, task count, locked-global-queue capacity) plus the (spec,
+graph)-grouped chunks the batch is cut into.  Planning is pure host-side
+bookkeeping: it never touches jax or runs the simulator, so the grouping and
+padding invariants are unit-testable in milliseconds (tests/test_plan.py).
 
 The plan is executor-independent by contract: results are bitwise identical
 whatever the chunking, padding, or execution strategy (tests/test_sweep.py).
 Grouping exists purely for *speed* — a vmapped chunk executes the union of
-its members' control flow, so chunks never cross a mode boundary (one na_ws
-element would drag a whole chunk of cheaper modes through the transfer
-machinery) and sort by graph and DLB knobs so heterogeneity clusters.
+its members' control flow, so chunks are **spec-pure**: they never cross a
+:class:`~repro.core.spec.RuntimeSpec` lattice point (one na_ws element would
+drag a whole chunk of cheaper runtimes through the transfer machinery) and
+sort by graph and DLB knobs so heterogeneity clusters.
 """
 
 from __future__ import annotations
@@ -20,18 +21,25 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Sequence, Tuple
 
-from repro.core.scheduler import MODES
+from repro.core.spec import DLB_BALANCERS, RuntimeSpec, resolve_spec
 from repro.core.taskgraph import TaskGraph
 
-#: modes whose DLB knobs (n_victim/n_steal/t_interval/p_local) are live;
-#: a chunk mixing knob values in these modes is straggler-prone under vmap
-DLB_MODES = ("na_rp", "na_ws")
+#: legacy alias — balancers whose DLB knobs (n_victim/n_steal/t_interval/
+#: p_local) are live; a chunk mixing knob values under these balancers is
+#: straggler-prone under vmap
+DLB_MODES = DLB_BALANCERS
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, init=False)
 class CaseSpec:
-    """Host-side description of one simulator configuration."""
-    mode: str = "xgomptb"
+    """Host-side description of one simulator configuration.
+
+    ``spec`` names the runtime as a :class:`RuntimeSpec` lattice point
+    (queue × barrier × balance); the legacy string ``mode=`` keyword still
+    works but emits a ``DeprecationWarning``.  Reading ``.mode`` returns the
+    legacy ladder name when the spec is on-ladder, else the spec slug.
+    """
+    spec: RuntimeSpec = RuntimeSpec()
     n_workers: int = 32
     n_zones: int = 4
     seed: int = 0
@@ -41,8 +49,29 @@ class CaseSpec:
     p_local: float = 1.0
     graph: int = 0          # index into the graphs list passed to run_cases
 
-    def __post_init__(self):
-        assert self.mode in MODES, self.mode
+    # hand-written so the deprecated ``mode=`` keyword stays an init-only
+    # argument without becoming a field (which would break eq/hash and
+    # dataclasses.replace round-trips)
+    def __init__(self, spec: RuntimeSpec | str | None = None,
+                 n_workers: int = 32, n_zones: int = 4, seed: int = 0,
+                 n_victim: int = 4, n_steal: int = 8, t_interval: int = 100,
+                 p_local: float = 1.0, graph: int = 0,
+                 mode: str | RuntimeSpec | None = None):
+        set_ = object.__setattr__      # frozen dataclass
+        set_(self, "spec", resolve_spec(spec, mode, where="CaseSpec"))
+        set_(self, "n_workers", n_workers)
+        set_(self, "n_zones", n_zones)
+        set_(self, "seed", seed)
+        set_(self, "n_victim", n_victim)
+        set_(self, "n_steal", n_steal)
+        set_(self, "t_interval", t_interval)
+        set_(self, "p_local", p_local)
+        set_(self, "graph", graph)
+
+    @property
+    def mode(self) -> str:
+        """Legacy ladder name of this case's spec (slug when off-ladder)."""
+        return self.spec.label
 
     @property
     def zone_size(self) -> int:
@@ -55,7 +84,7 @@ class CaseSpec:
 
 @dataclasses.dataclass(frozen=True)
 class ChunkPlan:
-    """One executor dispatch: a same-mode slice of the planned cases.
+    """One executor dispatch: a spec-pure slice of the planned cases.
 
     ``indices`` point into the spec list the plan was built from; executors
     pad the chunk from ``n_real`` up to ``padded_size`` with *inert* cases
@@ -64,8 +93,13 @@ class ChunkPlan:
     the way out.
     """
     indices: Tuple[int, ...]
-    mode: str
-    hetero_dlb: bool    # >1 distinct DLB knob tuple in a DLB mode
+    spec: RuntimeSpec
+    hetero_dlb: bool    # >1 distinct DLB knob tuple under a DLB balancer
+
+    @property
+    def mode(self) -> str:
+        """Legacy ladder name of the chunk's spec (slug when off-ladder)."""
+        return self.spec.label
 
     @property
     def n_real(self) -> int:
@@ -86,7 +120,7 @@ class SweepPlan:
     n_cases: int
     w_pad: int                      # shared worker lane width (max n_workers)
     t_pad: int                      # shared task count (max graph size)
-    gq_cap: int                     # GOMP global-queue capacity
+    gq_cap: int                     # locked-global-queue capacity
     chunks: Tuple[ChunkPlan, ...]
 
     def validate(self) -> None:
@@ -96,12 +130,12 @@ class SweepPlan:
 
 def build_plan(graphs: Sequence[TaskGraph], specs: Sequence[CaseSpec],
                chunk_size: int = 64) -> SweepPlan:
-    """Group ``specs`` into same-mode chunks and fix the shared paddings.
+    """Group ``specs`` into spec-pure chunks and fix the shared paddings.
 
-    Grouping is stable and deterministic: cases sort by (mode, graph, DLB
-    knobs) and fill chunks greedily up to ``chunk_size``, never crossing a
-    mode boundary.  Results scatter back by index, so execution order never
-    affects the returned arrays.
+    Grouping is stable and deterministic: cases sort by (spec axes, graph,
+    DLB knobs) and fill chunks greedily up to ``chunk_size``, never crossing
+    a :class:`RuntimeSpec` lattice point.  Results scatter back by index, so
+    execution order never affects the returned arrays.
     """
     specs = list(specs)
     assert specs, "empty sweep"
@@ -109,27 +143,28 @@ def build_plan(graphs: Sequence[TaskGraph], specs: Sequence[CaseSpec],
     assert all(0 <= s.graph < len(graphs) for s in specs)
     w_pad = max(s.n_workers for s in specs)
     t_pad = max(g.n_tasks for g in graphs)
-    # GOMP's single global queue must hold every live task; other modes
-    # leave it untouched, so a tiny placeholder keeps the state small
-    gq_cap = t_pad + 2 if any(s.mode == "gomp" for s in specs) else 4
+    # the locked global queue must hold every live task; other queue
+    # flavors leave it untouched, so a tiny placeholder keeps state small
+    gq_cap = (t_pad + 2
+              if any(s.spec.queue == "locked_global" for s in specs) else 4)
 
     order = sorted(range(len(specs)), key=lambda i: (
-        MODES.index(specs[i].mode), specs[i].graph, specs[i].n_steal,
+        specs[i].spec.axis_ids, specs[i].graph, specs[i].n_steal,
         specs[i].n_victim, specs[i].t_interval, specs[i].p_local,
         specs[i].seed))
     groups: List[List[int]] = []
     for i in order:
-        if (groups and specs[groups[-1][0]].mode == specs[i].mode
+        if (groups and specs[groups[-1][0]].spec == specs[i].spec
                 and len(groups[-1]) < chunk_size):
             groups[-1].append(i)
         else:
             groups.append([i])
     chunks = []
     for idxs in groups:
-        mode = specs[idxs[0]].mode
-        hetero = (mode in DLB_MODES
+        spec = specs[idxs[0]].spec
+        hetero = (spec.balance in DLB_BALANCERS
                   and len({specs[i].knobs for i in idxs}) > 1)
-        chunks.append(ChunkPlan(indices=tuple(idxs), mode=mode,
+        chunks.append(ChunkPlan(indices=tuple(idxs), spec=spec,
                                 hetero_dlb=hetero))
     plan = SweepPlan(n_cases=len(specs), w_pad=w_pad, t_pad=t_pad,
                      gq_cap=gq_cap, chunks=tuple(chunks))

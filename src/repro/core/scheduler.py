@@ -7,15 +7,25 @@ clocks charged by the cost model.  Makespan is causal through queue
 timestamps: popping a task advances the consumer clock to at least the
 producer-side timestamp.
 
-Modes reproduce the paper's ablation ladder:
+A runtime configuration is a point on the queue × barrier × balance lattice
+(:class:`repro.core.spec.RuntimeSpec`):
 
-  gomp     single global priority queue + global task lock (everything
-           serializes on the lock; malloc in the critical path)
-  xgomp    XQueue + static round-robin balancing; centralized barrier keeps a
-           globally-shared *atomic* task count (contended per create/finish)
-  xgomptb  XQueue + distributed tree barrier (no global count at all)
-  na_rp    xgomptb + NUMA-aware Redirect Push   (Alg. 3)
-  na_ws    xgomptb + NUMA-aware Work Stealing   (Alg. 4)
+  queue    locked_global — single global priority queue + global task lock
+           (everything serializes on the lock; malloc in the critical path)
+           vs xqueue — per-pair SPSC lock-less queues (§II-B)
+  barrier  centralized_count — centralized barrier + a globally-shared
+           *atomic* task count (contended per create/finish; under the
+           locked_global queue the count update rides the already-held task
+           lock, so only xqueue runtimes pay it separately)
+           vs tree — distributed tree barrier, no global count at all
+  balance  static_rr — static round-robin placement only
+           vs na_rp — NUMA-aware Redirect Push  (Alg. 3)
+           vs na_ws — NUMA-aware Work Stealing  (Alg. 4)
+
+The paper's five-rung ablation ladder (gomp / xgomp / xgomptb / na_rp /
+na_ws) is the canned subset ``spec.MODE_SPECS`` of that lattice and
+reproduces the pre-decomposition results bitwise
+(tests/test_golden_modes.py).
 
 One simulator step = one scheduling point per worker: a worker either pushes
 pending spawned tasks (up to K_SPAWN), or tries to dequeue-and-execute one
@@ -24,16 +34,16 @@ workers; lock-less "owner writes only" discipline holds per phase by
 construction (see xqueue.py).
 
 Batching (the sweep engine's contract): the entire simulator state is a flat
-pytree of fixed-shape arrays, and every per-configuration knob — the mode id,
-the active worker count, the NUMA zone size, the RNG seed, the memory-bound
-fraction, and the DLB parameters — is a *traced* scalar carried in
-``SweepCase``.  Mode selection is pure mask arithmetic (``jnp.where`` over the
-five MODES), never Python ``if``, so ``step``/``_run_jit`` are safely
-``jax.vmap``-able over a leading batch axis of cases (see sweep.py).  Worker
-counts below the padded width ``W`` leave the extra lanes provably inert:
-padded workers never hold stack entries, are masked out of every dequeue /
-thief mask, and all round-robin / victim arithmetic is modulo the traced
-``n_workers``.
+pytree of fixed-shape arrays, and every per-configuration knob — the three
+spec axis ids, the active worker count, the NUMA zone size, the RNG seed,
+the memory-bound fraction, and the DLB parameters — is a *traced* scalar
+carried in ``SweepCase``.  Axis selection is pure mask arithmetic
+(``jnp.where`` over the axis ids), never Python ``if``, so
+``step``/``_run_jit`` are safely ``jax.vmap``-able over a leading batch axis
+of cases (see sweep.py).  Worker counts below the padded width ``W`` leave
+the extra lanes provably inert: padded workers never hold stack entries, are
+masked out of every dequeue / thief mask, and all round-robin / victim
+arithmetic is modulo the traced ``n_workers``.
 """
 
 from __future__ import annotations
@@ -48,9 +58,11 @@ import numpy as np
 from repro.core import dlb, messaging, xqueue
 from repro.core import barrier as barrier_mod
 from repro.core.costs import DEFAULT_COSTS, CostModel
+from repro.core.spec import MODE_SPECS, RuntimeSpec, resolve_spec
 from repro.core.taskgraph import TaskGraph
 
-MODES = ("gomp", "xgomp", "xgomptb", "na_rp", "na_ws")
+#: legacy five-rung ladder names (see repro.core.spec for the lattice)
+MODES = tuple(MODE_SPECS)
 MODE_ID = {m: i for i, m in enumerate(MODES)}
 
 # counters (paper §V)
@@ -87,23 +99,39 @@ class SweepCase(NamedTuple):
     """One fully-traced simulator configuration.
 
     Every field is a scalar array, so a batch of cases is just this pytree
-    with a leading axis — ``jax.vmap`` over it runs a whole mode × workers ×
-    seeds × DLB-knob grid in one compiled call.
+    with a leading axis — ``jax.vmap`` over it runs a whole spec × workers ×
+    seeds × DLB-knob grid in one compiled call.  The three axis ids carry a
+    :class:`~repro.core.spec.RuntimeSpec` point-by-point (queue_id indexes
+    ``spec.QUEUES``, etc.), so one compiled call can mix lattice points.
     """
-    mode_id: jax.Array    # int32 index into MODES
-    n_workers: jax.Array  # int32 active workers (≤ the padded static width)
-    zone_size: jax.Array  # int32 workers per NUMA zone
-    seed: jax.Array       # int32 PRNG seed
-    mem_bound: jax.Array  # float32 memory-bound fraction of task runtime
+    queue_id: jax.Array    # int32 index into spec.QUEUES
+    barrier_id: jax.Array  # int32 index into spec.BARRIERS
+    balance_id: jax.Array  # int32 index into spec.BALANCERS
+    n_workers: jax.Array   # int32 active workers (≤ the padded static width)
+    zone_size: jax.Array   # int32 workers per NUMA zone
+    seed: jax.Array        # int32 PRNG seed
+    mem_bound: jax.Array   # float32 memory-bound fraction of task runtime
     params: Params
 
 
-def make_case(mode: str | int, n_workers: int, zone_size: int, seed: int = 0,
-              mem_bound: float = 0.0, params: Params | None = None
-              ) -> SweepCase:
-    mid = MODE_ID[mode] if isinstance(mode, str) else int(mode)
+def make_case(spec: RuntimeSpec | str | int, n_workers: int, zone_size: int,
+              seed: int = 0, mem_bound: float = 0.0,
+              params: Params | None = None) -> SweepCase:
+    """Lift a runtime configuration to traced scalars.
+
+    ``spec`` accepts a :class:`RuntimeSpec`, a legacy mode name or spec
+    slug, or a legacy integer mode id (silently — the deprecation for mode
+    strings fires at the public entry points, not in this plumbing).
+    """
+    if isinstance(spec, int):
+        spec = MODE_SPECS[MODES[spec]]
+    else:
+        spec = RuntimeSpec.coerce(spec)
     return SweepCase(
-        mode_id=jnp.int32(mid), n_workers=jnp.int32(n_workers),
+        queue_id=jnp.int32(spec.queue_id),
+        barrier_id=jnp.int32(spec.barrier_id),
+        balance_id=jnp.int32(spec.balance_id),
+        n_workers=jnp.int32(n_workers),
         zone_size=jnp.int32(zone_size), seed=jnp.int32(seed),
         mem_bound=jnp.float32(mem_bound),
         params=params if params is not None else make_params())
@@ -176,7 +204,7 @@ class SimState(NamedTuple):
 @dataclasses.dataclass
 class SimResult:
     name: str
-    mode: str
+    mode: str                 # legacy ladder name when on-ladder, else slug
     n_workers: int
     completed: bool
     time_ns: int
@@ -185,6 +213,7 @@ class SimResult:
     per_worker_busy: np.ndarray
     per_worker_clock: np.ndarray
     per_worker_exec: np.ndarray
+    spec: RuntimeSpec | None = None   # the lattice point that produced this
 
     @property
     def throughput_tasks_per_s(self) -> float:
@@ -275,8 +304,8 @@ def _build_step(W: int, S: int, costs: CostModel, g: GraphArrays,
                 case: SweepCase, max_steps: int):
     """The per-scheduling-point transition.  ``W``/``S``/``max_steps`` are
     static; everything configuration-dependent lives in the traced ``case``,
-    and all mode branching is mask arithmetic — no Python control flow — so
-    the returned ``step`` vmaps over a batch of cases.
+    and all spec-axis branching is mask arithmetic — no Python control flow —
+    so the returned ``step`` vmaps over a batch of cases.
 
     Every phase is additionally gated on ``running`` (the loop's own
     termination predicate): once a simulation finishes, its step is a strict
@@ -290,11 +319,15 @@ def _build_step(W: int, S: int, costs: CostModel, g: GraphArrays,
     params = case.params
     active_w = me < n_w
 
-    is_gomp = case.mode_id == 0
-    is_xgomp = case.mode_id == 1
-    is_narp = case.mode_id == 3
-    is_naws = case.mode_id == 4
-    uses_xq = ~is_gomp
+    # per-axis feature masks (traced scalars; see repro.core.spec for ids)
+    is_locked = case.queue_id == 0        # locked_global queue lane
+    uses_xq = ~is_locked                  # xqueue lane
+    # the centralized barrier's global task count is a separate contended
+    # atomic only for xqueue runtimes — under the locked_global queue the
+    # count update rides the already-held task lock (legacy gomp behavior)
+    pays_count = uses_xq & (case.barrier_id == 0)
+    is_narp = case.balance_id == 1
+    is_naws = case.balance_id == 2
     is_dlb = is_narp | is_naws
 
     def zone(x):
@@ -310,7 +343,7 @@ def _build_step(W: int, S: int, costs: CostModel, g: GraphArrays,
             task = jnp.where(active, etask, 0)
 
             # --- GOMP lane: serialized global-lock push (lock + pq + malloc)
-            act_g = active & is_gomp
+            act_g = active & is_locked
             rank_g = jnp.cumsum(act_g.astype(jnp.int32)) - 1
             cost_g = jnp.where(
                 act_g,
@@ -356,7 +389,7 @@ def _build_step(W: int, S: int, costs: CostModel, g: GraphArrays,
                              clock=clock, rr=rr, rp=rp, ctr=ctr,
                              creator=creator)
             # atomic global count: task created (XGOMP only)
-            st = _atomic_charge(st, active & is_xgomp, costs)
+            st = _atomic_charge(st, active & pays_count, costs)
 
             # consume one task from the range entry (one-hot row update)
             sidx = jnp.where(active, topi, S)
@@ -382,7 +415,7 @@ def _build_step(W: int, S: int, costs: CostModel, g: GraphArrays,
                 st_c = st_c._replace(clock=st_c.clock + dur_t, ctr=ctr)
                 st_c = _finish(st_c, jnp.where(imm, task, -1), g, W)
                 # task finished -> atomic decrement (XGOMP only)
-                st_c = _atomic_charge(st_c, imm & is_xgomp, costs)
+                st_c = _atomic_charge(st_c, imm & pays_count, costs)
                 return jnp.asarray(False), st_c
 
             _, st = jax.lax.while_loop(imm_cond, imm_body,
@@ -394,7 +427,7 @@ def _build_step(W: int, S: int, costs: CostModel, g: GraphArrays,
         idle_m = (st.s_top == 0) & active_w & running
 
         # --- GOMP lane: contended pops off the single global queue
-        idle_g = idle_m & is_gomp
+        idle_g = idle_m & is_locked
         avail = st.g_tail - st.g_head
         rank = jnp.cumsum(idle_g.astype(jnp.int32)) - 1
         found_g = idle_g & (rank < avail)
@@ -416,8 +449,8 @@ def _build_step(W: int, S: int, costs: CostModel, g: GraphArrays,
         cost_x = cost_x + jnp.where(found_x, _comm(costs, me, src, zsz), 0)
         deq_rr = st.deq_rr + (found_x & (src != me)).astype(jnp.int32)
 
-        task = jnp.where(is_gomp, task_g, task_x)
-        ts = jnp.where(is_gomp, ts_g, ts_x)
+        task = jnp.where(is_locked, task_g, task_x)
+        ts = jnp.where(is_locked, ts_g, ts_x)
         found = found_g | found_x
         st = st._replace(xq=xq, g_head=g_head, deq_rr=deq_rr, ctr=ctr,
                          clock=st.clock + cost_g + cost_x)
@@ -519,10 +552,14 @@ def _build_step(W: int, S: int, costs: CostModel, g: GraphArrays,
         ctr = _bump(ctr, "busy_ns", dur_t)
         st = st._replace(clock=clock, ctr=ctr)
         st = _finish(st, jnp.where(found, task, -1), g, W)
-        # global task count decrement: contended atomic for XGOMP, plain
-        # atomic op count for GOMP (already serialized on the queue lock)
-        st = _atomic_charge(st, found & is_xgomp, costs)
-        return st._replace(ctr=_bump(st.ctr, "atomic_ops", found & is_gomp))
+        # global task count decrement — only the centralized_count barrier
+        # keeps one: contended atomic on the xqueue lane, plain atomic op
+        # count on the locked lane (already serialized on the queue lock);
+        # under the tree barrier there is no global count to decrement
+        st = _atomic_charge(st, found & pays_count, costs)
+        return st._replace(ctr=_bump(
+            st.ctr, "atomic_ops",
+            found & is_locked & (case.barrier_id == 0)))
 
     def step(st: SimState) -> SimState:
         running = (st.n_done < g.n_tasks) & (st.step_i < max_steps) \
@@ -611,21 +648,29 @@ def _run_jit(cfg: SimConfig, gq_cap: int, g: GraphArrays,
 _run_cached = jax.jit(_run_jit, static_argnums=(0, 1))
 
 
-def run_schedule(graph: TaskGraph, mode: str = "xgomptb",
+def run_schedule(graph: TaskGraph, mode: str | RuntimeSpec | None = None,
                  params: Params | None = None, cfg: SimConfig | None = None,
-                 seed: int = 0) -> SimResult:
-    """Simulate scheduling `graph` under `mode`; returns makespan + counters."""
-    assert mode in MODES, mode
+                 seed: int = 0, *, spec: RuntimeSpec | str | None = None
+                 ) -> SimResult:
+    """Simulate scheduling ``graph`` under one runtime configuration.
+
+    ``spec`` is the canonical way to name the configuration (a
+    :class:`RuntimeSpec` lattice point); the legacy string ``mode=`` still
+    works but emits a ``DeprecationWarning``.  Default is the SLB baseline
+    (XQueue + tree barrier + static round-robin, the old ``"xgomptb"``).
+    Returns makespan + the paper's §V counters.
+    """
+    rspec = resolve_spec(spec, mode, where="run_schedule")
     cfg = cfg or SimConfig()
     params = params or make_params()
-    gq_cap = graph.n_tasks + 2 if mode == "gomp" else 4
+    gq_cap = graph.n_tasks + 2 if rspec.queue == "locked_global" else 4
     W = cfg.n_workers
-    case = make_case(mode, W, max(W // cfg.n_zones, 1), seed,
+    case = make_case(rspec, W, max(W // cfg.n_zones, 1), seed,
                      round(float(graph.mem_bound), 3), params)
     st = jax.block_until_ready(
         _run_cached(cfg, gq_cap, graph_arrays(graph), case))
 
-    if mode in ("gomp", "xgomp"):
+    if rspec.barrier == "centralized_count":
         episode = barrier_mod.centralized_episode(W, cfg.costs)
     else:
         episode = barrier_mod.tree_episode(W, cfg.costs)
@@ -634,10 +679,11 @@ def run_schedule(graph: TaskGraph, mode: str = "xgomptb",
     counters["atomic_ops"] += int(episode.atomic_ops)
     time_ns = int(np.asarray(st.clock).max()) + int(episode.time_ns)
     return SimResult(
-        name=graph.name, mode=mode, n_workers=W,
+        name=graph.name, mode=rspec.label, n_workers=W,
         completed=bool(st.n_done == graph.n_tasks) and not bool(st.overflow),
         time_ns=time_ns, steps=int(st.step_i), counters=counters,
         per_worker_busy=ctr[:, CTR["busy_ns"]].copy(),
         per_worker_clock=np.asarray(st.clock).copy(),
         per_worker_exec=ctr[:, CTR["exec"]].copy(),
+        spec=rspec,
     )

@@ -1,14 +1,17 @@
 """The experiment service: batched scheduler-ablation sweeps, layered.
 
-The paper's headline results are ablation *grids* — mode × worker count ×
-task granularity × DLB parameters (Figs. 4-11, Tables I-IV) — and the
-simulator's per-configuration cost is dominated by dispatch overhead on tiny
-arrays, not by useful work.  This module is the thin orchestration on top of
-three explicit layers:
+The paper's headline results are ablation *grids* — runtime spec × worker
+count × task granularity × DLB parameters (Figs. 4-11, Tables I-IV) — and
+the simulator's per-configuration cost is dominated by dispatch overhead on
+tiny arrays, not by useful work.  Runtime configurations are
+:class:`~repro.core.spec.RuntimeSpec` lattice points (queue × barrier ×
+balance); this module is the thin orchestration on top of three explicit
+layers:
 
 * **plan** (`repro.core.plan`) — case list → ``SweepPlan``: shared paddings
-  (worker lanes, task counts, GOMP queue capacity) and (mode, graph)-grouped
-  chunks.  Pure host-side; unit-tested without running the simulator.
+  (worker lanes, task counts, locked-queue capacity) and (spec,
+  graph)-grouped chunks.  Pure host-side; unit-tested without running the
+  simulator.
 * **cache** (`repro.core.cache`) — a content-addressed on-disk result store
   consulted *per case* before anything executes: re-running overlapping
   grids skips both compilation and execution, and only cache misses are
@@ -22,10 +25,12 @@ Two entry points:
 
 * ``run_cases(graphs, specs)`` — arbitrary flat list of ``CaseSpec``
   configurations (what the benchmark suites use: per-app best parameters,
-  mixed mode ladders, ...).
-* ``run_grid(graphs, modes=..., n_workers=..., seeds=..., ...)`` — cartesian
-  product sugar that labels the result with ``grid_axes`` and reshapes
-  makespans/counters to the grid shape.
+  mixed spec ladders, ...).
+* ``run_grid(graphs, queues=..., barriers=..., balancers=...,
+  n_workers=..., seeds=..., ...)`` — cartesian product sugar over the spec
+  lattice that labels the result with ``grid_axes`` and reshapes
+  makespans/counters to the grid shape (legacy ``modes=`` is shimmed with a
+  ``DeprecationWarning``).
 
 Correctness contract (asserted by tests/test_sweep.py): a batched run is
 bitwise identical to running each configuration alone through the same
@@ -37,6 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -46,6 +52,7 @@ from repro.core import cache as cache_mod
 from repro.core.executors import STRATEGIES, ExecContext, select_executor
 from repro.core.plan import CaseSpec, build_plan
 from repro.core.scheduler import CTR_NAMES, SimConfig, graph_arrays
+from repro.core.spec import AXES, RuntimeSpec, spec_product
 from repro.core.taskgraph import TaskGraph
 
 __all__ = ["CaseSpec", "SweepResult", "run_cases", "run_grid"]
@@ -87,6 +94,8 @@ class SweepResult:
         s = self.specs[i]
         return dict(
             app=self.graph_names[s.graph], mode=s.mode,
+            queue=s.spec.queue, barrier=s.spec.barrier,
+            balance=s.spec.balance,
             n_workers=s.n_workers, seed=s.seed, n_victim=s.n_victim,
             n_steal=s.n_steal, t_interval=s.t_interval, p_local=s.p_local,
             time_ns=int(self.time_ns[i]), completed=bool(self.completed[i]),
@@ -174,12 +183,12 @@ def run_cases(graphs: Sequence[TaskGraph] | TaskGraph,
                         n_done=int(n_done[i]), overflow=bool(overflow[i]),
                         step_i=int(step_i[i])))
 
-    # barrier episode per case (host-side: mode and W are known per spec,
-    # matching run_schedule's accounting bit-for-bit)
+    # barrier episode per case (host-side: the barrier axis and W are known
+    # per spec, matching run_schedule's accounting bit-for-bit)
     ep_t = np.zeros(B, np.int64)
     ep_a = np.zeros(B, np.int64)
     for i, s in enumerate(specs):
-        if s.mode in ("gomp", "xgomp"):
+        if s.spec.barrier == "centralized_count":
             ep = barrier_mod.centralized_episode(s.n_workers, cfg.costs)
         else:
             ep = barrier_mod.tree_episode(s.n_workers, cfg.costs)
@@ -199,7 +208,7 @@ def run_cases(graphs: Sequence[TaskGraph] | TaskGraph,
 
 
 def run_grid(graphs: Sequence[TaskGraph] | TaskGraph,
-             modes: Sequence[str] = ("xgomptb",),
+             modes: Sequence[str | RuntimeSpec] | None = None,
              n_workers: Sequence[int] = (32,),
              seeds: Sequence[int] = (0,),
              n_victim: Sequence[int] = (4,),
@@ -209,25 +218,73 @@ def run_grid(graphs: Sequence[TaskGraph] | TaskGraph,
              n_zones: int | None = None,
              cfg: SimConfig | None = None,
              chunk_size: int = 64, strategy: str = "auto",
-             cache=None) -> SweepResult:
-    """Cartesian sweep: app × mode × workers × seed × DLB knobs.
+             cache=None, *,
+             queues: Sequence[str] | None = None,
+             barriers: Sequence[str] | None = None,
+             balancers: Sequence[str] | None = None) -> SweepResult:
+    """Cartesian sweep over the spec lattice × workers × seeds × DLB knobs.
 
-    Returns a ``SweepResult`` whose ``grid_axes`` names every axis (in that
-    order) and whose ``makespans``/``counter(name)`` are reshaped to the grid.
+    The runtime axes are named per :mod:`repro.core.spec`:
+    ``queues`` × ``barriers`` × ``balancers`` (each defaulting to the SLB
+    baseline's value), e.g. the full 12-point ablation lattice is::
+
+        run_grid(graphs, queues=spec.QUEUES, barriers=spec.BARRIERS,
+                 balancers=spec.BALANCERS)
+
+    The legacy ``modes=`` argument (a non-cartesian list of ladder names)
+    still works — string entries emit a ``DeprecationWarning`` and the grid
+    keeps its historical ``mode`` axis; ``RuntimeSpec`` entries are accepted
+    silently (the escape hatch for non-cartesian spec lists).
+
+    Returns a ``SweepResult`` whose ``grid_axes`` names every axis (in
+    declaration order) and whose ``makespans``/``counter(name)`` reshape to
+    the grid.
     """
     if isinstance(graphs, TaskGraph):
         graphs = [graphs]
     graphs = list(graphs)
     cfg = cfg or SimConfig()
     zones = cfg.n_zones if n_zones is None else n_zones
-    axes = dict(app=tuple(g.name for g in graphs), mode=tuple(modes),
+
+    lattice_args = (queues, barriers, balancers)
+    if modes is not None and any(a is not None for a in lattice_args):
+        raise TypeError("pass either the deprecated modes= or the "
+                        "queues=/barriers=/balancers= lattice to run_grid, "
+                        "not both")
+    if modes is not None:
+        if any(isinstance(m, str) for m in modes):
+            warnings.warn(
+                "modes= in run_grid is deprecated; pass queues=/barriers=/"
+                "balancers= (see repro.core.spec.MODE_SPECS for the "
+                "mode→spec mapping)", DeprecationWarning, stacklevel=2)
+        spec_list = tuple(RuntimeSpec.coerce(m) for m in modes)
+        spec_axes = dict(mode=tuple(
+            m if isinstance(m, str) else m.label for m in modes))
+    else:
+        # unset axes default to the SLB baseline's value on that axis;
+        # an explicitly-passed empty axis is an error, not a default
+        baseline = RuntimeSpec()
+        lattice = {}
+        for name, vals in zip(("queue", "barrier", "balance"),
+                              lattice_args):
+            if vals is None:
+                lattice[name] = (getattr(baseline, name),)
+                continue
+            vals = tuple(vals)
+            assert vals, f"empty {name} axis in run_grid"
+            assert all(v in AXES[name] for v in vals), (name, vals)
+            lattice[name] = vals
+        spec_list = spec_product(lattice["queue"], lattice["barrier"],
+                                 lattice["balance"])
+        spec_axes = lattice
+    axes = dict(app=tuple(g.name for g in graphs), **spec_axes,
                 n_workers=tuple(n_workers), seed=tuple(seeds),
                 n_victim=tuple(n_victim), n_steal=tuple(n_steal),
                 t_interval=tuple(t_interval), p_local=tuple(p_local))
     specs = [
-        CaseSpec(mode=m, n_workers=w, n_zones=zones, seed=sd, n_victim=nv,
+        CaseSpec(spec=sp, n_workers=w, n_zones=zones, seed=sd, n_victim=nv,
                  n_steal=ns, t_interval=ti, p_local=pl, graph=gi)
-        for gi in range(len(graphs)) for m in modes for w in n_workers
+        for gi in range(len(graphs)) for sp in spec_list for w in n_workers
         for sd in seeds for nv in n_victim for ns in n_steal
         for ti in t_interval for pl in p_local
     ]

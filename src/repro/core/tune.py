@@ -14,8 +14,11 @@ round keeps the top ``survivors`` and evaluates their ladder neighbors
 makespan over ``seeds``; incomplete runs score infinity.  Everything is
 deterministic: ties break lexicographically on the knob tuple.
 
-Per-app results persist as JSON artifacts under ``experiments/tuned/``
-(:func:`save_artifact` / :func:`load_tuned`); ``benchmarks/dlb_best.py``
+Per-(app, spec) results persist as JSON artifacts under
+``experiments/tuned/`` (:func:`save_artifact` / :func:`load_tuned`), one
+file per runtime spec — the filename carries the spec slug, e.g.
+``experiments/tuned/smoke/fib__xqueue-tree-na_ws.json`` — so tuning one
+lattice point never clobbers another's artifact.  ``benchmarks/dlb_best.py``
 prefers a matching artifact over its static hand-tuned table.
 """
 
@@ -28,8 +31,9 @@ import os
 from typing import Dict, Iterable, Optional, Sequence
 
 from repro.core.cache import CODE_VERSION
-from repro.core.plan import DLB_MODES, CaseSpec
+from repro.core.plan import CaseSpec
 from repro.core.scheduler import SimConfig
+from repro.core.spec import DLB_BALANCERS, RuntimeSpec, resolve_spec
 from repro.core.sweep import run_cases
 from repro.core.taskgraph import TaskGraph
 
@@ -78,18 +82,22 @@ def _neighbors(p: TunedParams) -> Iterable[TunedParams]:
                 yield dataclasses.replace(p, **{knob: ladder[j]})
 
 
-def tune_mode(graph: TaskGraph, mode: str, cfg: SimConfig, *,
+def tune_spec(graph: TaskGraph, spec: RuntimeSpec | str, cfg: SimConfig, *,
               seeds: Sequence[int] = (0,), rounds: int = 2,
               survivors: int = 4, coarse: Optional[dict] = None,
               extra: Sequence[TunedParams] = (), cache=None,
               strategy: str = "auto", chunk_size: int = 64) -> dict:
-    """Search the DLB knobs for one (graph, mode); returns the best point.
+    """Search the DLB knobs for one (graph, spec); returns the best point.
 
-    ``extra`` configurations join rung 0 — seeding the hand-tuned reference
-    guarantees the result matches or beats it under the same seeds.
-    Returns ``dict(params, makespan_ns, n_configs, n_sims, seeds)``.
+    ``spec`` must sit on a DLB balancer (na_rp / na_ws) — the knobs are
+    dead otherwise; any queue/barrier combination is tunable, including
+    off-ladder ones.  ``extra`` configurations join rung 0 — seeding the
+    hand-tuned reference guarantees the result matches or beats it under
+    the same seeds.  Returns ``dict(params, makespan_ns, n_configs,
+    n_sims, seeds)``.
     """
-    assert mode in DLB_MODES, mode
+    spec = RuntimeSpec.coerce(spec)
+    assert spec.balance in DLB_BALANCERS, spec
     coarse = coarse or COARSE
     seeds = tuple(seeds)
     scores: Dict[TunedParams, float] = {}
@@ -100,7 +108,7 @@ def tune_mode(graph: TaskGraph, mode: str, cfg: SimConfig, *,
         todo = [p for p in dict.fromkeys(cands) if p not in scores]
         if not todo:
             return
-        specs = [CaseSpec(mode=mode, n_workers=cfg.n_workers,
+        specs = [CaseSpec(spec=spec, n_workers=cfg.n_workers,
                           n_zones=cfg.n_zones, seed=sd, n_victim=p.n_victim,
                           n_steal=p.n_steal, t_interval=p.t_interval,
                           p_local=p.p_local)
@@ -129,9 +137,15 @@ def tune_mode(graph: TaskGraph, mode: str, cfg: SimConfig, *,
 
     best = min(scores, key=lambda p: (scores[p], p))
     assert scores[best] != float("inf"), \
-        f"no completing configuration found for {graph.name}/{mode}"
+        f"no completing configuration found for {graph.name}/{spec.slug}"
     return dict(params=best, makespan_ns=int(scores[best]),
                 n_configs=len(scores), n_sims=n_sims, seeds=seeds)
+
+
+def tune_mode(graph: TaskGraph, mode: str, cfg: SimConfig, **kw) -> dict:
+    """Deprecated shim: legacy mode-name entry point for :func:`tune_spec`."""
+    spec = resolve_spec(None, mode, where="tune_mode")
+    return tune_spec(graph, spec, cfg, **kw)
 
 
 def sim_signature(cfg: SimConfig) -> str:
@@ -148,40 +162,46 @@ def sim_signature(cfg: SimConfig) -> str:
     return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
 
-def artifact_path(app: str, smoke: bool,
+def artifact_path(app: str, spec: RuntimeSpec | str, smoke: bool,
                   tuned_dir: str = DEFAULT_TUNED_DIR) -> str:
-    """``<tuned_dir>/<smoke|full>/<app>.json`` — one slot per scale, so
-    tuning at one scale never clobbers the other's committed artifact."""
+    """``<tuned_dir>/<smoke|full>/<app>__<spec-slug>.json`` — one slot per
+    (scale, app, lattice point), so tuning one spec or scale never clobbers
+    another's committed artifact."""
+    spec = RuntimeSpec.coerce(spec)
     return os.path.join(tuned_dir, "smoke" if smoke else "full",
-                        f"{app}.json")
+                        f"{app}__{spec.slug}.json")
 
 
-def save_artifact(app: str, modes_result: Dict[str, dict], cfg: SimConfig, *,
-                  smoke: bool, slb_ns: Optional[int] = None,
+def save_artifact(app: str, spec: RuntimeSpec | str, result: dict,
+                  cfg: SimConfig, *, smoke: bool,
+                  slb_ns: Optional[int] = None,
                   ref: Optional[dict] = None,
                   tuned_dir: str = DEFAULT_TUNED_DIR) -> str:
-    """Write the per-scale artifact (see :func:`artifact_path`).
+    """Write one (app, spec) artifact (see :func:`artifact_path`).
 
-    The artifact records the simulated machine (worker/zone counts, step
-    budget) and the smoke flag so consumers only apply parameters tuned at
-    *their* scale, plus the hand-tuned reference comparison when provided.
+    ``result`` is :func:`tune_spec`'s return value.  The artifact records
+    the spec axes, the simulated machine (worker/zone counts, step budget)
+    and the smoke flag so consumers only apply parameters tuned at *their*
+    scale and lattice point, plus the hand-tuned reference comparison when
+    provided.
     """
+    spec = RuntimeSpec.coerce(spec)
     rec = dict(
-        app=app, smoke=bool(smoke), code_version=CODE_VERSION,
+        app=app, spec=spec.asdict(), spec_slug=spec.slug,
+        smoke=bool(smoke), code_version=CODE_VERSION,
         n_workers=cfg.n_workers, n_zones=cfg.n_zones,
         max_steps=cfg.max_steps, sim_signature=sim_signature(cfg),
-        modes={m: dict(params=r["params"].asdict(),
-                       makespan_ns=int(r["makespan_ns"]),
-                       n_configs=int(r["n_configs"]),
-                       n_sims=int(r["n_sims"]),
-                       seeds=list(r["seeds"]))
-               for m, r in modes_result.items()},
+        params=result["params"].asdict(),
+        makespan_ns=int(result["makespan_ns"]),
+        n_configs=int(result["n_configs"]),
+        n_sims=int(result["n_sims"]),
+        seeds=list(result["seeds"]),
     )
     if slb_ns is not None:
         rec["slb_ns"] = int(slb_ns)
     if ref is not None:
         rec["ref"] = ref
-    path = artifact_path(app, smoke, tuned_dir)
+    path = artifact_path(app, spec, smoke, tuned_dir)
     os.makedirs(os.path.dirname(path), exist_ok=True)
     with open(path, "w") as f:
         json.dump(rec, f, indent=1, sort_keys=True)
@@ -189,22 +209,23 @@ def save_artifact(app: str, modes_result: Dict[str, dict], cfg: SimConfig, *,
     return path
 
 
-def load_tuned(app: str, *, smoke: bool,
+def load_tuned(app: str, spec: RuntimeSpec | str, *, smoke: bool,
                cfg: Optional[SimConfig] = None,
                n_workers: Optional[int] = None,
                n_zones: Optional[int] = None,
                max_steps: Optional[int] = None,
                tuned_dir: str = DEFAULT_TUNED_DIR) -> Optional[dict]:
-    """Load the per-scale artifact if it matches the requested machine.
+    """Load the (app, spec) artifact if it matches the requested machine.
 
     Passing ``cfg`` checks the full simulation scale: worker count, zone
     topology, and the physics signature (queue/stack caps, step budget,
     cost model).  Returns the artifact dict, or None when absent,
-    unreadable, tuned at a different scale, or tuned against older
-    simulator semantics (code-version mismatch) — callers then fall back
-    to their static tables.
+    unreadable, tuned at a different scale or lattice point, or tuned
+    against older simulator semantics (code-version mismatch) — callers
+    then fall back to their static tables.
     """
-    path = artifact_path(app, smoke, tuned_dir)
+    spec = RuntimeSpec.coerce(spec)
+    path = artifact_path(app, spec, smoke, tuned_dir)
     try:
         with open(path) as f:
             rec = json.load(f)
@@ -213,6 +234,8 @@ def load_tuned(app: str, *, smoke: bool,
     if rec.get("code_version") != CODE_VERSION:
         return None
     if bool(rec.get("smoke")) != bool(smoke):
+        return None
+    if rec.get("spec") != spec.asdict():
         return None
     if cfg is not None:
         if rec.get("n_workers") != cfg.n_workers:
@@ -227,6 +250,6 @@ def load_tuned(app: str, *, smoke: bool,
         return None
     if max_steps is not None and rec.get("max_steps") != max_steps:
         return None
-    if "modes" not in rec:
+    if "params" not in rec:
         return None
     return rec

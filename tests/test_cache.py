@@ -6,10 +6,12 @@ import dataclasses
 import pytest
 
 from repro.core import taskgraph
-from repro.core.cache import (ResultCache, case_key, graph_digest, resolve)
+from repro.core.cache import (CODE_VERSION, ResultCache, case_key,
+                              graph_digest, resolve)
 from repro.core.costs import CostModel
 from repro.core.plan import CaseSpec
 from repro.core.scheduler import CTR_NAMES, SimConfig
+from repro.core.spec import RuntimeSpec
 from repro.core.sweep import run_cases
 
 CFG = SimConfig(n_workers=8, n_zones=2, max_steps=60_000)
@@ -32,12 +34,16 @@ def test_graph_digest_is_content_addressed(graph):
 
 def test_case_key_sensitivity(graph):
     g = graph_digest(graph)
-    base = CaseSpec(mode="na_ws", n_workers=8, n_zones=2)
+    base = CaseSpec(spec="na_ws", n_workers=8, n_zones=2)
     k0 = case_key(g, base, CFG)
     assert k0 == case_key(g, base, CFG)
-    for change in (dict(mode="na_rp"), dict(seed=1), dict(n_victim=2),
+    for change in (dict(spec="na_rp"), dict(seed=1), dict(n_victim=2),
                    dict(n_steal=4), dict(t_interval=30), dict(p_local=0.5),
-                   dict(n_workers=4)):
+                   dict(n_workers=4),
+                   # every spec axis enters the key, off-ladder included
+                   dict(spec=RuntimeSpec("locked_global", "tree", "na_ws")),
+                   dict(spec=RuntimeSpec("xqueue", "centralized_count",
+                                         "na_ws"))):
         assert case_key(g, dataclasses.replace(base, **change), CFG) != k0, \
             change
     # simulator shape/limit fields change results -> change keys
@@ -55,7 +61,8 @@ def test_put_get_roundtrip(tmp_path):
                n_done=7, overflow=False, step_i=42)
     assert c.get("ab" + "0" * 62) is None
     c.put("ab" + "0" * 62, rec)
-    assert c.get("ab" + "0" * 62) == rec
+    # entries come back with the writing code version stamped on
+    assert c.get("ab" + "0" * 62) == dict(rec, code_version=CODE_VERSION)
     assert c.hits == 1 and c.misses == 1
 
 
@@ -82,7 +89,7 @@ def test_engine_cache_hit_is_bitwise(tmp_path, graph):
     """A warm re-run must reproduce the executed SweepResult exactly —
     including counters and completion flags."""
     c = ResultCache(str(tmp_path))
-    specs = [CaseSpec(mode=m, n_workers=w, n_zones=2, graph=0)
+    specs = [CaseSpec(spec=m, n_workers=w, n_zones=2, graph=0)
              for m in ("xgomptb", "na_ws") for w in (4, 8)]
     cold = run_cases(graph, specs, cfg=CFG, cache=c)
     assert cold.cache_hits == 0
@@ -105,7 +112,7 @@ def test_schema_stale_entry_is_a_miss(tmp_path, graph):
     import json
     import os
     c = ResultCache(str(tmp_path))
-    spec = CaseSpec(mode="xgomptb", n_workers=8, n_zones=2)
+    spec = CaseSpec(spec="xgomptb", n_workers=8, n_zones=2)
     run_cases(graph, [spec], cfg=CFG, cache=c)
     # strip one counter from the stored record, as if CTR_NAMES grew since
     (path,) = [os.path.join(r, f) for r, _, fs in os.walk(str(tmp_path))
@@ -123,10 +130,74 @@ def test_schema_stale_entry_is_a_miss(tmp_path, graph):
 def test_engine_partial_overlap(tmp_path, graph):
     """Overlapping grids: only new cases execute; results are unaffected."""
     c = ResultCache(str(tmp_path))
-    first = [CaseSpec(mode="xgomptb", n_workers=8, seed=s) for s in (0, 1)]
+    first = [CaseSpec(spec="xgomptb", n_workers=8, seed=s)
+             for s in (0, 1)]
     run_cases(graph, first, cfg=CFG, cache=c)
-    wider = first + [CaseSpec(mode="xgomptb", n_workers=8, seed=2)]
+    wider = first + [CaseSpec(spec="xgomptb", n_workers=8, seed=2)]
     res = run_cases(graph, wider, cfg=CFG, cache=c)
     assert res.cache_hits == 2
     plain = run_cases(graph, wider, cfg=CFG)
     assert (res.time_ns == plain.time_ns).all()
+
+
+def _legacy_key(gdigest: str, spec: CaseSpec, cfg: SimConfig) -> str:
+    """Reproduce the pre-redesign (sweep-engine-v2) key derivation: flat
+    ``mode`` name, old code version — what on-disk stores still hold after
+    upgrading."""
+    import dataclasses
+    import hashlib
+    import json
+    blob = json.dumps(dict(
+        v="sweep-engine-v2",
+        graph=gdigest,
+        mode=spec.mode, n_workers=spec.n_workers,
+        zone_size=spec.zone_size,
+        seed=spec.seed, n_victim=spec.n_victim, n_steal=spec.n_steal,
+        t_interval=spec.t_interval, p_local=repr(float(spec.p_local)),
+        queue_cap=cfg.queue_cap, stack_cap=cfg.stack_cap,
+        max_steps=cfg.max_steps,
+        costs={k: repr(v) for k, v in
+               sorted(dataclasses.asdict(cfg.costs).items())},
+    ), sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def test_cache_migration_legacy_entries_miss_cleanly(tmp_path, graph):
+    """Satellite acceptance: after the CODE_VERSION bump, entries keyed by
+    the legacy scheme are never false hits and never crash the engine —
+    the case re-executes and lands under its new key, and ``stats`` reports
+    the version split (what `benchmarks/run.py cache stats` prints)."""
+    c = ResultCache(str(tmp_path))
+    spec = CaseSpec(spec="na_ws", n_workers=8, n_zones=2)
+    # poison the store with a legacy-keyed, wrong-valued record (old
+    # records carried no code_version stamp)
+    legacy = _legacy_key(graph_digest(graph), spec, CFG)
+    c.put(legacy, dict(clock_max=1, counters={n: 0 for n in CTR_NAMES},
+                       n_done=0, overflow=False, step_i=1))
+    import json
+    import os
+    path = c._path(legacy)
+    with open(path) as f:
+        rec = json.load(f)
+    del rec["code_version"]
+    with open(path, "w") as f:
+        json.dump(rec, f)
+
+    assert legacy != case_key(graph_digest(graph), spec, CFG), \
+        "the redesign must re-key every entry"
+    res = run_cases(graph, [spec], cfg=CFG, cache=c)
+    assert res.cache_hits == 0, "legacy entry must not be a false hit"
+    assert res.completed.all()
+    assert int(res.counters["exec"][0]) == graph.n_tasks
+    assert int(res.time_ns[0]) > 1, "poison value must not leak through"
+
+    st = c.stats()
+    assert st["entries"] == 2
+    assert st["versions"] == {"unversioned": 1, CODE_VERSION: 1}
+    assert st["stale_entries"] == 1
+    assert st["code_version"] == CODE_VERSION
+
+    # warm re-run hits only the new-keyed entry
+    warm = run_cases(graph, [spec], cfg=CFG, cache=c)
+    assert warm.cache_hits == 1
+    assert (warm.time_ns == res.time_ns).all()

@@ -1,0 +1,64 @@
+"""Bitwise equivalence of the five legacy modes through the RuntimeSpec API.
+
+``tests/golden_modes.json`` was captured on the pre-redesign engine (the
+scalar ``mode_id`` ladder, cache version ``sweep-engine-v2``): per-(graph,
+mode) makespans, step counts, and the full §V counter set.  Every legacy
+mode run via ``RuntimeSpec.from_mode()`` must reproduce those numbers
+exactly — on the serial, vmap, and sharded executors alike — or the axis
+decomposition changed the simulator's semantics.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.core import taskgraph
+from repro.core.scheduler import CTR_NAMES, SimConfig
+from repro.core.spec import RuntimeSpec
+from repro.core.sweep import CaseSpec, run_cases
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden_modes.json")
+
+with open(GOLDEN_PATH) as f:
+    GOLDEN = json.load(f)
+
+CFG = SimConfig(**GOLDEN["cfg"])
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    return {name: taskgraph.build(builder, **kw)
+            for name, (builder, kw) in GOLDEN["graphs"].items()}
+
+
+@pytest.fixture(scope="module")
+def specs(graphs):
+    names = list(graphs)
+    return [CaseSpec(spec=RuntimeSpec.from_mode(c["mode"]),
+                     n_workers=CFG.n_workers, n_zones=CFG.n_zones,
+                     graph=names.index(c["graph"]), **GOLDEN["knobs"])
+            for c in GOLDEN["cases"]]
+
+
+@pytest.mark.parametrize("strategy", ("serial", "batched", "sharded"))
+def test_legacy_modes_match_pre_redesign_golden(graphs, specs, strategy):
+    """Acceptance criterion: all 5 legacy modes × 2 graphs reproduce the
+    pre-redesign golden makespans, steps, and counters bitwise through
+    RuntimeSpec.from_mode(), on every executor."""
+    res = run_cases(list(graphs.values()), specs, cfg=CFG,
+                    strategy=strategy)
+    assert res.completed.all()
+    for i, c in enumerate(GOLDEN["cases"]):
+        label = (strategy, c["graph"], c["mode"])
+        assert int(res.time_ns[i]) == c["time_ns"], label
+        assert int(res.steps[i]) == c["steps"], label
+        for name in CTR_NAMES:
+            assert int(res.counters[name][i]) == c["counters"][name], \
+                (*label, name)
+
+
+def test_golden_covers_every_mode():
+    modes = {c["mode"] for c in GOLDEN["cases"]}
+    assert modes == {"gomp", "xgomp", "xgomptb", "na_rp", "na_ws"}
+    assert len(GOLDEN["cases"]) == len(modes) * len(GOLDEN["graphs"])

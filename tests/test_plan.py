@@ -1,4 +1,4 @@
-"""Plan-layer unit tests: chunk grouping and padding invariants.
+"""Plan-layer unit tests: spec-pure chunk grouping and padding invariants.
 
 Everything here is host-side planning only — no simulator execution, no
 compiled code; the whole module runs in milliseconds."""
@@ -7,7 +7,7 @@ import pytest
 
 from repro.core import taskgraph
 from repro.core.plan import CaseSpec, build_plan
-from repro.core.scheduler import MODES
+from repro.core.spec import LATTICE, RuntimeSpec
 
 
 @pytest.fixture(scope="module")
@@ -17,7 +17,7 @@ def graphs():
 
 def _mixed_specs(graphs):
     return [
-        CaseSpec(mode=m, n_workers=w, n_zones=2, n_victim=nv, graph=gi)
+        CaseSpec(spec=m, n_workers=w, n_zones=2, n_victim=nv, graph=gi)
         for gi in range(len(graphs))
         for m in ("gomp", "xgomptb", "na_ws")
         for w in (4, 8)
@@ -33,16 +33,21 @@ def test_chunks_partition_specs(graphs):
     assert plan.n_cases == len(specs)
 
 
-def test_chunks_never_cross_modes(graphs):
-    specs = _mixed_specs(graphs)
+def test_chunks_are_spec_pure(graphs):
+    """Chunks never cross a RuntimeSpec lattice point — even for specs that
+    share a legacy mode-ladder prefix."""
+    specs = _mixed_specs(graphs) + [
+        CaseSpec(spec=s, n_workers=4, graph=0) for s in LATTICE]
     plan = build_plan(graphs, specs)
     for c in plan.chunks:
-        modes = {specs[i].mode for i in c.indices}
-        assert modes == {c.mode}
+        chunk_specs = {specs[i].spec for i in c.indices}
+        assert chunk_specs == {c.spec}
+        assert c.mode == c.spec.label
 
 
 def test_chunk_size_cap(graphs):
-    specs = [CaseSpec(mode="xgomptb", n_workers=8, seed=s) for s in range(10)]
+    specs = [CaseSpec(spec="xgomptb", n_workers=8, seed=s)
+             for s in range(10)]
     plan = build_plan(graphs, specs, chunk_size=4)
     sizes = [c.n_real for c in plan.chunks]
     assert all(s <= 4 for s in sizes)
@@ -62,33 +67,46 @@ def test_padding_invariants(graphs):
 
 
 def test_gq_cap_rule(graphs):
-    with_gomp = [CaseSpec(mode="gomp", n_workers=4),
-                 CaseSpec(mode="xgomptb", n_workers=4)]
-    without = [CaseSpec(mode="xgomptb", n_workers=4),
-               CaseSpec(mode="na_ws", n_workers=4)]
+    """Any locked_global queue in the batch — on- or off-ladder — sizes the
+    global queue for the padded task count."""
+    with_gomp = [CaseSpec(spec="gomp", n_workers=4),
+                 CaseSpec(spec="xgomptb", n_workers=4)]
+    off_ladder_locked = [
+        CaseSpec(spec=RuntimeSpec("locked_global", "tree", "na_ws"),
+                 n_workers=4)]
+    without = [CaseSpec(spec="xgomptb", n_workers=4),
+               CaseSpec(spec="na_ws", n_workers=4)]
     t_pad = max(g.n_tasks for g in graphs)
     assert build_plan(graphs, with_gomp).gq_cap == t_pad + 2
+    assert build_plan(graphs, off_ladder_locked).gq_cap == t_pad + 2
     assert build_plan(graphs, without).gq_cap == 4
 
 
 def test_hetero_dlb_flag(graphs):
-    uniform = [CaseSpec(mode="na_ws", n_workers=8, n_victim=4, seed=s)
+    uniform = [CaseSpec(spec="na_ws", n_workers=8, n_victim=4, seed=s)
                for s in range(4)]
-    mixed = [CaseSpec(mode="na_ws", n_workers=8, n_victim=nv)
+    mixed = [CaseSpec(spec="na_ws", n_workers=8, n_victim=nv)
              for nv in (1, 4, 8)]
-    slb_mixed = [CaseSpec(mode="xgomptb", n_workers=8, n_victim=nv)
+    slb_mixed = [CaseSpec(spec="xgomptb", n_workers=8, n_victim=nv)
                  for nv in (1, 4, 8)]
+    # the flag keys on the balance axis, not the ladder: an off-ladder
+    # NA-WS point is just as straggler-prone
+    off_mixed = [CaseSpec(spec=RuntimeSpec("xqueue", "centralized_count",
+                                           "na_ws"),
+                          n_workers=8, n_victim=nv) for nv in (1, 4, 8)]
     assert not build_plan(graphs, uniform).chunks[0].hetero_dlb
     assert build_plan(graphs, mixed).chunks[0].hetero_dlb
-    # knob diversity is irrelevant outside the DLB modes
+    assert build_plan(graphs, off_mixed).chunks[0].hetero_dlb
+    # knob diversity is irrelevant under static balancing
     assert not build_plan(graphs, slb_mixed).chunks[0].hetero_dlb
 
 
-def test_grouping_sorts_by_mode_ladder(graphs):
+def test_grouping_sorts_by_axis_ids(graphs):
     specs = _mixed_specs(graphs)
     plan = build_plan(graphs, specs)
-    chunk_modes = [MODES.index(c.mode) for c in plan.chunks]
-    assert chunk_modes == sorted(chunk_modes)
+    chunk_keys = [(c.spec.queue_id, c.spec.barrier_id, c.spec.balance_id)
+                  for c in plan.chunks]
+    assert chunk_keys == sorted(chunk_keys)
 
 
 def test_plan_deterministic(graphs):
@@ -97,5 +115,5 @@ def test_plan_deterministic(graphs):
 
 
 def test_zone_size_floor():
-    s = CaseSpec(mode="na_ws", n_workers=2, n_zones=4)
+    s = CaseSpec(spec="na_ws", n_workers=2, n_zones=4)
     assert s.zone_size == 1

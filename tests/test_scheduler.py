@@ -6,6 +6,7 @@ import pytest
 
 from repro.core import make_params, run_schedule, taskgraph
 from repro.core.scheduler import MODES, SimConfig
+from repro.core.spec import MODE_SPECS, SLB_SPEC, dlb_spec
 
 CFG = SimConfig(n_workers=16, n_zones=4, max_steps=60_000)
 
@@ -22,7 +23,7 @@ def graphs():
 @pytest.mark.parametrize("mode", MODES)
 def test_all_modes_complete(graphs, mode):
     for g in graphs.values():
-        r = run_schedule(g, mode=mode, cfg=CFG)
+        r = run_schedule(g, spec=MODE_SPECS[mode], cfg=CFG)
         assert r.completed, (mode, g.name)
         # exactly-once execution
         assert r.counters["exec"] == g.n_tasks
@@ -38,14 +39,14 @@ def test_makespan_bounds(graphs):
     """Makespan is at least total-work/workers and at least the serial chain
     of any single task (causality via queue timestamps)."""
     g = graphs["fib"]
-    r = run_schedule(g, mode="xgomptb", cfg=CFG)
+    r = run_schedule(g, spec=SLB_SPEC, cfg=CFG)
     assert r.time_ns >= g.total_work_ns / CFG.n_workers
     assert r.time_ns >= int(g.dur.max())
 
 
 def test_gomp_slowest_for_fine_grained(graphs):
     g = graphs["fib"]
-    t = {m: run_schedule(g, mode=m, cfg=CFG).time_ns
+    t = {m: run_schedule(g, spec=MODE_SPECS[m], cfg=CFG).time_ns
          for m in ("gomp", "xgomp", "xgomptb")}
     assert t["gomp"] > 10 * t["xgomptb"], t
     assert t["xgomp"] > t["xgomptb"], t
@@ -54,7 +55,7 @@ def test_gomp_slowest_for_fine_grained(graphs):
 def test_dlb_modes_steal(graphs):
     g = graphs["uts"]
     for mode in ("na_rp", "na_ws"):
-        r = run_schedule(g, mode=mode,
+        r = run_schedule(g, spec=dlb_spec(mode),
                          params=make_params(n_victim=4, n_steal=8,
                                             t_interval=10, p_local=0.8),
                          cfg=CFG)
@@ -70,26 +71,26 @@ def test_single_creator_semantics(graphs):
     """align uses the `single` construct: all tasks created by worker 0, so
     non-self executions dominate and NA-RP has only one possible victim."""
     g = graphs["align"]
-    r = run_schedule(g, mode="xgomptb", cfg=CFG)
+    r = run_schedule(g, spec=SLB_SPEC, cfg=CFG)
     assert r.completed
     assert r.per_worker_exec.sum() == g.n_tasks
 
 
 def test_determinism(graphs):
     g = graphs["uts"]
-    a = run_schedule(g, mode="na_ws", seed=3, cfg=CFG)
-    b = run_schedule(g, mode="na_ws", seed=3, cfg=CFG)
+    a = run_schedule(g, spec=dlb_spec("na_ws"), seed=3, cfg=CFG)
+    b = run_schedule(g, spec=dlb_spec("na_ws"), seed=3, cfg=CFG)
     assert a.time_ns == b.time_ns
     assert a.counters == b.counters
 
 
 def test_p_local_steers_locality(graphs):
     g = graphs["uts"]
-    local = run_schedule(g, mode="na_ws",
+    local = run_schedule(g, spec=dlb_spec("na_ws"),
                          params=make_params(n_victim=4, n_steal=8,
                                             t_interval=10, p_local=1.0),
                          cfg=CFG)
-    remote = run_schedule(g, mode="na_ws",
+    remote = run_schedule(g, spec=dlb_spec("na_ws"),
                           params=make_params(n_victim=4, n_steal=8,
                                              t_interval=10, p_local=0.0),
                           cfg=CFG)

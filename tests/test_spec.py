@@ -1,0 +1,176 @@
+"""RuntimeSpec lattice + back-compat shim: the mode→spec mapping table,
+DeprecationWarnings for string ``mode=`` arguments at every public entry
+point, and the off-ladder combinations the ladder could not express."""
+
+import warnings
+
+import pytest
+
+from repro.core import taskgraph
+from repro.core.scheduler import MODES, SimConfig, run_schedule
+from repro.core.spec import (AXES, BALANCERS, BARRIERS, DLB_BALANCERS,
+                             LATTICE, MODE_SPECS, OFF_LADDER, QUEUES,
+                             RuntimeSpec, SLB_SPEC, dlb_spec, resolve_spec,
+                             spec_product)
+from repro.core.sweep import CaseSpec, run_grid
+
+CFG = SimConfig(n_workers=8, n_zones=2, max_steps=60_000)
+
+#: the mapping table the shim must honor (satellite acceptance): every
+#: legacy ladder rung names its lattice point explicitly
+MODE_TABLE = {
+    "gomp": ("locked_global", "centralized_count", "static_rr"),
+    "xgomp": ("xqueue", "centralized_count", "static_rr"),
+    "xgomptb": ("xqueue", "tree", "static_rr"),
+    "na_rp": ("xqueue", "tree", "na_rp"),
+    "na_ws": ("xqueue", "tree", "na_ws"),
+}
+
+
+def test_mode_to_spec_mapping_table():
+    assert tuple(MODE_TABLE) == MODES
+    for mode, axes in MODE_TABLE.items():
+        spec = RuntimeSpec.from_mode(mode)
+        assert spec.axes == axes, mode
+        assert spec is MODE_SPECS[mode]
+        # round trip: the on-ladder spec knows its legacy name
+        assert spec.mode == mode
+        assert spec.label == mode
+
+
+def test_lattice_shape_and_off_ladder():
+    assert len(LATTICE) == len(QUEUES) * len(BARRIERS) * len(BALANCERS) == 12
+    assert len(set(LATTICE)) == 12
+    assert set(MODE_SPECS.values()) | set(OFF_LADDER) == set(LATTICE)
+    assert len(OFF_LADDER) == 7
+    for spec in OFF_LADDER:
+        assert spec.mode is None
+        assert spec.label == spec.slug
+
+
+def test_slugs_unique_and_round_trip():
+    slugs = [s.slug for s in LATTICE]
+    assert len(set(slugs)) == len(slugs)
+    for s in LATTICE:
+        assert RuntimeSpec.from_slug(s.slug) == s
+        assert RuntimeSpec.coerce(s.slug) == s
+
+
+def test_axes_dict_and_helpers():
+    assert AXES == dict(queue=QUEUES, barrier=BARRIERS, balance=BALANCERS)
+    assert SLB_SPEC == MODE_SPECS["xgomptb"]
+    for b in DLB_BALANCERS:
+        assert dlb_spec(b) == MODE_SPECS[b]
+        assert dlb_spec(b).is_dlb
+    assert not SLB_SPEC.is_dlb
+    assert spec_product(QUEUES, BARRIERS, BALANCERS) == LATTICE
+
+
+def test_axis_values_match_run_py_registry():
+    """benchmarks/run.py spells the axis values out (to stay jax-free);
+    they must match the canonical definition."""
+    import importlib.util
+    import pathlib
+    path = (pathlib.Path(__file__).resolve().parent.parent
+            / "benchmarks" / "run.py")
+    mod_spec = importlib.util.spec_from_file_location("_bench_run", path)
+    bench_run = importlib.util.module_from_spec(mod_spec)
+    mod_spec.loader.exec_module(bench_run)
+    assert bench_run.AXIS_VALUES == AXES
+    # the --spec filter understands every axis value and finds the lattice
+    sel = bench_run.parse_spec_filter("queue=xqueue,barrier=tree,"
+                                      "balance=na_ws")
+    assert sel == dict(queue="xqueue", barrier="tree", balance="na_ws")
+    covered = [n for n, info in bench_run.SUITES.items()
+               if bench_run.spec_covers(info["axes"], sel)]
+    assert "ablation_lattice" in covered
+    assert "dlb_best" in covered
+    assert "bots_speedup" not in covered     # never runs na_ws
+    assert "roofline" not in covered         # no spec axes at all
+    off = bench_run.parse_spec_filter("queue=locked_global,balance=na_ws")
+    only_lattice = [n for n, info in bench_run.SUITES.items()
+                    if bench_run.spec_covers(info["axes"], off)]
+    assert only_lattice == ["ablation_lattice"]
+
+
+def test_invalid_axis_values_rejected():
+    with pytest.raises(AssertionError):
+        RuntimeSpec(queue="nope")
+    with pytest.raises(ValueError):
+        RuntimeSpec.from_mode("not_a_mode")
+    with pytest.raises(ValueError):
+        RuntimeSpec.from_slug("not-a-slug")
+
+
+def test_resolve_spec_conflict_and_default():
+    with pytest.raises(TypeError):
+        resolve_spec(RuntimeSpec(), "na_ws")
+    assert resolve_spec(None, None) == SLB_SPEC
+    marker = MODE_SPECS["gomp"]
+    assert resolve_spec(None, None, default=marker) == marker
+    # RuntimeSpec through the legacy slot resolves silently
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert resolve_spec(None, marker) == marker
+
+
+def _single_deprecation(record):
+    assert len(record) == 1, [str(w.message) for w in record]
+    assert issubclass(record[0].category, DeprecationWarning)
+    return str(record[0].message)
+
+
+def test_casespec_mode_string_warns_and_maps():
+    for mode, axes in MODE_TABLE.items():
+        with pytest.warns(DeprecationWarning) as rec:
+            s = CaseSpec(mode=mode)
+        _single_deprecation(rec)
+        assert s.spec.axes == axes
+        assert s.mode == mode
+    # canonical path stays silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        CaseSpec(spec=RuntimeSpec())
+    with pytest.raises(TypeError):
+        CaseSpec(spec=RuntimeSpec(), mode="na_ws")
+
+
+def test_run_schedule_mode_string_warns_and_matches_spec():
+    g = taskgraph.fib(6)
+    with pytest.warns(DeprecationWarning) as rec:
+        legacy = run_schedule(g, mode="xgomp", cfg=CFG)
+    msg = _single_deprecation(rec)
+    assert "xgomp" in msg and "RuntimeSpec" in msg
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        modern = run_schedule(g, spec=RuntimeSpec.from_mode("xgomp"),
+                              cfg=CFG)
+    assert legacy.time_ns == modern.time_ns
+    assert legacy.counters == modern.counters
+    assert legacy.spec == modern.spec == MODE_SPECS["xgomp"]
+
+
+def test_run_grid_modes_warns_and_keeps_mode_axis():
+    g = taskgraph.fib(6)
+    with pytest.warns(DeprecationWarning):
+        res = run_grid(g, modes=("xgomptb", "na_rp"), n_workers=(8,),
+                       cfg=CFG)
+    assert list(res.grid_axes)[:2] == ["app", "mode"]
+    assert res.grid_axes["mode"] == ("xgomptb", "na_rp")
+    assert res.completed.all()
+    with pytest.raises(TypeError):
+        run_grid(g, modes=("xgomptb",), queues=("xqueue",), cfg=CFG)
+
+
+def test_run_grid_spec_axes_silent():
+    g = taskgraph.fib(6)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        res = run_grid(g, queues=("xqueue",), barriers=BARRIERS,
+                       balancers=("static_rr",), n_workers=(8,), cfg=CFG)
+    assert list(res.grid_axes)[:4] == ["app", "queue", "barrier", "balance"]
+    assert res.grid_axes["barrier"] == BARRIERS
+    assert res.completed.all()
+    # the barrier flip alone separates xgomp from xgomptb physics
+    ms = res.makespans.reshape(2)
+    assert ms[0] != ms[1]

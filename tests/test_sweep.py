@@ -1,8 +1,9 @@
 """Experiment-service engine: a batched grid must be bitwise identical to
-serial per-configuration runs (and to run_schedule), across modes, worker
-counts, task-graph padding, and every executor — including the sharded
-one on a multi-device host (CI forces 8 CPU devices via
-``XLA_FLAGS=--xla_force_host_platform_device_count=8``)."""
+serial per-configuration runs (and to run_schedule), across runtime specs,
+worker counts, task-graph padding, and every executor — including the
+sharded one on a multi-device host (CI forces 8 CPU devices via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``) and including
+off-ladder lattice points the legacy mode API could not express."""
 
 import dataclasses
 
@@ -10,11 +11,12 @@ import pytest
 
 from repro.core import make_params, run_schedule, taskgraph
 from repro.core.scheduler import CTR_NAMES, SimConfig
+from repro.core.spec import OFF_LADDER, RuntimeSpec
 from repro.core.sweep import CaseSpec, run_cases, run_grid
 
 CFG = SimConfig(n_workers=16, n_zones=4, max_steps=60_000)
 
-MODES_TESTED = ("xgomptb", "na_ws")   # ≥2 modes (SLB + a DLB policy)
+SPECS_TESTED = ("xgomptb", "na_ws")   # ≥2 specs (SLB + a DLB policy)
 WORKERS_TESTED = (8, 16)              # ≥2 worker counts
 
 
@@ -26,10 +28,10 @@ def graphs():
 @pytest.fixture(scope="module")
 def specs(graphs):
     return [
-        CaseSpec(mode=m, n_workers=w, n_zones=4, n_victim=4, n_steal=8,
+        CaseSpec(spec=m, n_workers=w, n_zones=4, n_victim=4, n_steal=8,
                  t_interval=10, p_local=0.8, graph=gi)
         for gi in range(len(graphs))
-        for m in MODES_TESTED
+        for m in SPECS_TESTED
         for w in WORKERS_TESTED
     ]
 
@@ -49,10 +51,10 @@ def test_batch_completes(batched, graphs, specs):
 
 
 def test_vmap_matches_serial_per_config(batched, graphs, specs):
-    """Acceptance criterion: the batched run over ≥2 modes × ≥2 worker counts
-    (× 2 apps) is bitwise identical to running each configuration alone
-    through the same engine — even though the solo runs use different lane
-    paddings (their own max worker count)."""
+    """Acceptance criterion: the batched run over ≥2 specs × ≥2 worker
+    counts (× 2 apps) is bitwise identical to running each configuration
+    alone through the same engine — even though the solo runs use different
+    lane paddings (their own max worker count)."""
     for i, s in enumerate(specs):
         solo = run_cases(graphs, [s], cfg=CFG)
         assert int(solo.time_ns[0]) == int(batched.time_ns[i]), (i, s)
@@ -67,7 +69,7 @@ def test_engine_matches_run_schedule(batched, graphs, specs):
     (which uses unpadded graphs and its own host-side barrier accounting)."""
     for i, s in enumerate(specs):
         r = run_schedule(
-            graphs[s.graph], mode=s.mode,
+            graphs[s.graph], spec=s.spec,
             cfg=dataclasses.replace(CFG, n_workers=s.n_workers),
             params=make_params(s.n_victim, s.n_steal, s.t_interval,
                                s.p_local))
@@ -78,24 +80,26 @@ def test_engine_matches_run_schedule(batched, graphs, specs):
 
 
 def test_run_grid_structure(graphs):
-    res = run_grid(graphs[0], modes=("xgomptb", "na_rp"),
+    res = run_grid(graphs[0], balancers=("static_rr", "na_rp"),
                    n_workers=(8,), seeds=(0,), cfg=CFG)
     assert res.grid_axes is not None
     shape = tuple(len(v) for v in res.grid_axes.values())
     assert res.makespans.shape == shape
     assert res.counter("exec").shape == shape
     assert res.completed.all()
-    assert list(res.grid_axes["mode"]) == ["xgomptb", "na_rp"]
+    assert list(res.grid_axes["balance"]) == ["static_rr", "na_rp"]
     # rows carry the full configuration for emission
     row = res.row(1)
-    assert row["mode"] == "xgomptb" or row["mode"] == "na_rp"
+    assert row["balance"] in ("static_rr", "na_rp")
+    assert row["mode"] in ("xgomptb", "na_rp")   # legacy labels survive
+    assert row["queue"] == "xqueue" and row["barrier"] == "tree"
     assert row["counters"]["exec"] == graphs[0].n_tasks
 
 
 def test_gomp_padding_in_batch(graphs):
-    """A batch mixing gomp with xq modes sizes the global queue for the
-    padded task count; results still match solo runs."""
-    specs = [CaseSpec(mode=m, n_workers=8, n_zones=2, graph=1)
+    """A batch mixing the locked queue with xqueue specs sizes the global
+    queue for the padded task count; results still match solo runs."""
+    specs = [CaseSpec(spec=m, n_workers=8, n_zones=2, graph=1)
              for m in ("gomp", "xgomptb")]
     both = run_cases(graphs, specs, cfg=CFG)
     assert both.completed.all()
@@ -106,20 +110,23 @@ def test_gomp_padding_in_batch(graphs):
 
 def test_episode_arrays_parity():
     """The traced barrier-episode selector (for in-graph consumers) matches
-    the host-side episode functions the engine uses, bit for bit."""
+    the host-side episode functions the engine uses, bit for bit — keyed on
+    the barrier axis, for every lattice point."""
     import jax.numpy as jnp
 
     from repro.core import barrier
+    from repro.core.spec import LATTICE
 
     costs = CFG.costs
-    for mode_id in range(5):
+    for spec in LATTICE:
         for w in (1, 8, 16, 48, 64):
-            ep = barrier.episode_arrays(jnp.int32(mode_id), jnp.int32(w),
-                                        costs)
-            host = (barrier.centralized_episode(w, costs) if mode_id <= 1
+            ep = barrier.episode_arrays(jnp.int32(spec.barrier_id),
+                                        jnp.int32(w), costs)
+            host = (barrier.centralized_episode(w, costs)
+                    if spec.barrier == "centralized_count"
                     else barrier.tree_episode(w, costs))
-            assert int(ep.time_ns) == int(host.time_ns), (mode_id, w)
-            assert int(ep.atomic_ops) == int(host.atomic_ops), (mode_id, w)
+            assert int(ep.time_ns) == int(host.time_ns), (spec, w)
+            assert int(ep.atomic_ops) == int(host.atomic_ops), (spec, w)
 
 
 def test_strategies_agree(graphs, batched, specs):
@@ -157,15 +164,53 @@ def test_auto_strategy_matches_forced(graphs, batched, specs):
         assert (auto.counters[name] == batched.counters[name]).all(), name
 
 
+def test_off_ladder_combos_all_executors(graphs):
+    """Acceptance criterion: previously-inexpressible lattice points run
+    end-to-end through run_grid on all three executors with identical
+    results.  The four named combos cover both axes' off-ladder
+    directions: GOMP's locked queue under the tree barrier, locked queue +
+    NA-WS, and both DLB policies under the centralized atomic count."""
+    combos = [
+        RuntimeSpec("locked_global", "tree", "static_rr"),
+        RuntimeSpec("locked_global", "tree", "na_ws"),
+        RuntimeSpec("xqueue", "centralized_count", "na_rp"),
+        RuntimeSpec("xqueue", "centralized_count", "na_ws"),
+    ]
+    assert all(c in OFF_LADDER for c in combos)
+    results = {}
+    for strategy in ("serial", "batched", "sharded"):
+        res = run_grid(graphs[0], queues=("locked_global", "xqueue"),
+                       barriers=("centralized_count", "tree"),
+                       balancers=("static_rr", "na_rp", "na_ws"),
+                       n_workers=(8,), cfg=CFG, strategy=strategy)
+        assert res.completed.all(), strategy
+        assert list(res.grid_axes)[:4] == ["app", "queue", "barrier",
+                                           "balance"]
+        for c in combos:   # each named combo is really in the grid
+            assert any(s.spec == c for s in res.specs), (strategy, c)
+        results[strategy] = res
+    ref = results["batched"]
+    for strategy, res in results.items():
+        assert (res.time_ns == ref.time_ns).all(), strategy
+        for name in CTR_NAMES:
+            assert (res.counters[name] == ref.counters[name]).all(), \
+                (strategy, name)
+    # every lattice point executed each task exactly once
+    assert (ref.counters["exec"] == graphs[0].n_tasks).all()
+
+
 def test_run_grid_axis_labeling(graphs):
     """Every grid axis is labeled in declaration order, and makespans land
     at the grid position matching their spec's axis values."""
-    res = run_grid(graphs, modes=("xgomptb", "na_ws"), n_workers=(8, 16),
-                   seeds=(0, 1), cfg=CFG)
-    assert list(res.grid_axes) == ["app", "mode", "n_workers", "seed",
+    res = run_grid(graphs, balancers=("static_rr", "na_ws"),
+                   n_workers=(8, 16), seeds=(0, 1), cfg=CFG)
+    assert list(res.grid_axes) == ["app", "queue", "barrier", "balance",
+                                   "n_workers", "seed",
                                    "n_victim", "n_steal", "t_interval",
                                    "p_local"]
     assert res.grid_axes["app"] == tuple(g.name for g in graphs)
+    assert res.grid_axes["queue"] == ("xqueue",)
+    assert res.grid_axes["barrier"] == ("tree",)
     assert res.grid_axes["n_workers"] == (8, 16)
     shape = tuple(len(v) for v in res.grid_axes.values())
     assert res.makespans.shape == shape
@@ -173,15 +218,15 @@ def test_run_grid_axis_labeling(graphs):
     grid = res.makespans.reshape(len(graphs), 2, 2, 2)
     for i, s in enumerate(res.specs):
         gi = s.graph
-        mi = res.grid_axes["mode"].index(s.mode)
+        bi = res.grid_axes["balance"].index(s.spec.balance)
         wi = res.grid_axes["n_workers"].index(s.n_workers)
         si = res.grid_axes["seed"].index(s.seed)
-        assert grid[gi, mi, wi, si] == res.time_ns[i]
+        assert grid[gi, bi, wi, si] == res.time_ns[i]
 
 
 def test_counter_grid_matches_flat(graphs):
-    res = run_grid(graphs[0], modes=("xgomptb", "na_rp"), n_workers=(8,),
-                   cfg=CFG)
+    res = run_grid(graphs[0], balancers=("static_rr", "na_rp"),
+                   n_workers=(8,), cfg=CFG)
     shape = tuple(len(v) for v in res.grid_axes.values())
     for name in ("exec", "stolen", "atomic_ops"):
         g = res.counter(name)
@@ -195,6 +240,7 @@ def test_row_round_trips_specs(batched, graphs, specs):
         row = batched.row(i)
         assert row["app"] == graphs[s.graph].name
         assert row["mode"] == s.mode
+        assert (row["queue"], row["barrier"], row["balance"]) == s.spec.axes
         assert row["n_workers"] == s.n_workers
         assert row["seed"] == s.seed
         assert (row["n_victim"], row["n_steal"], row["t_interval"],

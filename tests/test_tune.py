@@ -8,8 +8,11 @@ import pytest
 from repro.core import taskgraph, tune
 from repro.core.plan import CaseSpec
 from repro.core.scheduler import SimConfig
+from repro.core.spec import RuntimeSpec, dlb_spec
 from repro.core.sweep import run_cases
 from repro.core.tune import LADDERS, TunedParams
+
+NA_WS = dlb_spec("na_ws")
 
 CFG = SimConfig(n_workers=8, n_zones=2, max_steps=60_000)
 
@@ -44,11 +47,11 @@ def test_tune_matches_or_beats_seeded_reference(graph, tmp_path):
     ref = TunedParams(n_victim=4, n_steal=8, t_interval=100, p_local=1.0)
     small = dict(n_victim=(1, 4), n_steal=(1, 8), t_interval=(10,),
                  p_local=(1.0,))
-    r = tune.tune_mode(graph, "na_ws", CFG, coarse=small, extra=(ref,),
+    r = tune.tune_spec(graph, NA_WS, CFG, coarse=small, extra=(ref,),
                        rounds=1, survivors=2, cache=cache)
     # the reference was evaluated, so the pick can only match or beat it
     ref_res = run_cases(graph, [CaseSpec(
-        mode="na_ws", n_workers=CFG.n_workers, n_zones=CFG.n_zones,
+        spec=NA_WS, n_workers=CFG.n_workers, n_zones=CFG.n_zones,
         n_victim=ref.n_victim, n_steal=ref.n_steal,
         t_interval=ref.t_interval, p_local=ref.p_local)],
         cfg=CFG, cache=cache)
@@ -57,7 +60,7 @@ def test_tune_matches_or_beats_seeded_reference(graph, tmp_path):
     # the winning point reproduces its reported makespan through the engine
     p = r["params"]
     win = run_cases(graph, [CaseSpec(
-        mode="na_ws", n_workers=CFG.n_workers, n_zones=CFG.n_zones,
+        spec=NA_WS, n_workers=CFG.n_workers, n_zones=CFG.n_zones,
         n_victim=p.n_victim, n_steal=p.n_steal, t_interval=p.t_interval,
         p_local=p.p_local)], cfg=CFG, cache=cache)
     assert int(win.time_ns[0]) == r["makespan_ns"]
@@ -67,34 +70,73 @@ def test_artifact_roundtrip(tmp_path):
     d = str(tmp_path)
     res = dict(params=TunedParams(1, 2, 30, 0.5), makespan_ns=1234,
                n_configs=10, n_sims=12, seeds=(0,))
-    path = tune.save_artifact("fib", {"na_ws": res}, CFG, smoke=True,
+    path = tune.save_artifact("fib", NA_WS, res, CFG, smoke=True,
                               slb_ns=2000, tuned_dir=d)
-    # per-scale slot: smoke and full artifacts never clobber each other
-    assert path == tune.artifact_path("fib", True, d)
-    assert path.endswith("smoke/fib.json")
-    rec = tune.load_tuned("fib", smoke=True, n_workers=CFG.n_workers,
-                          tuned_dir=d)
+    # per-(scale, spec) slot: smoke/full and different lattice points
+    # never clobber each other
+    assert path == tune.artifact_path("fib", NA_WS, True, d)
+    assert path.endswith("smoke/fib__xqueue-tree-na_ws.json")
+    rec = tune.load_tuned("fib", NA_WS, smoke=True,
+                          n_workers=CFG.n_workers, tuned_dir=d)
     assert rec is not None
-    assert rec["modes"]["na_ws"]["params"] == dict(
+    assert rec["params"] == dict(
         n_victim=1, n_steal=2, t_interval=30, p_local=0.5)
+    assert rec["spec"] == NA_WS.asdict()
     assert rec["slb_ns"] == 2000
-    # scale mismatches refuse to load (callers fall back to static tables)
-    assert tune.load_tuned("fib", smoke=False, tuned_dir=d) is None
-    assert tune.load_tuned("fib", smoke=True, n_workers=99, tuned_dir=d) \
+    # scale/spec mismatches refuse to load (callers fall back to static
+    # tables)
+    assert tune.load_tuned("fib", NA_WS, smoke=False, tuned_dir=d) is None
+    assert tune.load_tuned("fib", dlb_spec("na_rp"), smoke=True,
+                           tuned_dir=d) is None
+    assert tune.load_tuned(
+        "fib", RuntimeSpec("xqueue", "centralized_count", "na_ws"),
+        smoke=True, tuned_dir=d) is None
+    assert tune.load_tuned("fib", NA_WS, smoke=True, n_workers=99,
+                           tuned_dir=d) is None
+    assert tune.load_tuned("fib", NA_WS, smoke=True, n_zones=99,
+                           tuned_dir=d) is None
+    assert tune.load_tuned("fib", NA_WS, smoke=True, max_steps=1,
+                           tuned_dir=d) is None
+    assert tune.load_tuned("missing", NA_WS, smoke=True, tuned_dir=d) \
         is None
-    assert tune.load_tuned("fib", smoke=True, n_zones=99, tuned_dir=d) \
-        is None
-    assert tune.load_tuned("fib", smoke=True, max_steps=1, tuned_dir=d) \
-        is None
-    assert tune.load_tuned("missing", smoke=True, tuned_dir=d) is None
     # the full-cfg check also gates on the physics signature: capacities
     # and cost model, not just machine size
     import dataclasses
-    assert tune.load_tuned("fib", smoke=True, cfg=CFG, tuned_dir=d) \
-        is not None
+    assert tune.load_tuned("fib", NA_WS, smoke=True, cfg=CFG,
+                           tuned_dir=d) is not None
     other_physics = dataclasses.replace(CFG, stack_cap=CFG.stack_cap * 2)
-    assert tune.load_tuned("fib", smoke=True, cfg=other_physics,
+    assert tune.load_tuned("fib", NA_WS, smoke=True, cfg=other_physics,
                            tuned_dir=d) is None
+
+
+def test_tune_mode_shim_warns_and_matches(graph, tmp_path):
+    """The legacy mode-name entry point still answers (with a
+    DeprecationWarning) and agrees with tune_spec."""
+    from repro.core.cache import ResultCache
+    small = dict(n_victim=(1,), n_steal=(1, 8), t_interval=(10,),
+                 p_local=(1.0,))
+    cache = ResultCache(str(tmp_path))
+    with pytest.warns(DeprecationWarning):
+        legacy = tune.tune_mode(graph, "na_ws", CFG, coarse=small,
+                                rounds=0, cache=cache)
+    modern = tune.tune_spec(graph, NA_WS, CFG, coarse=small, rounds=0,
+                            cache=cache)
+    assert legacy["params"] == modern["params"]
+    assert legacy["makespan_ns"] == modern["makespan_ns"]
+
+
+def test_tune_off_ladder_spec(graph, tmp_path):
+    """The tuner accepts any DLB-balancer lattice point, including
+    off-ladder ones (NA-WS under the centralized count)."""
+    from repro.core.cache import ResultCache
+    off = RuntimeSpec("xqueue", "centralized_count", "na_ws")
+    small = dict(n_victim=(1,), n_steal=(1, 8), t_interval=(10,),
+                 p_local=(1.0,))
+    r = tune.tune_spec(graph, off, CFG, coarse=small, rounds=0,
+                       cache=ResultCache(str(tmp_path)))
+    assert r["makespan_ns"] > 0
+    with pytest.raises(AssertionError):
+        tune.tune_spec(graph, RuntimeSpec(), CFG)  # static_rr has no knobs
 
 
 def test_stale_code_version_refuses_to_load(tmp_path):
@@ -102,12 +144,13 @@ def test_stale_code_version_refuses_to_load(tmp_path):
     d = str(tmp_path)
     res = dict(params=TunedParams(), makespan_ns=1, n_configs=1, n_sims=1,
                seeds=(0,))
-    path = tune.save_artifact("fib", {"na_ws": res}, CFG, smoke=True,
+    path = tune.save_artifact("fib", NA_WS, res, CFG, smoke=True,
                               tuned_dir=d)
-    assert tune.load_tuned("fib", smoke=True, tuned_dir=d) is not None
+    assert tune.load_tuned("fib", NA_WS, smoke=True, tuned_dir=d) \
+        is not None
     with open(path) as f:
         rec = json.load(f)
     rec["code_version"] = "older-semantics"
     with open(path, "w") as f:
         json.dump(rec, f)
-    assert tune.load_tuned("fib", smoke=True, tuned_dir=d) is None
+    assert tune.load_tuned("fib", NA_WS, smoke=True, tuned_dir=d) is None
