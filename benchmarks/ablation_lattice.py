@@ -19,12 +19,10 @@ NA-WS under the centralized atomic count, ...).  This suite:
   ``experiments/bench/BENCH_sweep_smoke.json``).
 """
 
-import json
-import os
-
 import numpy as np
 
-from benchmarks.common import SIM, SMOKE, csv_row, emit, graph_for
+from benchmarks.common import SIM, SMOKE, csv_row, emit, graph_for, \
+    merge_bench_sweep
 from repro.core.spec import BALANCERS, BARRIERS, QUEUES, RuntimeSpec
 from repro.core.sweep import run_grid
 
@@ -36,11 +34,6 @@ KNOBS = dict(n_victim=(4,), n_steal=(8,), t_interval=(100,), p_local=(1.0,))
 
 #: executors the lattice must agree on bitwise ("batched" is the vmap path)
 EXECUTOR_STRATEGIES = ("serial", "batched", "sharded")
-
-BENCH_PATH = (os.path.join("experiments", "bench", "BENCH_sweep_smoke.json")
-              if SMOKE else
-              os.path.join(os.path.dirname(os.path.dirname(
-                  os.path.abspath(__file__))), "BENCH_sweep.json"))
 
 
 def _geomean(x: np.ndarray) -> float:
@@ -130,17 +123,7 @@ def run(cache=None):
               "bitwise-identical results"),
     )
 
-    # merge (don't clobber) the shared BENCH_sweep record
-    try:
-        with open(BENCH_PATH) as f:
-            bench = json.load(f)
-    except (OSError, ValueError):
-        bench = {}
-    bench["ablation_lattice"] = record
-    os.makedirs(os.path.dirname(BENCH_PATH) or ".", exist_ok=True)
-    with open(BENCH_PATH, "w") as f:
-        json.dump(bench, f, indent=1)
-        f.write("\n")
+    merge_bench_sweep({"ablation_lattice": record})
 
     q = attr["queue"]["xqueue_over_locked_global"]
     b = attr["barrier"]["tree_over_centralized_count"]

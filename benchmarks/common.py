@@ -58,5 +58,31 @@ def emit(rows, name):
         json.dump(rows, f, indent=1, default=str)
 
 
+#: the shared cross-suite benchmark record: repo root at full scale, a
+#: throwaway copy under experiments/bench in smoke mode (meaningless grids
+#: must never overwrite the committed numbers)
+BENCH_SWEEP_PATH = (
+    os.path.join(OUT_DIR, "BENCH_sweep_smoke.json") if SMOKE else
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 "BENCH_sweep.json"))
+
+
+def merge_bench_sweep(updates: dict) -> dict:
+    """Merge ``updates`` into BENCH_sweep.json without clobbering the
+    sections other suites own (sweep_bench / ablation_lattice /
+    step_backends all write through here).  Returns the merged record."""
+    try:
+        with open(BENCH_SWEEP_PATH) as f:
+            record = json.load(f)
+    except (OSError, ValueError):
+        record = {}
+    record.update(updates)
+    os.makedirs(os.path.dirname(BENCH_SWEEP_PATH) or ".", exist_ok=True)
+    with open(BENCH_SWEEP_PATH, "w") as f:
+        json.dump(record, f, indent=1)
+        f.write("\n")
+    return record
+
+
 def csv_row(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.2f},{derived}")

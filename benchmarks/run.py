@@ -10,8 +10,15 @@ RuntimeSpec ablation lattice.
     PYTHONPATH=src python -m benchmarks.run \\
         --spec queue=xqueue,barrier=tree,balance=na_ws    # only suites
                                                           # covering a spec
+    PYTHONPATH=src python -m benchmarks.run \\
+        --backend pallas <suite> ...                      # run on a step
+                                                          # backend (default
+                                                          # reference)
     PYTHONPATH=src python -m benchmarks.run cache stats   # result-cache info
     PYTHONPATH=src python -m benchmarks.run cache clear   # drop cached results
+    PYTHONPATH=src python -m benchmarks.run \\
+        cache clear --version runtime-spec-v1             # prune one stale
+                                                          # code-version only
 """
 
 import importlib
@@ -31,6 +38,10 @@ AXIS_VALUES = dict(
     barrier=("centralized_count", "tree"),
     balance=("static_rr", "na_rp", "na_ws"),
 )
+
+# step-backend names, spelled out for the same no-jax reason (keep in sync
+# with repro.core.backends.BACKENDS — test_backends asserts it)
+BACKEND_VALUES = ("reference", "pallas")
 
 _Q, _B, _L = AXIS_VALUES["queue"], AXIS_VALUES["barrier"], \
     AXIS_VALUES["balance"]
@@ -69,6 +80,11 @@ SUITES = {
     "sweep_bench": dict(
         desc="engine timing — serial vs batched vs warm-cache re-run",
         axes=dict(queue=("xqueue",), barrier=("tree",), balance=_L)),
+    "step_backends": dict(
+        desc="step-backend throughput — reference jnp vs pallas kernels "
+             "(bitwise asserted; BENCH_sweep.json)",
+        axes=dict(queue=("xqueue",), barrier=("tree",),
+                  balance=("static_rr", "na_ws"))),
     "tune": dict(
         desc="DLB autotuner — per-(app, spec) artifacts under "
              "experiments/tuned/ (not in the no-args run: it writes "
@@ -162,7 +178,21 @@ def _cache_cmd(args) -> None:
     if cmd == "stats":
         print(json.dumps(cache.stats(), indent=1))
     elif cmd == "clear":
-        print(f"removed {cache.clear()} entries from {cache.root}")
+        version = None
+        rest = args[1:]
+        if rest and rest[0] == "--version":
+            if len(rest) < 2:
+                raise SystemExit(
+                    "cache clear --version needs a tag (see the `versions` "
+                    "split of `cache stats`; `unversioned`/`unreadable` "
+                    "match unstamped/corrupt entries)")
+            version = rest[1]
+            rest = rest[2:]
+        if rest:
+            raise SystemExit(f"unknown cache clear argument(s) {rest}")
+        what = "entries" if version is None else f"{version!r} entries"
+        print(f"removed {cache.clear(version=version)} {what} "
+              f"from {cache.root}")
     else:
         raise SystemExit(f"unknown cache command {cmd!r}; use stats|clear")
 
@@ -183,6 +213,15 @@ def main() -> None:
                              "--spec queue=xqueue,barrier=tree,"
                              "balance=na_ws")
         spec_sel = parse_spec_filter(argv[i + 1])
+        argv = argv[:i] + argv[i + 2:]
+    if "--backend" in argv:
+        i = argv.index("--backend")
+        if i + 1 >= len(argv) or argv[i + 1] not in BACKEND_VALUES:
+            raise SystemExit(f"--backend needs one of {BACKEND_VALUES}")
+        # SimConfig.backend defaults to None, which resolves through this
+        # environment variable (repro.core.backends) — setting it here
+        # switches every suite in the run without touching their configs
+        os.environ["REPRO_STEP_BACKEND"] = argv[i + 1]
         argv = argv[:i] + argv[i + 2:]
     only = set(argv)
     unknown = only - set(SUITES)

@@ -1,0 +1,90 @@
+"""Step-backend throughput: reference jnp kernels vs Pallas kernels.
+
+Runs the same small spec × app grid through the experiment service once per
+registered step backend (see repro.core.backends), asserts the results are
+bitwise identical — the backends' core contract — and records per-backend
+step throughput (worker-scheduling-points per second, warm, post-compile)
+under the ``step_backends`` key of ``BENCH_sweep.json`` (smoke copies go to
+``experiments/bench/BENCH_sweep_smoke.json``).
+
+On this CPU container the pallas backend runs its kernels in interpret
+mode, so the number it posts is the *cost of the abstraction* today, not a
+win — the point of recording it is (a) pinning the bitwise contract in a
+benchmark artifact and (b) a baseline for the day the step kernels compile
+on a real accelerator.
+"""
+
+import time
+
+from benchmarks.common import SIM, SMOKE, csv_row, emit, graph_for, \
+    merge_bench_sweep
+from repro.core.backends import BACKENDS
+from repro.core.scheduler import CTR_NAMES
+from repro.core.spec import RuntimeSpec
+from repro.core.sweep import CaseSpec, run_cases
+
+APPS = ("fib",) if SMOKE else ("fib", "sort")
+
+#: one static and one DLB lattice point: covers both queue code paths the
+#: pallas kernels replace (round-robin push/pop and the WS-heavy traffic)
+SPECS = (RuntimeSpec(),                       # SLB: xqueue + tree + static
+         RuntimeSpec(balance="na_ws"))
+
+
+def _grid(graphs):
+    return [CaseSpec(spec=sp, n_workers=SIM.n_workers, n_zones=SIM.n_zones,
+                     t_interval=10, p_local=0.8, graph=gi)
+            for gi in range(len(graphs)) for sp in SPECS]
+
+
+def run():
+    graphs = [graph_for(a) for a in APPS]
+    specs = _grid(graphs)
+    results = {}
+    timing = {}
+    for name in sorted(BACKENDS):
+        # warm-up: pay compile outside the timed window (cache off — every
+        # backend must really execute, or the bitwise claim is vacuous)
+        run_cases(graphs, specs, cfg=SIM, cache=None, backend=name)
+        t0 = time.perf_counter()
+        res = run_cases(graphs, specs, cfg=SIM, cache=None, backend=name)
+        wall = time.perf_counter() - t0
+        results[name] = res
+        steps = int(res.steps.sum())
+        timing[name] = dict(
+            wall_s=round(wall, 3), steps=steps,
+            worker_steps_per_s=round(steps * SIM.n_workers / wall, 1))
+        csv_row(f"step_backends/{name}", wall * 1e6 / max(steps, 1),
+                f"{timing[name]['worker_steps_per_s']:.0f} worker-steps/s")
+
+    ref = results["reference"]
+    assert ref.completed.all()
+    for name, res in results.items():
+        assert res.completed.all(), name
+        assert (res.time_ns == ref.time_ns).all(), \
+            f"backend {name} diverged from reference on makespans"
+        assert (res.steps == ref.steps).all(), name
+        for c in CTR_NAMES:
+            assert (res.counters[c] == ref.counters[c]).all(), (name, c)
+
+    record = dict(
+        apps=list(APPS),
+        specs=[s.slug for s in SPECS],
+        n_workers=SIM.n_workers,
+        n_configs=len(specs),
+        backends=timing,
+        pallas_vs_reference=round(
+            timing["pallas"]["wall_s"] / timing["reference"]["wall_s"], 2),
+        bitwise_identical_across_backends=True,
+        note=("warm post-compile wall clock of the identical run_cases grid "
+              "per step backend; pallas runs interpret-mode kernels on "
+              "non-TPU hosts, so >1 ratios here price the abstraction, "
+              "they do not contradict the bitwise contract (asserted)"),
+    )
+    rows = [dict(backend=k, **v) for k, v in timing.items()]
+    emit(rows, "step_backends")
+    merge_bench_sweep({"step_backends": record})
+    print(f"# step_backends: {len(specs)} configs, "
+          + ", ".join(f"{k} {v['wall_s']}s" for k, v in timing.items())
+          + f", pallas/reference {record['pallas_vs_reference']}x wall")
+    return rows

@@ -27,22 +27,13 @@ Results land in BENCH_sweep.json at the repo root (schema documented in
 docs/BENCHMARKS.md).
 """
 
-import json
-import os
 import shutil
 import tempfile
 import time
 
 from benchmarks import param_sweep
-from benchmarks.common import SIM, SMOKE
+from benchmarks.common import SIM, SMOKE, merge_bench_sweep
 from repro.core.cache import ResultCache
-
-# smoke runs measure a meaningless tiny grid: keep them away from the
-# committed repo-root record of the real sweep
-BENCH_PATH = (os.path.join("experiments", "bench", "BENCH_sweep_smoke.json")
-              if SMOKE else
-              os.path.join(os.path.dirname(os.path.dirname(
-                  os.path.abspath(__file__))), "BENCH_sweep.json"))
 
 #: measured in-session on this container against the seed-era kernel
 #: (see module docstring); None in smoke mode where grids differ
@@ -124,19 +115,8 @@ def run():
               "(see benchmarks/sweep_bench.py docstring)."),
     )
     # keep sections other suites own (e.g. ablation_lattice's per-axis
-    # attribution): carry over every prior key this suite doesn't write
-    try:
-        with open(BENCH_PATH) as f:
-            prior = json.load(f)
-    except (OSError, ValueError):
-        prior = {}
-    for k, v in prior.items():
-        if k not in result:
-            result[k] = v
-    os.makedirs(os.path.dirname(BENCH_PATH) or ".", exist_ok=True)
-    with open(BENCH_PATH, "w") as f:
-        json.dump(result, f, indent=1)
-        f.write("\n")
+    # attribution): only this suite's keys are overwritten
+    merge_bench_sweep(result)
     print(f"# sweep_bench: {n_configs} configs, serial {serial_s:.1f}s, "
           f"cold {cold_s:.1f}s, warm {warm_s:.2f}s "
           f"(x{warm_speedup:.0f} warm, x{result['speedup']:.2f} vs serial)"

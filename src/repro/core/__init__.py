@@ -12,11 +12,13 @@ on-disk results) → ``executors`` (serial / vmap / sharded) → ``sweep``
 (the ``run_cases``/``run_grid`` entry points) → ``tune`` (the DLB-knob
 autotuner emitting per-(app, spec) ``experiments/tuned/`` artifacts)."""
 
-from repro.core import balance, barrier, cache, dlb, executors, messaging, \
-    plan, spec, sweep, taskgraph, tune, xqueue
+from repro.core import backends, balance, barrier, cache, dlb, executors, \
+    messaging, phases, plan, spec, state, sweep, taskgraph, tune, xqueue
+from repro.core.backends import BACKENDS, StepBackend, get_backend
 from repro.core.cache import CODE_VERSION, ResultCache, case_key, graph_digest
 from repro.core.costs import DEFAULT_COSTS, CostModel
 from repro.core.executors import EXECUTORS, Executor, select_executor
+from repro.core.phases import PHASES, StepOps
 from repro.core.plan import ChunkPlan, SweepPlan, build_plan
 from repro.core.scheduler import (MODES, GraphArrays, Params, SimConfig,
                                   SimResult, SweepCase, graph_arrays,
@@ -29,8 +31,10 @@ from repro.core.tune import (TunedParams, artifact_path, load_tuned,
                              save_artifact, tune_mode, tune_spec)
 
 __all__ = [
-    "balance", "barrier", "cache", "dlb", "executors", "messaging", "plan",
-    "spec", "sweep", "taskgraph", "tune", "xqueue",
+    "backends", "balance", "barrier", "cache", "dlb", "executors",
+    "messaging", "phases", "plan", "spec", "state", "sweep", "taskgraph",
+    "tune", "xqueue",
+    "StepBackend", "BACKENDS", "get_backend", "StepOps", "PHASES",
     "RuntimeSpec", "QUEUES", "BARRIERS", "BALANCERS", "AXES",
     "DLB_BALANCERS", "MODE_SPECS", "LATTICE", "OFF_LADDER", "spec_product",
     "DEFAULT_COSTS", "CostModel", "MODES", "Params", "SimConfig", "SimResult",

@@ -1,0 +1,132 @@
+"""Step backends: who implements the phase pipeline's inner kernels.
+
+A :class:`StepBackend` composes the phase functions of
+:mod:`repro.core.phases` into the per-scheduling-point transition, choosing
+the :class:`~repro.core.phases.StepOps` kernel set the phases run on:
+
+* ``reference`` — today's pure-jnp mask arithmetic (one-hot selects, no
+  scatters), the oracle every other backend is measured against.  Pinned
+  bitwise to the pre-decomposition results by ``tests/golden_modes.json``.
+* ``pallas``    — Pallas kernels for the hot queue traffic (the per-pair
+  SPSC push / pop-scan of :mod:`repro.core.xqueue` and the one-hot counter
+  bumps), following the :mod:`repro.kernels.ops` idiom: compiled on TPU,
+  ``interpret=True`` elsewhere, so the same backend runs in CI on CPU.
+
+Backends are **bitwise identical by contract** — same makespans, counters,
+step counts on every lattice point and executor (tests/test_backends.py
+asserts it per phase and end-to-end).  That contract is why the result
+cache's keys deliberately exclude the backend: a cache entry written under
+one backend is a valid hit under any other.
+
+Selection threads through :class:`~repro.core.state.SimConfig.backend`
+(``None`` → the ``REPRO_STEP_BACKEND`` environment variable → ``reference``;
+resolved once at the public entry points so jit caches key on the concrete
+name), ``sweep.run_cases(backend=…)``, and ``benchmarks/run.py --backend``.
+"""
+
+from __future__ import annotations
+
+import abc
+import os
+
+import jax.numpy as jnp
+
+from repro.core import phases
+from repro.core.costs import CostModel
+from repro.core.phases import REFERENCE_OPS, StepOps
+from repro.core.state import GraphArrays, SweepCase
+
+#: environment fallback for SimConfig.backend=None (benchmarks/run.py
+#: --backend sets it process-wide before jax initializes)
+ENV_VAR = "REPRO_STEP_BACKEND"
+
+
+class StepBackend(abc.ABC):
+    """One implementation of the step body.  Stateless; see BACKENDS."""
+
+    name: str = "?"
+
+    @abc.abstractmethod
+    def step_ops(self) -> StepOps:
+        """The kernel set the phase pipeline runs on."""
+
+    def build_step(self, W: int, S: int, costs: CostModel, g: GraphArrays,
+                   case: SweepCase, max_steps: int):
+        """Compose the phase pipeline into ``step(st) -> st``.
+
+        ``W``/``S``/``max_steps`` are static; everything
+        configuration-dependent lives in the traced ``case``, and all
+        spec-axis branching inside the phases is mask arithmetic — no
+        Python control flow — so the returned ``step`` vmaps over a batch
+        of cases.
+
+        Every phase is additionally gated on ``running`` (the run loop's
+        own termination predicate): once a simulation finishes, its step is
+        a strict no-op.  That lets the batched engine drive a plain
+        ``while any(running)`` loop over vmapped steps without per-element
+        freeze/select machinery — finished batch elements simply stop
+        changing.
+        """
+        del W, S  # fixed by the state shapes the phases read
+        ops = self.step_ops()
+
+        def step(st):
+            running = (st.n_done < g.n_tasks) & (st.step_i < max_steps) \
+                & ~st.overflow
+            st = phases.adopt_phase(st, running, case=case, costs=costs,
+                                    ops=ops)
+            st = phases.spawn_phase(st, running, g=g, case=case, costs=costs,
+                                    ops=ops)
+            st, task, ts, found = phases.dequeue_phase(
+                st, running, case=case, costs=costs, ops=ops)
+            st = phases.thief_phase(st, found, running, case=case,
+                                    costs=costs, ops=ops)
+            st = phases.victim_phase(st, found, case=case, costs=costs,
+                                     ops=ops)
+            st = phases.exec_phase(st, task, ts, found, g=g, case=case,
+                                   costs=costs, ops=ops)
+            return st._replace(step_i=st.step_i + running.astype(jnp.int32))
+
+        return step
+
+
+class ReferenceBackend(StepBackend):
+    """Pure-jnp kernels — the bitwise oracle (golden-pinned)."""
+
+    name = "reference"
+
+    def step_ops(self) -> StepOps:
+        return REFERENCE_OPS
+
+
+class PallasBackend(StepBackend):
+    """Pallas kernels for the hot queue phases (interpret mode off-TPU).
+
+    The kernel set is imported lazily so merely listing backends never pulls
+    in pallas machinery; see :mod:`repro.kernels.sched_queue`.
+    """
+
+    name = "pallas"
+
+    def step_ops(self) -> StepOps:
+        from repro.kernels import sched_queue
+        return sched_queue.pallas_ops()
+
+
+BACKENDS = {b.name: b for b in (ReferenceBackend(), PallasBackend())}
+
+
+def resolve_name(name: str | None) -> str:
+    """Normalize ``SimConfig.backend``: ``None`` → ``$REPRO_STEP_BACKEND`` →
+    ``reference``.  Resolved at the public entry points (run_schedule /
+    run_cases), never inside jitted code, so compiled-function caches key on
+    the concrete backend name."""
+    if name is None:
+        name = os.environ.get(ENV_VAR) or "reference"
+    assert name in BACKENDS, \
+        f"unknown step backend {name!r}; available: {sorted(BACKENDS)}"
+    return name
+
+
+def get_backend(name: str | None = None) -> StepBackend:
+    return BACKENDS[resolve_name(name)]

@@ -137,6 +137,18 @@ class ResultCache:
                 pass
             raise
 
+    @staticmethod
+    def _entry_version(path: str) -> str:
+        """The code-version tag an entry was stamped with — or the
+        sentinels ``unversioned`` (pre-stamp record) / ``unreadable``
+        (no longer parses).  Shared by ``stats`` and ``clear --version``
+        so the reported populations are exactly the prunable ones."""
+        try:
+            with open(path) as f:
+                return json.load(f).get("code_version", "unversioned")
+        except (OSError, ValueError):
+            return "unreadable"
+
     def _entries(self):
         if not os.path.isdir(self.root):
             return
@@ -161,21 +173,27 @@ class ResultCache:
                 size += os.path.getsize(path)
             except OSError:
                 pass
-            try:
-                with open(path) as f:
-                    v = json.load(f).get("code_version", "unversioned")
-            except (OSError, ValueError):
-                v = "unreadable"
+            v = self._entry_version(path)
             versions[v] = versions.get(v, 0) + 1
         return dict(root=self.root, entries=n, bytes=size,
                     session_hits=self.hits, session_misses=self.misses,
                     code_version=CODE_VERSION, versions=versions,
                     stale_entries=n - versions.get(CODE_VERSION, 0))
 
-    def clear(self) -> int:
-        """Delete every entry; returns how many were removed."""
+    def clear(self, version: Optional[str] = None) -> int:
+        """Delete entries; returns how many were removed.
+
+        ``version=None`` drops everything.  Passing a code-version tag
+        deletes only entries *stamped* with that version — the way to prune
+        the stale pre-bump population ``stats`` reports without touching
+        current results.  Two sentinel tags match entries that carry no
+        usable stamp: ``"unversioned"`` (valid records written before
+        stamping existed) and ``"unreadable"`` (files that no longer parse).
+        """
         n = 0
         for path in list(self._entries()):
+            if version is not None and self._entry_version(path) != version:
+                continue
             try:
                 os.unlink(path)
                 n += 1

@@ -3,7 +3,10 @@
 Every executor consumes one :class:`~repro.core.plan.ChunkPlan` against the
 shared :class:`ExecContext` (padded graphs + padded ``SimConfig``) and
 returns the same per-case raw arrays — bitwise identical across executors,
-which is the whole point (tests/test_sweep.py asserts it):
+which is the whole point (tests/test_sweep.py asserts it).  The step body
+itself comes from the backend named by ``cfg.backend`` (resolved by
+``run_cases``; see repro.core.backends) — orthogonal to the executor axis,
+and also bitwise-neutral by contract:
 
 * ``serial``  — one jitted dispatch per case; all cases share one compiled
   shape thanks to the plan's common paddings.  Wins for heterogeneous
@@ -42,10 +45,11 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro.core import backends as backends_mod
 from repro.core.plan import CaseSpec, ChunkPlan
 from repro.core.scheduler import (NC, GraphArrays, SimConfig, SweepCase,
-                                  _build_step, _init_state, _run_cached,
-                                  make_case, make_params)
+                                  _run_cached, init_state, make_case,
+                                  make_params)
 from repro.core.taskgraph import TaskGraph
 
 
@@ -83,13 +87,15 @@ def _batch_body(cfg: SimConfig, gq_cap: int, gb, cb: SweepCase):
     select over the entire simulator state every iteration.  Returns only
     the arrays the host needs (clock, counters, termination info)."""
 
+    backend = backends_mod.get_backend(cfg.backend)
+
     def init_one(g, case):
-        return _init_state(g, cfg.n_workers, cfg.stack_cap, cfg.queue_cap,
-                           gq_cap, case.seed)
+        return init_state(g, cfg.n_workers, cfg.stack_cap, cfg.queue_cap,
+                          gq_cap, case.seed)
 
     def step_one(g, case, st):
-        return _build_step(cfg.n_workers, cfg.stack_cap, cfg.costs, g, case,
-                           cfg.max_steps)(st)
+        return backend.build_step(cfg.n_workers, cfg.stack_cap, cfg.costs,
+                                  g, case, cfg.max_steps)(st)
 
     step_b = jax.vmap(step_one)
 

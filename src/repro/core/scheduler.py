@@ -7,6 +7,20 @@ clocks charged by the cost model.  Makespan is causal through queue
 timestamps: popping a task advances the consumer clock to at least the
 producer-side timestamp.
 
+The simulator is three explicit layers (this module is the thin run loop on
+top, kept as the historical import surface):
+
+* :mod:`repro.core.state`    — SimState / SweepCase / GraphArrays pytrees,
+  SimConfig, and the initializers (every name is re-exported here).
+* :mod:`repro.core.phases`   — each per-step phase (push, dequeue, thief,
+  victim, execute) as a pure, individually-jittable ``(state, case, …) ->
+  state`` function with a documented read/write footprint.
+* :mod:`repro.core.backends` — ``StepBackend`` composes the phases into the
+  step body over a pluggable kernel set: ``reference`` (pure jnp, pinned
+  bitwise to tests/golden_modes.json) or ``pallas`` (Pallas kernels for the
+  hot queue phases, interpret mode off-TPU) — bitwise identical by
+  contract.
+
 A runtime configuration is a point on the queue × barrier × balance lattice
 (:class:`repro.core.spec.RuntimeSpec`):
 
@@ -43,162 +57,40 @@ carried in ``SweepCase``.  Axis selection is pure mask arithmetic
 of cases (see sweep.py).  Worker counts below the padded width ``W`` leave
 the extra lanes provably inert: padded workers never hold stack entries, are
 masked out of every dequeue / thief mask, and all round-robin / victim
-arithmetic is modulo the traced ``n_workers``.
+arithmetic is modulo the traced ``n_workers`` (tests/test_phases.py proves
+lane inertness for every individual phase).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dlb, messaging, xqueue
+from repro.core import backends as backends_mod
 from repro.core import barrier as barrier_mod
-from repro.core.costs import DEFAULT_COSTS, CostModel
 from repro.core.spec import MODE_SPECS, RuntimeSpec, resolve_spec
+from repro.core.state import (CTR, CTR_NAMES, K_SPAWN, NC, NV_CAP,  # noqa: F401
+                              WS_CAP, GraphArrays, Params, SimConfig,
+                              SimState, SweepCase, graph_arrays, init_state,
+                              make_case, make_params)
 from repro.core.taskgraph import TaskGraph
 
 #: legacy five-rung ladder names (see repro.core.spec for the lattice)
 MODES = tuple(MODE_SPECS)
 MODE_ID = {m: i for i, m in enumerate(MODES)}
 
-# counters (paper §V)
-CTR_NAMES = (
-    "exec", "self", "local", "remote",            # task locality at execution
-    "static_push", "imm_exec",                     # push outcomes
-    "req_sent", "req_handled", "req_has_steal",    # messaging protocol
-    "stolen", "stolen_local", "stolen_remote",     # migrated tasks (WS + RP)
-    "src_empty", "tgt_full",                       # failed steals
-    "atomic_ops", "busy_ns",
-)
-NC = len(CTR_NAMES)
-CTR = {n: i for i, n in enumerate(CTR_NAMES)}
-
-K_SPAWN = 2     # pushes per worker per scheduling point
-WS_CAP = 32     # static bound on Alg. 4's per-round transfer loop
-NV_CAP = 24     # static bound on requests per thief retry (paper max N_victim)
+# historical aliases for the pre-decomposition private API (the state and
+# step-builder moved to state.py / backends.py)
+_init_state = init_state
 
 
-class Params(NamedTuple):
-    """Dynamic DLB configuration (§IV-E) — sweepable without recompilation."""
-    n_victim: jax.Array
-    n_steal: jax.Array
-    t_interval: jax.Array  # in scheduling points
-    p_local: jax.Array
-
-
-def make_params(n_victim=4, n_steal=8, t_interval=100, p_local=1.0) -> Params:
-    return Params(jnp.int32(n_victim), jnp.int32(n_steal),
-                  jnp.int32(t_interval), jnp.float32(p_local))
-
-
-class SweepCase(NamedTuple):
-    """One fully-traced simulator configuration.
-
-    Every field is a scalar array, so a batch of cases is just this pytree
-    with a leading axis — ``jax.vmap`` over it runs a whole spec × workers ×
-    seeds × DLB-knob grid in one compiled call.  The three axis ids carry a
-    :class:`~repro.core.spec.RuntimeSpec` point-by-point (queue_id indexes
-    ``spec.QUEUES``, etc.), so one compiled call can mix lattice points.
-    """
-    queue_id: jax.Array    # int32 index into spec.QUEUES
-    barrier_id: jax.Array  # int32 index into spec.BARRIERS
-    balance_id: jax.Array  # int32 index into spec.BALANCERS
-    n_workers: jax.Array   # int32 active workers (≤ the padded static width)
-    zone_size: jax.Array   # int32 workers per NUMA zone
-    seed: jax.Array        # int32 PRNG seed
-    mem_bound: jax.Array   # float32 memory-bound fraction of task runtime
-    params: Params
-
-
-def make_case(spec: RuntimeSpec | str | int, n_workers: int, zone_size: int,
-              seed: int = 0, mem_bound: float = 0.0,
-              params: Params | None = None) -> SweepCase:
-    """Lift a runtime configuration to traced scalars.
-
-    ``spec`` accepts a :class:`RuntimeSpec`, a legacy mode name or spec
-    slug, or a legacy integer mode id (silently — the deprecation for mode
-    strings fires at the public entry points, not in this plumbing).
-    """
-    if isinstance(spec, int):
-        spec = MODE_SPECS[MODES[spec]]
-    else:
-        spec = RuntimeSpec.coerce(spec)
-    return SweepCase(
-        queue_id=jnp.int32(spec.queue_id),
-        barrier_id=jnp.int32(spec.barrier_id),
-        balance_id=jnp.int32(spec.balance_id),
-        n_workers=jnp.int32(n_workers),
-        zone_size=jnp.int32(zone_size), seed=jnp.int32(seed),
-        mem_bound=jnp.float32(mem_bound),
-        params=params if params is not None else make_params())
-
-
-class GraphArrays(NamedTuple):
-    """Device-side task graph (see taskgraph.py for the encoding).
-
-    ``n_tasks`` is traced so graphs padded to a common length batch together:
-    padding tasks are never spawned, never notified, and termination compares
-    ``n_done`` against the *true* task count.
-    """
-    dur: jax.Array
-    first_child: jax.Array
-    n_children: jax.Array
-    notify: jax.Array
-    join_dep: jax.Array
-    n_tasks: jax.Array    # int32 scalar — true (unpadded) task count
-
-
-def graph_arrays(graph: TaskGraph, pad_to: int | None = None) -> GraphArrays:
-    """Lift a host TaskGraph to device arrays, optionally padded to a common
-    length with inert tasks (dur 0, no children, no notify target)."""
-    T = graph.n_tasks
-    P = max(pad_to or T, T)
-
-    def pad(a, fill):
-        a = np.asarray(a, np.int32)
-        if P == T:
-            return jnp.asarray(a)
-        out = np.full(P, fill, np.int32)
-        out[:T] = a
-        return jnp.asarray(out)
-
-    return GraphArrays(
-        dur=pad(graph.dur, 0), first_child=pad(graph.first_child, 0),
-        n_children=pad(graph.n_children, 0), notify=pad(graph.notify, -1),
-        join_dep=pad(graph.join_dep, 0), n_tasks=jnp.int32(T))
-
-
-class SimState(NamedTuple):
-    xq: xqueue.XQ
-    cells: messaging.Cells
-    rp: dlb.RPState
-    # GOMP-mode single global queue
-    g_buf: jax.Array
-    g_ts: jax.Array
-    g_head: jax.Array
-    g_tail: jax.Array
-    # per-worker spawn stacks of contiguous task-id ranges
-    s_task: jax.Array   # (W, S) next task id of the range
-    s_cnt: jax.Array    # (W, S) remaining count
-    s_top: jax.Array    # (W,)
-    # task-graph dynamic state
-    join_cnt: jax.Array
-    done: jax.Array
-    creator: jax.Array
-    # worker state
-    clock: jax.Array
-    rr: jax.Array
-    deq_rr: jax.Array
-    idle: jax.Array
-    rng: jax.Array
-    ctr: jax.Array      # (W, NC) int32
-    n_done: jax.Array
-    overflow: jax.Array
-    step_i: jax.Array
+def _build_step(W: int, S: int, costs, g: GraphArrays, case: SweepCase,
+                max_steps: int, backend: str | None = "reference"):
+    """Legacy shim: the step body now composes in repro.core.backends."""
+    return backends_mod.get_backend(backend).build_step(
+        W, S, costs, g, case, max_steps)
 
 
 @dataclasses.dataclass
@@ -220,423 +112,16 @@ class SimResult:
         return self.counters["exec"] / max(self.time_ns, 1) * 1e9
 
 
-def _comm(costs: CostModel, a, b, zsz):
-    same = a == b
-    same_zone = (a // zsz) == (b // zsz)
-    return jnp.where(same, costs.c_cache,
-                     jnp.where(same_zone, costs.c_zone,
-                               costs.c_numa)).astype(jnp.int32)
-
-
-def _bump(ctr, name, mask_or_val):
-    v = mask_or_val.astype(jnp.int32) if mask_or_val.dtype == bool \
-        else mask_or_val
-    return ctr.at[:, CTR[name]].add(v)
-
-
-def _stack_push(st: SimState, mask, task0, cnt) -> SimState:
-    W, S = st.s_task.shape
-    idx = jnp.where(mask & (st.s_top < S), st.s_top, S)
-    # one entry per worker row: one-hot select, not a scatter (idx == S
-    # matches no column, preserving the drop semantics)
-    one = jnp.arange(S, dtype=jnp.int32)[None, :] == idx[:, None]
-    s_task = jnp.where(one, task0[:, None], st.s_task)
-    s_cnt = jnp.where(one, cnt[:, None], st.s_cnt)
-    s_top = st.s_top + (mask & (st.s_top < S)).astype(jnp.int32)
-    overflow = st.overflow | jnp.any(mask & (st.s_top >= S))
-    return st._replace(s_task=s_task, s_cnt=s_cnt, s_top=s_top,
-                       overflow=overflow)
-
-
-def _finish(st: SimState, ftask, g: GraphArrays, W: int) -> SimState:
-    """Completion bookkeeping for per-worker finished tasks (-1 = none):
-    spawn-range entries go on the finisher's own stack; the notify target's
-    dependency count drops; a join reaching zero is claimed by exactly one
-    finisher (scatter-min tie-break) who 'creates' it."""
-    T = g.dur.shape[0]
-    me = jnp.arange(W, dtype=jnp.int32)
-    active = ftask >= 0
-    safe = jnp.where(active, ftask, 0)
-    done = st.done.at[jnp.where(active, ftask, T)].set(True, mode="drop")
-    n_done = st.n_done + jnp.sum(active, dtype=jnp.int32)
-    st = st._replace(done=done, n_done=n_done)
-    # spawned children: one O(1) range entry
-    nch = jnp.where(active, g.n_children[safe], 0)
-    st = _stack_push(st, nch > 0, g.first_child[safe], nch)
-    # notify join
-    j = jnp.where(active, g.notify[safe], -1)
-    jsafe = jnp.where(j >= 0, j, T)
-    join_cnt = st.join_cnt.at[jsafe].add(-1, mode="drop")
-    newly = (j >= 0) & (join_cnt[jnp.where(j >= 0, j, 0)] == 0)
-    st = st._replace(join_cnt=join_cnt)
-
-    # a join becomes ready only occasionally; the (T,)-sized claim
-    # machinery runs behind a one-shot while so other steps skip it
-    def cond(carry):
-        return carry[0] & jnp.any(newly)
-
-    def body(carry):
-        _, st_c = carry
-        # the lowest-id finisher among those completing the same join claims
-        # it — a (W, W) pairwise tie-break, equivalent to the scatter-min
-        # over task ids but without materializing a (T,)-sized array
-        same = newly[:, None] & newly[None, :] & (j[:, None] == j[None, :])
-        mine = newly & (jnp.argmax(same, axis=1).astype(jnp.int32) == me)
-        creator = st_c.creator.at[jnp.where(mine, j, T)].set(me, mode="drop")
-        st_c = _stack_push(st_c._replace(creator=creator), mine, j,
-                           jnp.ones(W, jnp.int32))
-        return jnp.asarray(False), st_c
-
-    _, st = jax.lax.while_loop(cond, body, (jnp.asarray(True), st))
-    return st
-
-
-def _atomic_charge(st: SimState, mask, costs: CostModel) -> SimState:
-    """Contended RMWs on one shared cache line (XGOMP's global task count):
-    simultaneous writers serialize; the k-th pays k hand-offs."""
-    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1
-    cost = jnp.where(mask, costs.c_atomic + rank * costs.c_contend, 0)
-    return st._replace(clock=st.clock + cost,
-                       ctr=_bump(st.ctr, "atomic_ops", mask))
-
-
-def _build_step(W: int, S: int, costs: CostModel, g: GraphArrays,
-                case: SweepCase, max_steps: int):
-    """The per-scheduling-point transition.  ``W``/``S``/``max_steps`` are
-    static; everything configuration-dependent lives in the traced ``case``,
-    and all spec-axis branching is mask arithmetic — no Python control flow —
-    so the returned ``step`` vmaps over a batch of cases.
-
-    Every phase is additionally gated on ``running`` (the loop's own
-    termination predicate): once a simulation finishes, its step is a strict
-    no-op.  That lets the batched engine drive a plain ``while any(running)``
-    loop over vmapped steps without per-element freeze/select machinery —
-    finished batch elements simply stop changing."""
-    me = jnp.arange(W, dtype=jnp.int32)
-    T = g.dur.shape[0]
-    n_w = case.n_workers
-    zsz = case.zone_size
-    params = case.params
-    active_w = me < n_w
-
-    # per-axis feature masks (traced scalars; see repro.core.spec for ids)
-    is_locked = case.queue_id == 0        # locked_global queue lane
-    uses_xq = ~is_locked                  # xqueue lane
-    # the centralized barrier's global task count is a separate contended
-    # atomic only for xqueue runtimes — under the locked_global queue the
-    # count update rides the already-held task lock (legacy gomp behavior)
-    pays_count = uses_xq & (case.barrier_id == 0)
-    is_narp = case.balance_id == 1
-    is_naws = case.balance_id == 2
-    is_dlb = is_narp | is_naws
-
-    def zone(x):
-        return x // zsz
-
-    # ---------------- phase A: push spawned tasks ----------------
-    def spawn_phase(st: SimState, running) -> SimState:
-        for _ in range(K_SPAWN):
-            active = (st.s_top > 0) & running
-            topi = jnp.maximum(st.s_top - 1, 0)
-            etask = st.s_task[me, topi]
-            ecnt = st.s_cnt[me, topi]
-            task = jnp.where(active, etask, 0)
-
-            # --- GOMP lane: serialized global-lock push (lock + pq + malloc)
-            act_g = active & is_locked
-            rank_g = jnp.cumsum(act_g.astype(jnp.int32)) - 1
-            cost_g = jnp.where(
-                act_g,
-                costs.c_atomic + costs.c_pq_op + costs.c_alloc
-                + rank_g * costs.c_lock, 0)
-
-            # --- XQueue lane (all other modes), with NA-RP redirection
-            act_x = active & uses_xq
-            use_rp = act_x & is_narp & (st.rp.tgt >= 0) & (st.rp.left > 0)
-            tgt = jnp.where(use_rp, jnp.maximum(st.rp.tgt, 0), st.rr % n_w)
-            cost_x = jnp.where(
-                act_x,
-                costs.c_alloc + costs.c_slot + _comm(costs, me, tgt, zsz), 0)
-
-            clock = st.clock + cost_g + cost_x
-            gq = st.g_buf.shape[0]
-            gidx = jnp.where(act_g, (st.g_tail + rank_g) % gq, gq)
-            g_buf = st.g_buf.at[gidx].set(task, mode="drop")
-            g_ts = st.g_ts.at[gidx].set(clock, mode="drop")
-            g_tail = st.g_tail + jnp.sum(act_g, dtype=jnp.int32)
-
-            xq, ok = xqueue.push(st.xq, me, tgt, task, clock, act_x)
-            pushed_x = ok
-            imm = act_x & ~ok
-            rr = st.rr + (act_x & ~use_rp).astype(jnp.int32)
-            creator = st.creator.at[
-                jnp.where(active, task, T)].set(me, mode="drop")
-
-            ctr = _bump(st.ctr, "static_push", act_g | (pushed_x & ~use_rp))
-            ctr = _bump(ctr, "atomic_ops", act_g)
-            ctr = _bump(ctr, "stolen", pushed_x & use_rp)  # redirections
-            ctr = _bump(ctr, "stolen_local",
-                        pushed_x & use_rp & (zone(me) == zone(tgt)))
-            ctr = _bump(ctr, "stolen_remote",
-                        pushed_x & use_rp & (zone(me) != zone(tgt)))
-            # Alg. 3: stop on quota exhausted or thief queue full
-            left = st.rp.left - (pushed_x & use_rp).astype(jnp.int32)
-            drop = (use_rp & ~ok) | (left <= 0)
-            rp = dlb.RPState(tgt=jnp.where(drop, -1, st.rp.tgt),
-                             left=jnp.where(drop, 0, left))
-            ctr = _bump(ctr, "tgt_full", use_rp & ~ok)
-            st = st._replace(xq=xq, g_buf=g_buf, g_ts=g_ts, g_tail=g_tail,
-                             clock=clock, rr=rr, rp=rp, ctr=ctr,
-                             creator=creator)
-            # atomic global count: task created (XGOMP only)
-            st = _atomic_charge(st, active & pays_count, costs)
-
-            # consume one task from the range entry (one-hot row update)
-            sidx = jnp.where(active, topi, S)
-            one = jnp.arange(S, dtype=jnp.int32)[None, :] == sidx[:, None]
-            s_task = jnp.where(one, (etask + 1)[:, None], st.s_task)
-            s_cnt = jnp.where(one, (ecnt - 1)[:, None], st.s_cnt)
-            s_top = jnp.where(active & (ecnt - 1 == 0), st.s_top - 1,
-                              st.s_top)
-            st = st._replace(s_task=s_task, s_cnt=s_cnt, s_top=s_top)
-
-            # execute-immediately rule for full target queues (paper §II-B):
-            # queues rarely fill, so the whole block is a one-shot while
-            def imm_cond(carry):
-                return carry[0] & jnp.any(imm)
-
-            def imm_body(carry):
-                _, st_c = carry
-                dur_t = jnp.where(imm, g.dur[task], 0)
-                ctr = _bump(st_c.ctr, "imm_exec", imm)
-                ctr = _bump(ctr, "exec", imm)
-                ctr = _bump(ctr, "self", imm)
-                ctr = _bump(ctr, "busy_ns", dur_t)
-                st_c = st_c._replace(clock=st_c.clock + dur_t, ctr=ctr)
-                st_c = _finish(st_c, jnp.where(imm, task, -1), g, W)
-                # task finished -> atomic decrement (XGOMP only)
-                st_c = _atomic_charge(st_c, imm & pays_count, costs)
-                return jnp.asarray(False), st_c
-
-            _, st = jax.lax.while_loop(imm_cond, imm_body,
-                                       (jnp.asarray(True), st))
-        return st
-
-    # ---------------- phase B: dequeue ----------------
-    def dequeue_phase(st: SimState, running):
-        idle_m = (st.s_top == 0) & active_w & running
-
-        # --- GOMP lane: contended pops off the single global queue
-        idle_g = idle_m & is_locked
-        avail = st.g_tail - st.g_head
-        rank = jnp.cumsum(idle_g.astype(jnp.int32)) - 1
-        found_g = idle_g & (rank < avail)
-        gq = st.g_buf.shape[0]
-        gidx = (st.g_head + rank) % gq
-        task_g = jnp.where(found_g, st.g_buf[gidx], 0)
-        ts_g = jnp.where(found_g, st.g_ts[gidx], 0)
-        g_head = st.g_head + jnp.sum(found_g, dtype=jnp.int32)
-        cost_g = jnp.where(idle_g,
-                           costs.c_atomic + costs.c_pq_op
-                           + rank * costs.c_lock, 0)
-        ctr = _bump(st.ctr, "atomic_ops", idle_g)
-
-        # --- XQueue lane: master queue then rotated aux scan
-        idle_x = idle_m & uses_xq
-        xq, task_x, ts_x, src, found_x, checked = xqueue.pop_first(
-            st.xq, st.deq_rr, idle_x, n_w)
-        cost_x = jnp.where(idle_x, checked * costs.c_cache, 0)
-        cost_x = cost_x + jnp.where(found_x, _comm(costs, me, src, zsz), 0)
-        deq_rr = st.deq_rr + (found_x & (src != me)).astype(jnp.int32)
-
-        task = jnp.where(is_locked, task_g, task_x)
-        ts = jnp.where(is_locked, ts_g, ts_x)
-        found = found_g | found_x
-        st = st._replace(xq=xq, g_head=g_head, deq_rr=deq_rr, ctr=ctr,
-                         clock=st.clock + cost_g + cost_x)
-        return st, task, ts, found
-
-    # ---------------- phase B2: thief protocol ----------------
-    def thief_phase(st: SimState, found, running) -> SimState:
-        thief_m = (st.s_top == 0) & ~found & active_w & is_dlb & running
-        idle = jnp.where(thief_m, st.idle + 1, 0)
-        do_req = thief_m & ((idle == 1) | (idle >= params.t_interval))
-        idle = jnp.where(idle >= params.t_interval, 0, idle)
-        st = st._replace(idle=idle)
-
-        # most scheduling points have no thief at all (requests fire on the
-        # first idle step and every t_interval after); the retry loop is an
-        # early-exit while so those steps skip the victim-pick machinery.
-        # The carry holds only what the loop actually mutates — rng, the
-        # thief-written request cells, clock, a sent-count accumulator — so
-        # the (batched) loop's per-iteration select overhead never touches
-        # the big queue/stack/counter buffers.
-        rounds = st.cells.round   # victim-owned; thieves only read it
-
-        def cond(carry):
-            v = carry[0]
-            return (v < NV_CAP) & jnp.any(do_req & (v < params.n_victim))
-
-        def body(carry):
-            v, rng, req_round, req_tid, clock, n_sent = carry
-            m = do_req & (v < params.n_victim)
-            rng, victim = dlb.pick_victim(rng, me, n_w, zsz, params.p_local)
-            cells, sent = messaging.thief_send(
-                messaging.Cells(rounds, req_round, req_tid), me, victim, m)
-            cost = jnp.where(m, 2 * _comm(costs, me, victim, zsz), 0)
-            cost = cost + jnp.where(sent, _comm(costs, me, victim, zsz), 0)
-            return (v + 1, rng, cells.req_round, cells.req_tid, clock + cost,
-                    n_sent + sent.astype(jnp.int32))
-
-        _v, rng, req_round, req_tid, clock, n_sent = jax.lax.while_loop(
-            cond, body,
-            (jnp.int32(0), st.rng, st.cells.req_round, st.cells.req_tid,
-             st.clock, jnp.zeros(W, jnp.int32)))
-        return st._replace(
-            rng=rng, cells=messaging.Cells(rounds, req_round, req_tid),
-            clock=clock, ctr=_bump(st.ctr, "req_sent", n_sent))
-
-    # ---------------- phase C: victim handling + execution ----------------
-    def victim_phase(st: SimState, found) -> SimState:
-        valid = messaging.victim_valid(st.cells) & found
-        thief = jnp.maximum(st.cells.req_tid, 0)
-
-        # NA-WS: bulk transfer to the thief's queue (Alg. 4)
-        vm_ws = valid & is_naws
-        comm_c = _comm(costs, me, thief, zsz)
-        xq, clock, stolen, src_empty, tgt_full = dlb.ws_transfer(
-            st.xq, vm_ws, thief, params.n_steal, st.clock, comm_c,
-            st.deq_rr, WS_CAP, n_w)
-        ctr = _bump(st.ctr, "stolen", stolen)
-        ctr = _bump(ctr, "stolen_local",
-                    jnp.where(zone(me) == zone(thief), stolen, 0))
-        ctr = _bump(ctr, "stolen_remote",
-                    jnp.where(zone(me) != zone(thief), stolen, 0))
-        ctr = _bump(ctr, "req_has_steal", vm_ws & (stolen > 0))
-        ctr = _bump(ctr, "src_empty", src_empty)
-        ctr = _bump(ctr, "tgt_full", tgt_full)
-
-        # NA-RP: adopt the thief for future redirected pushes (Alg. 3)
-        vm_rp = valid & is_narp
-        rp, adopted = dlb.rp_adopt(st.rp, thief, params.n_steal, vm_rp)
-        ctr = _bump(ctr, "req_has_steal", adopted)
-
-        handled = vm_ws | vm_rp
-        ctr = _bump(ctr, "req_handled", handled)
-        return st._replace(xq=xq, clock=clock, rp=rp, ctr=ctr,
-                           cells=messaging.victim_advance(st.cells, handled))
-
-    def exec_phase(st: SimState, task, ts, found) -> SimState:
-        safe = jnp.where(found, task, 0)
-        dur_t = jnp.where(found, g.dur[safe], 0)
-        # memory-bound tasks run slower away from their creator's data
-        # (paper SVI-B: the locality mechanism behind the DLB gains);
-        # mem_bound == 0 keeps the exact integer durations (no f32
-        # round-trip, which would perturb tasks >= 2^24 ns)
-        cr0 = st.creator[safe]
-        pen = jnp.where(cr0 == me, 1.0,
-                        jnp.where(zone(cr0) == zone(me),
-                                  costs.exec_zone_penalty,
-                                  costs.exec_remote_penalty))
-        mult = 1.0 + case.mem_bound * (pen - 1.0)
-        dur_t = jnp.where(case.mem_bound > 0,
-                          (dur_t.astype(jnp.float32) * mult).astype(jnp.int32),
-                          dur_t)
-        start = jnp.maximum(st.clock, jnp.where(found, ts, 0))
-        clock = jnp.where(found, start + dur_t, st.clock)
-        cr = st.creator[safe]
-        ctr = _bump(st.ctr, "exec", found)
-        ctr = _bump(ctr, "self", found & (cr == me))
-        ctr = _bump(ctr, "local", found & (cr != me) & (zone(cr) == zone(me)))
-        ctr = _bump(ctr, "remote", found & (zone(cr) != zone(me)))
-        ctr = _bump(ctr, "busy_ns", dur_t)
-        st = st._replace(clock=clock, ctr=ctr)
-        st = _finish(st, jnp.where(found, task, -1), g, W)
-        # global task count decrement — only the centralized_count barrier
-        # keeps one: contended atomic on the xqueue lane, plain atomic op
-        # count on the locked lane (already serialized on the queue lock);
-        # under the tree barrier there is no global count to decrement
-        st = _atomic_charge(st, found & pays_count, costs)
-        return st._replace(ctr=_bump(
-            st.ctr, "atomic_ops",
-            found & is_locked & (case.barrier_id == 0)))
-
-    def step(st: SimState) -> SimState:
-        running = (st.n_done < g.n_tasks) & (st.step_i < max_steps) \
-            & ~st.overflow
-        # NA-RP: spawning workers are victims too — adopt a thief pre-push
-        spawner = (st.s_top > 0) & is_narp & running
-        valid0 = messaging.victim_valid(st.cells) & spawner
-        rp, _ = dlb.rp_adopt(st.rp, jnp.maximum(st.cells.req_tid, 0),
-                             params.n_steal, valid0)
-        st = st._replace(
-            rp=rp, cells=messaging.victim_advance(st.cells, valid0),
-            ctr=_bump(st.ctr, "req_handled", valid0))
-        st = spawn_phase(st, running)
-        st, task, ts, found = dequeue_phase(st, running)
-        st = thief_phase(st, found, running)
-        st = victim_phase(st, found)
-        st = exec_phase(st, task, ts, found)
-        return st._replace(step_i=st.step_i + running.astype(jnp.int32))
-
-    return step
-
-
-def _init_state(g: GraphArrays, W: int, S: int, q_cap: int, gq_cap: int,
-                seed: jax.Array) -> SimState:
-    T = g.dur.shape[0]
-    seed32 = jnp.asarray(seed).astype(jnp.uint32)
-    st = SimState(
-        xq=xqueue.make(W, q_cap),
-        cells=messaging.make(W),
-        rp=dlb.rp_make(W),
-        g_buf=jnp.full((gq_cap,), -1, jnp.int32),
-        g_ts=jnp.zeros((gq_cap,), jnp.int32),
-        g_head=jnp.int32(0), g_tail=jnp.int32(0),
-        s_task=jnp.zeros((W, S), jnp.int32),
-        s_cnt=jnp.zeros((W, S), jnp.int32),
-        s_top=jnp.zeros((W,), jnp.int32),
-        join_cnt=g.join_dep,
-        done=jnp.zeros((T,), bool),
-        creator=jnp.zeros((T,), jnp.int32),
-        clock=jnp.zeros((W,), jnp.int32),
-        rr=jnp.arange(W, dtype=jnp.int32),      # round-robin starts at master
-        deq_rr=jnp.zeros((W,), jnp.int32),
-        idle=jnp.zeros((W,), jnp.int32),
-        rng=(jnp.arange(W, dtype=jnp.uint32) * jnp.uint32(2654435761)
-             + (seed32 * jnp.uint32(40503) + jnp.uint32(1))),
-        ctr=jnp.zeros((W, NC), jnp.int32),
-        n_done=jnp.int32(0),
-        overflow=jnp.asarray(False),
-        step_i=jnp.int32(0),
-    )
-    # seed the root task onto worker 0's spawn stack as a 1-length range
-    st = st._replace(
-        s_task=st.s_task.at[0, 0].set(0),
-        s_cnt=st.s_cnt.at[0, 0].set(1),
-        s_top=st.s_top.at[0].set(1),
-    )
-    return st
-
-
-@dataclasses.dataclass(frozen=True)
-class SimConfig:
-    n_workers: int = 64
-    n_zones: int = 8
-    queue_cap: int = 16
-    stack_cap: int = 512
-    max_steps: int = 200_000
-    costs: CostModel = DEFAULT_COSTS
-
-
 def _run_jit(cfg: SimConfig, gq_cap: int, g: GraphArrays,
              case: SweepCase) -> SimState:
     """Run one fully-traced simulation to completion.  ``cfg`` and ``gq_cap``
-    are static (they fix array shapes); ``g`` and ``case`` are traced pytrees,
-    so this function vmaps over a leading batch axis of both."""
+    are static (they fix array shapes — and ``cfg.backend`` the step
+    kernels); ``g`` and ``case`` are traced pytrees, so this function vmaps
+    over a leading batch axis of both."""
     W = cfg.n_workers
-    step = _build_step(W, cfg.stack_cap, cfg.costs, g, case, cfg.max_steps)
-    st0 = _init_state(g, W, cfg.stack_cap, cfg.queue_cap, gq_cap, case.seed)
+    step = backends_mod.get_backend(cfg.backend).build_step(
+        W, cfg.stack_cap, cfg.costs, g, case, cfg.max_steps)
+    st0 = init_state(g, W, cfg.stack_cap, cfg.queue_cap, gq_cap, case.seed)
 
     def cond(st):
         return (st.n_done < g.n_tasks) & (st.step_i < cfg.max_steps) \
@@ -658,10 +143,15 @@ def run_schedule(graph: TaskGraph, mode: str | RuntimeSpec | None = None,
     :class:`RuntimeSpec` lattice point); the legacy string ``mode=`` still
     works but emits a ``DeprecationWarning``.  Default is the SLB baseline
     (XQueue + tree barrier + static round-robin, the old ``"xgomptb"``).
-    Returns makespan + the paper's §V counters.
+    ``cfg.backend`` picks the step backend (``reference`` / ``pallas``,
+    bitwise identical).  Returns makespan + the paper's §V counters.
     """
     rspec = resolve_spec(spec, mode, where="run_schedule")
     cfg = cfg or SimConfig()
+    # resolve the backend (None -> env -> reference) *before* the jit
+    # dispatch so the compiled-function cache keys on the concrete name
+    cfg = dataclasses.replace(
+        cfg, backend=backends_mod.resolve_name(cfg.backend))
     params = params or make_params()
     gq_cap = graph.n_tasks + 2 if rspec.queue == "locked_global" else 4
     W = cfg.n_workers

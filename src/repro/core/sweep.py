@@ -47,6 +47,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core import backends as backends_mod
 from repro.core import barrier as barrier_mod
 from repro.core import cache as cache_mod
 from repro.core.executors import STRATEGIES, ExecContext, select_executor
@@ -105,7 +106,7 @@ class SweepResult:
 def run_cases(graphs: Sequence[TaskGraph] | TaskGraph,
               specs: Sequence[CaseSpec], cfg: SimConfig | None = None,
               chunk_size: int = 64, strategy: str = "auto",
-              cache=None) -> SweepResult:
+              cache=None, backend: str | None = None) -> SweepResult:
     """Run every ``CaseSpec`` through the experiment service.
 
     The result cache (``cache=True`` for the default on-disk store, or a
@@ -120,6 +121,12 @@ def run_cases(graphs: Sequence[TaskGraph] | TaskGraph,
     ``jax.devices()`` when more than one is visible, else vmaps uniform
     chunks and serializes heterogeneous DLB-knob chunks on CPU (see
     repro.core.executors).
+
+    ``backend`` picks the step backend (``reference`` / ``pallas``; see
+    repro.core.backends), overriding ``cfg.backend``.  Backends are bitwise
+    identical by contract, so results — and the cache keys below — are
+    backend-independent: a case simulated under one backend is a valid
+    cache hit under any other.
     """
     if isinstance(graphs, TaskGraph):
         graphs = [graphs]
@@ -129,6 +136,10 @@ def run_cases(graphs: Sequence[TaskGraph] | TaskGraph,
     assert all(0 <= s.graph < len(graphs) for s in specs)
     assert strategy in STRATEGIES, (strategy, STRATEGIES)
     cfg = cfg or SimConfig()
+    # resolve the backend once, host-side (None -> env -> reference), so
+    # every jit dispatch below keys on the concrete name
+    cfg = dataclasses.replace(cfg, backend=backends_mod.resolve_name(
+        backend if backend is not None else cfg.backend))
 
     t0 = time.perf_counter()
     B = len(specs)
@@ -218,7 +229,7 @@ def run_grid(graphs: Sequence[TaskGraph] | TaskGraph,
              n_zones: int | None = None,
              cfg: SimConfig | None = None,
              chunk_size: int = 64, strategy: str = "auto",
-             cache=None, *,
+             cache=None, backend: str | None = None, *,
              queues: Sequence[str] | None = None,
              barriers: Sequence[str] | None = None,
              balancers: Sequence[str] | None = None) -> SweepResult:
@@ -289,6 +300,6 @@ def run_grid(graphs: Sequence[TaskGraph] | TaskGraph,
         for ti in t_interval for pl in p_local
     ]
     res = run_cases(graphs, specs, cfg=cfg, chunk_size=chunk_size,
-                    strategy=strategy, cache=cache)
+                    strategy=strategy, cache=cache, backend=backend)
     res.grid_axes = axes
     return res

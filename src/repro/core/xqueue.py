@@ -121,6 +121,42 @@ def scan_pos(W: int, me: jax.Array, rot: jax.Array, n_active) -> jax.Array:
     return jnp.where(p == me[:, None], 0, 1 + (d - rot[:, None]) % nm1)
 
 
+def pop_compute(buf: jax.Array, ts: jax.Array, head: jax.Array,
+                tail: jax.Array, rot: jax.Array, mask: jax.Array, n_active):
+    """The pop scan as pure array math (the shared math core).
+
+    Operates on the raw XQ arrays so both the reference jnp path
+    (:func:`pop_first`) and the Pallas kernel
+    (:mod:`repro.kernels.sched_queue`, which runs this same math
+    VMEM-resident inside one fused kernel) execute the identical int
+    arithmetic — backend bitwise equality by construction.
+
+    Returns ``(head', task, ts, src, found, checked)``.
+    """
+    W = head.shape[0]
+    Q = buf.shape[-1]
+    me = jnp.arange(W, dtype=jnp.int32)
+    p = me[None, :]
+    pos = scan_pos(W, me, rot, n_active)                  # (W, W)
+    sz = tail - head                                      # (W, W) [c, p]
+    cand = (sz > 0) & (p < jnp.maximum(n_active, 1))
+    pos_m = jnp.where(cand, pos, W + 1)
+    best = jnp.min(pos_m, axis=1)
+    found_any = best <= W
+    found = mask & found_any
+    src = jnp.where(found_any,
+                    jnp.argmin(pos_m, axis=1).astype(jnp.int32), me)
+    checked = jnp.where(found_any, best + 1, n_active)
+    safe_src = jnp.where(found, src, me)
+    slot = head[me, safe_src] % Q
+    task = buf[me, safe_src, slot]
+    tsv = ts[me, safe_src, slot]
+    # one consumed slot per consumer row: one-hot add, not a scatter
+    head = head + (found[:, None]
+                   & (me[None, :] == safe_src[:, None])).astype(jnp.int32)
+    return head, task, tsv, src, found, checked
+
+
 def pop_first(xq: XQ, rot: jax.Array, mask: jax.Array, n_active=None):
     """Every consumer pops one task: master queue first, then auxiliary queues
     in rotated round-robin order (paper §II-B).
@@ -136,26 +172,8 @@ def pop_first(xq: XQ, rot: jax.Array, mask: jax.Array, n_active=None):
     Returns (xq', task, ts, src, found, checked) — ``checked`` is the number of
     queues inspected (each inspection is charged by the cost model).
     """
-    W = xq.head.shape[0]
     if n_active is None:
-        n_active = W
-    me = jnp.arange(W, dtype=jnp.int32)
-    p = me[None, :]
-    pos = scan_pos(W, me, rot, n_active)                  # (W, W)
-    sz = sizes(xq)                                        # (W, W) [c, p]
-    cand = (sz > 0) & (p < jnp.maximum(n_active, 1))
-    pos_m = jnp.where(cand, pos, W + 1)
-    best = jnp.min(pos_m, axis=1)
-    found_any = best <= W
-    found = mask & found_any
-    src = jnp.where(found_any,
-                    jnp.argmin(pos_m, axis=1).astype(jnp.int32), me)
-    checked = jnp.where(found_any, best + 1, n_active)
-    safe_src = jnp.where(found, src, me)
-    slot = xq.head[me, safe_src] % capacity(xq)
-    task = xq.buf[me, safe_src, slot]
-    ts = xq.ts[me, safe_src, slot]
-    # one consumed slot per consumer row: one-hot add, not a scatter
-    head = xq.head + (found[:, None]
-                      & (me[None, :] == safe_src[:, None])).astype(jnp.int32)
+        n_active = xq.head.shape[0]
+    head, task, ts, src, found, checked = pop_compute(
+        xq.buf, xq.ts, xq.head, xq.tail, rot, mask, n_active)
     return XQ(xq.buf, xq.ts, head, xq.tail), task, ts, src, found, checked

@@ -1,0 +1,159 @@
+"""Pallas kernels for the scheduler's hot queue phases.
+
+The step body's inner loops are dominated by XQueue traffic — the per-pair
+SPSC push, the rotated pop scan — and by one-hot counter bumps.  This module
+implements that :class:`~repro.core.phases.StepOps` kernel set as Pallas
+kernels (the ``pallas`` step backend, see :mod:`repro.core.backends`):
+
+* **push** — the SPSC single-writer discipline made literal: one sequential
+  pass over producers, each performing a dynamic scalar store into its own
+  ``(consumer, producer, slot)`` cell and bumping its own tail cursor.  No
+  two iterations touch the same element (producers are distinct and each
+  owns its column), which is the B-queue correctness argument executed
+  as-is inside one VMEM-resident kernel.
+* **pop**  — the whole rotated scan (analytic scan positions, argmin,
+  gather, one-hot head advance) fused into a single kernel.  The body calls
+  the shared math core :func:`repro.core.xqueue.pop_compute`, so the pallas
+  path executes the *identical* int arithmetic as the reference — bitwise
+  equality by construction, not by test luck (tests assert it anyway).
+* **ctr_add** — the per-phase counter-column bump as a VMEM read-modify-
+  write kernel.
+
+Following the :mod:`repro.kernels.ops` idiom: compiled on TPU backends,
+``interpret=True`` everywhere else — so CI drives the exact kernel code on
+CPU (the ``JAX_PLATFORMS=cpu`` pallas-backend job).  All kernels are
+int32-only, grid-free (small W×W×Q working sets live entirely in VMEM),
+and vmap/shard_map-safe: the sweep executors batch them freely.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import xqueue
+from repro.core.xqueue import XQ
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------- counter bump ----------------
+
+def _ctr_add_kernel(ctr_ref, val_ref, out_ref, *, col: int):
+    out_ref[:] = ctr_ref[:]
+    out_ref[:, col] = ctr_ref[:, col] + val_ref[:]
+
+
+def ctr_add(ctr: jax.Array, col: int, val: jax.Array) -> jax.Array:
+    """``ctr[:, col] += val`` as a Pallas RMW kernel (col is static)."""
+    return pl.pallas_call(
+        functools.partial(_ctr_add_kernel, col=col),
+        out_shape=jax.ShapeDtypeStruct(ctr.shape, ctr.dtype),
+        interpret=_interpret(),
+    )(ctr, val)
+
+
+# ---------------- SPSC push ----------------
+
+def _push_kernel(buf_ref, ts_ref, tail_ref, cons_ref, slot_ref, task_ref,
+                 tsp_ref, ok_ref, obuf_ref, ots_ref, otail_ref, *, W: int):
+    obuf_ref[:] = buf_ref[:]
+    ots_ref[:] = ts_ref[:]
+    otail_ref[:] = tail_ref[:]
+
+    def body(p, _):
+        @pl.when(ok_ref[p] != 0)
+        def _store():
+            c = cons_ref[p]
+            s = slot_ref[p]
+            obuf_ref[c, p, s] = task_ref[p]
+            ots_ref[c, p, s] = tsp_ref[p]
+            otail_ref[c, p] = tail_ref[c, p] + 1
+
+        return 0
+
+    jax.lax.fori_loop(0, W, body, 0)
+
+
+def push(xq: XQ, producer: jax.Array, consumer: jax.Array, task: jax.Array,
+         ts: jax.Array, mask: jax.Array):
+    """Pallas twin of :func:`repro.core.xqueue.push` (same signature/result).
+
+    The W-element producer inversion stays in jnp (it is host-of-the-kernel
+    bookkeeping on (W,) arrays); the (W, W, Q) buffer traffic — the hot part
+    — runs as one sequential-single-writer Pallas kernel.
+    """
+    Q = xqueue.capacity(xq)
+    W = xq.head.shape[0]
+    lane = jnp.arange(W, dtype=jnp.int32)
+    # permute lane data into producer-indexed order (identical math to the
+    # reference push; active producers are distinct)
+    inv = jnp.full((W,), W, jnp.int32).at[
+        jnp.where(mask, producer, W)].set(lane, mode="drop")
+    has = inv < W
+    safe = jnp.minimum(inv, W - 1)
+    cons_p = jnp.where(has, consumer[safe], 0)
+    task_p = task[safe]
+    ts_p = ts[safe]
+    cur_p = xq.tail[cons_p, lane] - xq.head[cons_p, lane]
+    ok_p = has & (cur_p < Q)
+    slot_p = xq.tail[cons_p, lane] % Q
+
+    shp = jax.ShapeDtypeStruct
+    buf, tsb, tail = pl.pallas_call(
+        functools.partial(_push_kernel, W=W),
+        out_shape=(shp(xq.buf.shape, jnp.int32),
+                   shp(xq.ts.shape, jnp.int32),
+                   shp(xq.tail.shape, jnp.int32)),
+        interpret=_interpret(),
+    )(xq.buf, xq.ts, xq.tail, cons_p, slot_p, task_p, ts_p,
+      ok_p.astype(jnp.int32))
+    ok = mask & ok_p[producer]
+    return XQ(buf, tsb, xq.head, tail), ok
+
+
+# ---------------- pop scan ----------------
+
+def _pop_kernel(buf_ref, ts_ref, head_ref, tail_ref, rot_ref, mask_ref,
+                na_ref, ohead_ref, otask_ref, ots_ref, osrc_ref, ofound_ref,
+                ochecked_ref):
+    head, task, tsv, src, found, checked = xqueue.pop_compute(
+        buf_ref[:], ts_ref[:], head_ref[:], tail_ref[:], rot_ref[:],
+        mask_ref[:] != 0, na_ref[0])
+    ohead_ref[:] = head
+    otask_ref[:] = task
+    ots_ref[:] = tsv
+    osrc_ref[:] = src
+    ofound_ref[:] = found.astype(jnp.int32)
+    ochecked_ref[:] = checked
+
+
+def pop_first(xq: XQ, rot: jax.Array, mask: jax.Array, n_active=None):
+    """Pallas twin of :func:`repro.core.xqueue.pop_first`: the whole rotated
+    scan fused into one VMEM-resident kernel over the shared math core."""
+    W = xq.head.shape[0]
+    if n_active is None:
+        n_active = W
+    na = jnp.asarray(n_active, jnp.int32).reshape(1)
+    shp = jax.ShapeDtypeStruct
+    head, task, ts, src, found, checked = pl.pallas_call(
+        _pop_kernel,
+        out_shape=(shp(xq.head.shape, jnp.int32), shp((W,), jnp.int32),
+                   shp((W,), jnp.int32), shp((W,), jnp.int32),
+                   shp((W,), jnp.int32), shp((W,), jnp.int32)),
+        interpret=_interpret(),
+    )(xq.buf, xq.ts, xq.head, xq.tail, rot, mask.astype(jnp.int32), na)
+    return (XQ(xq.buf, xq.ts, head, xq.tail), task, ts, src,
+            found != 0, checked)
+
+
+def pallas_ops():
+    """The pallas :class:`~repro.core.phases.StepOps` kernel set."""
+    from repro.core.phases import StepOps
+    return StepOps(name="pallas", push=push, pop_first=pop_first,
+                   ctr_add=ctr_add)

@@ -121,7 +121,9 @@ def _route_dispatch_shard_map(xt, logits, cfg: ModelConfig, cap, groups,
     def local_fn(xt_l, logits_l):
         shard = jnp.int32(0)
         for ax in dp:
-            shard = shard * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+            # psum of the literal 1 folds to the static mesh axis size
+            # (jax 0.4.x has no public jax.lax.axis_size)
+            shard = shard * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
         key = jax.random.fold_in(rng, shard)
         r = balance.route(logits_l, m.top_k, cap, groups,
                           strategy=m.strategy, p_local=m.p_local, key=key)

@@ -1,7 +1,22 @@
 """Tests run on the default (1-device) CPU backend; multi-device tests spawn
 subprocesses with their own XLA_FLAGS (the dry-run's 512-device override must
 never leak into smoke tests)."""
+import functools
+import importlib.util
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@functools.lru_cache(maxsize=1)
+def load_bench_run():
+    """benchmarks/run.py loaded by file path, the way its CLI registry is
+    meant to be consumed jax-free (shared by the registry-sync and cache-CLI
+    tests; cached so its module-level env setdefault runs at most once)."""
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "run.py")
+    spec = importlib.util.spec_from_file_location("_bench_run", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod

@@ -77,6 +77,71 @@ def test_stats_and_clear(tmp_path):
     assert c.stats()["entries"] == 0
 
 
+def test_clear_by_version(tmp_path):
+    """Satellite acceptance: `cache clear --version <tag>` prunes exactly
+    the entries stamped with that tag — stale populations go, current
+    results stay, unstamped/corrupt files have their own sentinels."""
+    import json
+    import os
+    c = ResultCache(str(tmp_path))
+    rec = dict(clock_max=1, counters={}, n_done=0, overflow=False, step_i=0)
+    # two current entries, two legacy-stamped, one unversioned, one corrupt
+    for i in range(2):
+        c.put(f"aa{i:x}" + "0" * 61, rec)
+    for i in range(2):
+        key = f"bb{i:x}" + "0" * 61
+        c.put(key, rec)
+        path = c._path(key)
+        with open(path) as f:
+            r = json.load(f)
+        r["code_version"] = "runtime-spec-v1"
+        with open(path, "w") as f:
+            json.dump(r, f)
+    key_unv = "cc0" + "0" * 61
+    c.put(key_unv, rec)
+    path = c._path(key_unv)
+    with open(path) as f:
+        r = json.load(f)
+    del r["code_version"]
+    with open(path, "w") as f:
+        json.dump(r, f)
+    key_bad = "dd0" + "0" * 61
+    c.put(key_bad, rec)
+    with open(c._path(key_bad), "w") as f:
+        f.write("{not json")
+
+    assert c.stats()["entries"] == 6
+    assert c.clear(version="no-such-version") == 0
+    assert c.clear(version="runtime-spec-v1") == 2
+    st = c.stats()
+    assert st["entries"] == 4
+    assert "runtime-spec-v1" not in st["versions"]
+    assert st["versions"][CODE_VERSION] == 2     # current entries survive
+    assert c.clear(version="unversioned") == 1
+    assert c.clear(version="unreadable") == 1
+    assert c.stats()["entries"] == 2
+    assert c.clear() == 2                         # no version: drop all
+
+
+def test_cache_cli_clear_version(tmp_path, monkeypatch):
+    """The benchmarks/run.py `cache clear --version` subcommand drives the
+    same path (loaded jax-free by file location, like the CLI does)."""
+    from conftest import load_bench_run
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    bench_run = load_bench_run()
+    c = ResultCache(str(tmp_path))
+    rec = dict(clock_max=1, counters={}, n_done=0, overflow=False, step_i=0)
+    c.put("ee0" + "0" * 61, rec)
+    bench_run._cache_cmd(["clear", "--version", "no-such-version"])
+    assert c.stats()["entries"] == 1
+    bench_run._cache_cmd(["clear", "--version", CODE_VERSION])
+    assert c.stats()["entries"] == 0
+    with pytest.raises(SystemExit):
+        bench_run._cache_cmd(["clear", "--version"])      # missing tag
+    with pytest.raises(SystemExit):
+        bench_run._cache_cmd(["clear", "bogus"])
+
+
 def test_resolve(tmp_path):
     assert resolve(None) is None
     assert resolve(False) is None

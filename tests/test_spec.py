@@ -69,13 +69,8 @@ def test_axes_dict_and_helpers():
 def test_axis_values_match_run_py_registry():
     """benchmarks/run.py spells the axis values out (to stay jax-free);
     they must match the canonical definition."""
-    import importlib.util
-    import pathlib
-    path = (pathlib.Path(__file__).resolve().parent.parent
-            / "benchmarks" / "run.py")
-    mod_spec = importlib.util.spec_from_file_location("_bench_run", path)
-    bench_run = importlib.util.module_from_spec(mod_spec)
-    mod_spec.loader.exec_module(bench_run)
+    from conftest import load_bench_run
+    bench_run = load_bench_run()
     assert bench_run.AXIS_VALUES == AXES
     # the --spec filter understands every axis value and finds the lattice
     sel = bench_run.parse_spec_filter("queue=xqueue,barrier=tree,"
