@@ -1,0 +1,182 @@
+"""Regression gate for the benchmark record: fresh vs committed baseline.
+
+CI's ``bench-regression`` job runs the deterministic smoke suites
+(``ablation_lattice`` + ``numa_ablation``), then compares the key
+speedup/throughput fields of the freshly written
+``experiments/bench/BENCH_sweep_smoke.json`` against the committed
+``benchmarks/baselines/smoke.json`` with a relative tolerance (±25% by
+default) and fails the job on any field drifting outside it.  The compared
+fields are *simulated* quantities — makespan ratios and geomeans in virtual
+nanoseconds — so they are bit-deterministic across hosts: a drift means the
+simulator's semantics changed, not that a runner was slow.
+
+    # gate (CI):
+    python benchmarks/check_regression.py
+    # regenerate the baseline after an intentional physics change:
+    BENCH_SMOKE=1 python -m benchmarks.run ablation_lattice numa_ablation
+    python benchmarks/check_regression.py --write-baseline
+
+The baseline file stores its own tolerance and the flat list of compared
+``dotted.path: value`` fields, extracted from the fresh record via the
+``FIELD_PATTERNS`` below (``*`` matches one level), so adding a topology or
+attribution axis to the suites automatically widens the gate on the next
+``--write-baseline``.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+#: dotted paths into BENCH_sweep*.json selecting the gated fields; ``*``
+#: matches any single key at that level.  Only numeric leaves are compared.
+FIELD_PATTERNS = (
+    "ablation_lattice.speedup_attribution.queue.*",
+    "ablation_lattice.speedup_attribution.barrier.*",
+    "ablation_lattice.speedup_attribution.balance.*",
+    "numa_ablation.speedup_attribution.*.queue.*",
+    "numa_ablation.speedup_attribution.*.barrier.*",
+    "numa_ablation.speedup_attribution.*.balance.*",
+    "numa_ablation.makespan_geomean_by_topology.*",
+)
+
+DEFAULT_TOLERANCE = 0.25
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_FRESH = os.path.join(ROOT, "experiments", "bench",
+                             "BENCH_sweep_smoke.json")
+DEFAULT_BASELINE = os.path.join(ROOT, "benchmarks", "baselines",
+                                "smoke.json")
+
+
+def _walk(tree, parts, prefix=()):
+    """Yield ``(dotted_path, value)`` for every pattern match in ``tree``."""
+    if not parts:
+        if isinstance(tree, bool) or not isinstance(tree, (int, float)):
+            return
+        yield ".".join(prefix), float(tree)
+        return
+    head, rest = parts[0], parts[1:]
+    if not isinstance(tree, dict):
+        return
+    keys = sorted(tree) if head == "*" else ([head] if head in tree else [])
+    for k in keys:
+        yield from _walk(tree[k], rest, prefix + (k,))
+
+
+def extract_fields(record: dict) -> dict:
+    fields = {}
+    for pattern in FIELD_PATTERNS:
+        for path, value in _walk(record, pattern.split(".")):
+            fields[path] = value
+    return fields
+
+
+def _lookup(record, path: str):
+    node = record
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    if isinstance(node, bool) or not isinstance(node, (int, float)):
+        return None
+    return float(node)
+
+
+def check(fresh: dict, baseline: dict) -> list:
+    """Compare baseline fields against the fresh record; returns the list
+    of violation strings (empty = gate passes)."""
+    tol = float(baseline.get("tolerance", DEFAULT_TOLERANCE))
+    fields = baseline.get("fields", {})
+    problems = []
+    if not fields:
+        problems.append("baseline has no fields — regenerate it with "
+                        "--write-baseline")
+    for path, base in sorted(fields.items()):
+        got = _lookup(fresh, path)
+        if got is None:
+            problems.append(f"MISSING  {path}: baseline {base:.6g}, "
+                            f"absent from the fresh record")
+            continue
+        base = float(base)
+        if base == 0:
+            ok = got == 0
+            rel = float("inf") if not ok else 0.0
+        else:
+            rel = abs(got / base - 1.0)
+            ok = rel <= tol
+        status = "ok      " if ok else "REGRESSED"
+        line = (f"{status} {path}: baseline {base:.6g}, fresh {got:.6g} "
+                f"({rel:+.1%} vs ±{tol:.0%})")
+        print(line)
+        if not ok:
+            problems.append(line)
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", default=DEFAULT_FRESH,
+                    help="freshly produced benchmark record (default: the "
+                         "BENCH_SMOKE output path)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="committed baseline to gate against")
+    ap.add_argument("--tolerance", type=float, default=None,
+                    help="override the baseline's stored relative tolerance")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="extract FIELD_PATTERNS from --fresh and "
+                         "(over)write --baseline instead of checking")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.fresh) as f:
+            fresh = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"cannot read fresh record {args.fresh}: {e}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        fields = extract_fields(fresh)
+        if not fields:
+            print("no FIELD_PATTERNS matched the fresh record — did the "
+                  "suites run?", file=sys.stderr)
+            return 2
+        baseline = dict(
+            tolerance=(args.tolerance if args.tolerance is not None
+                       else DEFAULT_TOLERANCE),
+            source=os.path.relpath(args.fresh, ROOT),
+            note=("deterministic simulated-ns fields gated by "
+                  "benchmarks/check_regression.py; regenerate via "
+                  "--write-baseline after an intentional simulator change"),
+            fields=fields,
+        )
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        with open(args.baseline, "w") as f:
+            json.dump(baseline, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {len(fields)} baseline fields to {args.baseline}")
+        return 0
+
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"cannot read baseline {args.baseline}: {e}", file=sys.stderr)
+        return 2
+    if args.tolerance is not None:
+        baseline = dict(baseline, tolerance=args.tolerance)
+
+    problems = check(fresh, baseline)
+    if problems:
+        print(f"\nbench-regression: {len(problems)} field(s) outside "
+              f"tolerance", file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        return 1
+    print(f"\nbench-regression: all {len(baseline.get('fields', {}))} "
+          f"fields within ±{float(baseline.get('tolerance', DEFAULT_TOLERANCE)):.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

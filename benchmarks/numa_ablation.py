@@ -1,0 +1,199 @@
+"""NUMA-aware vs flat: the spec lattice swept across machine topologies.
+
+The paper's Section-V experiments are *multi-socket*: NA-RP/NA-WS win
+because crossing a socket boundary costs more than staying local, and the
+tree barrier is laid out along the socket hierarchy.  With
+:mod:`repro.core.topology` the machine is a grid axis, so this suite runs
+the full 2 × 2 × 3 RuntimeSpec lattice on the flat machine *and* the
+hierarchical presets and attributes the speedups per machine:
+
+* sweeps lattice × topologies through ``run_grid`` on **all three
+  executors** (serial / vmap / sharded) *and* **both step backends**
+  (reference / pallas), asserting every combination is bitwise identical
+  and every makespan finite and completed;
+* pins the degenerate paths: the flat-degenerate topology
+  (``MachineTopology.flat``) must reproduce the pre-topology goldens in
+  ``tests/golden_modes.json`` bitwise, and the single-socket ``uds``
+  preset — which exercises the *hierarchical* code path — must match a
+  flat single-zone machine bitwise;
+* records per-topology per-axis speedup attribution (the
+  ``ablation_lattice`` methodology, one table per machine) plus geomean
+  makespans by topology under the ``numa_ablation`` key of
+  ``BENCH_sweep.json`` — the fields ``benchmarks/check_regression.py``
+  gates CI on.
+"""
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.ablation_lattice import EXECUTOR_STRATEGIES, KNOBS, \
+    attribution
+from benchmarks.common import SIM, SMOKE, csv_row, emit, graph_for, \
+    merge_bench_sweep
+from repro.core import taskgraph, topology
+from repro.core.scheduler import CTR_NAMES, SimConfig
+from repro.core.spec import BALANCERS, BARRIERS, QUEUES, RuntimeSpec
+from repro.core.sweep import CaseSpec, run_cases, run_grid
+
+NUMA_APPS = ("fib",) if SMOKE else ("fib", "sort")
+
+#: machines under comparison: the historical flat model vs the paper-style
+#: multi-socket hierarchies (axis labels: flat / dual_socket_24 /
+#: quad_socket_48)
+TOPOLOGIES = (None, "dual_socket_24", "quad_socket_48")
+
+#: both step backends must agree bitwise on every (spec, topology) cell
+BACKENDS = ("reference", "pallas")
+
+GOLDEN_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "tests", "golden_modes.json")
+
+
+def _geomean(x) -> float:
+    return float(np.exp(np.log(np.asarray(x, float)).mean()))
+
+
+def _assert_equal(res, ref, label):
+    assert res.completed.all(), label
+    assert (res.time_ns == ref.time_ns).all(), \
+        f"{label} diverged from the reference run on the topology lattice"
+    for name in ("exec", "stolen", "stolen_remote", "atomic_ops"):
+        assert (res.counters[name] == ref.counters[name]).all(), \
+            (label, name)
+
+
+def check_degenerate_golden() -> int:
+    """The flat-degenerate topology must reproduce the pre-topology golden
+    results bitwise (tests/golden_modes.json: 5 legacy modes × 2 graphs)."""
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    cfg = SimConfig(**golden["cfg"])
+    graphs = {name: taskgraph.build(builder, **kw)
+              for name, (builder, kw) in golden["graphs"].items()}
+    names = list(graphs)
+    degenerate = topology.MachineTopology.flat(cfg.n_zones)
+    specs = [CaseSpec(spec=RuntimeSpec.from_mode(c["mode"]),
+                      n_workers=cfg.n_workers, n_zones=cfg.n_zones,
+                      graph=names.index(c["graph"]), topology=degenerate,
+                      **golden["knobs"])
+             for c in golden["cases"]]
+    res = run_cases(list(graphs.values()), specs, cfg=cfg, cache=None)
+    assert res.completed.all()
+    for i, c in enumerate(golden["cases"]):
+        label = ("golden-degenerate", c["graph"], c["mode"])
+        assert int(res.time_ns[i]) == c["time_ns"], label
+        assert int(res.steps[i]) == c["steps"], label
+        for name in CTR_NAMES:
+            assert int(res.counters[name][i]) == c["counters"][name], \
+                (*label, name)
+    return len(specs)
+
+
+def check_uds_single_socket(graphs) -> None:
+    """The single-socket ``uds`` preset takes the *hierarchical* code path
+    (1×1 distance matrix, socket-subtree barrier) yet must match the flat
+    single-zone machine bitwise — the degenerate anchor of the hierarchy."""
+    specs = [(sp, gi) for gi in range(len(graphs))
+             for sp in (RuntimeSpec(), RuntimeSpec(balance="na_rp"),
+                        RuntimeSpec(balance="na_ws"))]
+    flat = run_cases(graphs, [
+        CaseSpec(spec=sp, n_workers=SIM.n_workers, n_zones=1, graph=gi,
+                 p_local=0.75)
+        for sp, gi in specs], cfg=SIM, cache=None)
+    uds = run_cases(graphs, [
+        CaseSpec(spec=sp, n_workers=SIM.n_workers, graph=gi, p_local=0.75,
+                 topology="uds")
+        for sp, gi in specs], cfg=SIM, cache=None)
+    _assert_equal(uds, flat, "uds-vs-flat-single-zone")
+
+
+def run(cache=None):
+    graphs = [graph_for(app) for app in NUMA_APPS]
+    topo_labels = [topology.label(t) for t in TOPOLOGIES]
+
+    # lattice × topologies on every executor and both step backends; no
+    # cache — a warm hit would skip execution and void the bitwise claims
+    results = {}
+    for strategy in EXECUTOR_STRATEGIES:
+        results[strategy] = run_grid(
+            graphs, queues=QUEUES, barriers=BARRIERS, balancers=BALANCERS,
+            topologies=TOPOLOGIES, n_workers=(SIM.n_workers,),
+            n_zones=SIM.n_zones, cfg=SIM, strategy=strategy, cache=None,
+            **KNOBS)
+    ref = results["batched"]
+    for strategy, res in results.items():
+        _assert_equal(res, ref, strategy)
+    pallas = run_grid(
+        graphs, queues=QUEUES, barriers=BARRIERS, balancers=BALANCERS,
+        topologies=TOPOLOGIES, n_workers=(SIM.n_workers,),
+        n_zones=SIM.n_zones, cfg=SIM, strategy="batched", cache=None,
+        backend="pallas", **KNOBS)
+    _assert_equal(pallas, ref, "pallas-backend")
+
+    n_golden = check_degenerate_golden()
+    check_uds_single_socket(graphs)
+
+    n_spec = len(QUEUES) * len(BARRIERS) * len(BALANCERS)
+    # grid order: app × queue × barrier × balance × topology
+    ms = ref.makespans.reshape(len(NUMA_APPS), len(QUEUES), len(BARRIERS),
+                               len(BALANCERS), len(TOPOLOGIES))
+    assert np.isfinite(ms).all() and (ms > 0).all()
+
+    #: lattice points sampled into the CSV timeseries — one baseline and
+    #: one DLB point *per (app, topology)* cell, so every machine shows up
+    csv_specs = ("locked-cent-static_rr", "xqueue-tree-na_ws")
+    rows = []
+    for i, s in enumerate(ref.specs):
+        row = ref.row(i)
+        row["spec_slug"] = s.spec.slug
+        rows.append(row)
+        if s.spec.slug in csv_specs:
+            csv_row(f"numa_ablation/{row['app']}/{row['topology']}/"
+                    f"{s.spec.slug}", row["time_ns"] / 1e3,
+                    f"topology:{row['topology']}")
+    emit(rows, "numa_ablation")
+
+    attr = {label: attribution(ms[..., t])
+            for t, label in enumerate(topo_labels)}
+    geo = {label: _geomean(ms[..., t]) for t, label in
+           enumerate(topo_labels)}
+    record = dict(
+        apps=list(NUMA_APPS),
+        n_workers=SIM.n_workers,
+        knobs={k: v[0] for k, v in KNOBS.items()},
+        topologies=topo_labels,
+        executors=list(EXECUTOR_STRATEGIES),
+        backends=list(BACKENDS),
+        n_lattice_points=n_spec,
+        bitwise_identical_across_executors=True,
+        bitwise_identical_across_backends=True,
+        golden_degenerate_bitwise=True,
+        n_golden_cases=n_golden,
+        uds_matches_flat_single_zone=True,
+        speedup_attribution=attr,
+        makespan_geomean_by_topology=geo,
+        note=("per-axis speedup attribution (geometric-mean makespan "
+              "ratios, other axes held fixed) computed separately per "
+              "machine topology; all 12 lattice points x topologies ran "
+              "bitwise-identically on serial/vmap/sharded executors and "
+              "reference/pallas step backends, the flat-degenerate "
+              "topology reproduced tests/golden_modes.json bitwise, and "
+              "the single-socket uds preset matched a flat single-zone "
+              "machine bitwise"),
+    )
+    merge_bench_sweep({"numa_ablation": record})
+
+    for label in topo_labels:
+        a = attr[label]
+        print(f"# numa_ablation[{label}]: "
+              f"xqueue {a['queue']['xqueue_over_locked_global']:.1f}x, "
+              f"tree {a['barrier']['tree_over_centralized_count']:.2f}x, "
+              f"na_rp {a['balance']['na_rp_over_static_rr']:.3f}x, "
+              f"na_ws {a['balance']['na_ws_over_static_rr']:.3f}x, "
+              f"geomean {geo[label]/1e3:.1f}us")
+    print(f"# numa_ablation: {len(rows)} cells, {n_golden} golden cases "
+          f"bitwise under the degenerate topology")
+    return rows

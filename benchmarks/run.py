@@ -56,6 +56,11 @@ SUITES = {
         desc="full 2x2x3 RuntimeSpec lattice on all executors + per-axis "
              "speedup attribution (BENCH_sweep.json)",
         axes=dict(queue=_Q, barrier=_B, balance=_L)),
+    "numa_ablation": dict(
+        desc="lattice x machine topologies (flat vs dual/quad socket) on "
+             "all executors + both backends; per-topology attribution "
+             "(BENCH_sweep.json, gated by check_regression.py)",
+        axes=dict(queue=_Q, barrier=_B, balance=_L)),
     "bots_speedup": dict(
         desc="Fig. 4/5 — per-mode makespans + XGOMP(TB) speedups",
         axes=dict(queue=_Q, barrier=_B, balance=("static_rr",))),

@@ -13,7 +13,8 @@ on-disk results) → ``executors`` (serial / vmap / sharded) → ``sweep``
 autotuner emitting per-(app, spec) ``experiments/tuned/`` artifacts)."""
 
 from repro.core import backends, balance, barrier, cache, dlb, executors, \
-    messaging, phases, plan, spec, state, sweep, taskgraph, tune, xqueue
+    messaging, phases, plan, spec, state, sweep, taskgraph, topology, tune, \
+    xqueue
 from repro.core.backends import BACKENDS, StepBackend, get_backend
 from repro.core.cache import CODE_VERSION, ResultCache, case_key, graph_digest
 from repro.core.costs import DEFAULT_COSTS, CostModel
@@ -27,13 +28,15 @@ from repro.core.spec import (AXES, BALANCERS, BARRIERS, DLB_BALANCERS,
                              LATTICE, MODE_SPECS, OFF_LADDER, QUEUES,
                              RuntimeSpec, spec_product)
 from repro.core.sweep import CaseSpec, SweepResult, run_cases, run_grid
+from repro.core.topology import (DMAX, PRESETS, MachineTopology, TopoArrays)
 from repro.core.tune import (TunedParams, artifact_path, load_tuned,
                              save_artifact, tune_mode, tune_spec)
 
 __all__ = [
     "backends", "balance", "barrier", "cache", "dlb", "executors",
     "messaging", "phases", "plan", "spec", "state", "sweep", "taskgraph",
-    "tune", "xqueue",
+    "topology", "tune", "xqueue",
+    "MachineTopology", "TopoArrays", "PRESETS", "DMAX",
     "StepBackend", "BACKENDS", "get_backend", "StepOps", "PHASES",
     "RuntimeSpec", "QUEUES", "BARRIERS", "BALANCERS", "AXES",
     "DLB_BALANCERS", "MODE_SPECS", "LATTICE", "OFF_LADDER", "spec_product",

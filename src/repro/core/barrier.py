@@ -60,6 +60,70 @@ def tree_episode(n_workers: int, costs: CostModel) -> BarrierStats:
     return BarrierStats(jnp.int32(t), jnp.int32(n_workers - 1))
 
 
+def tree_episode_topo(n_workers: int, topo, costs: CostModel) -> BarrierStats:
+    """Tree barrier laid out to match a machine topology's socket hierarchy.
+
+    Instead of one flat binary tree over all workers, the gather/release
+    tree follows the hierarchy (the paper lays its barrier out per socket
+    for exactly this reason): each socket's workers gather through an
+    intra-socket binary subtree whose per-level flag hand-off costs
+    ``c_zone``, then the socket roots merge pairwise up a socket-level
+    binary tree whose level cost is the *actual* inter-socket distance of
+    the merging socket blocks (``max`` over the pairs a level joins —
+    adjacent sockets merge cheaper than two-hop ones).  Release mirrors the
+    gather lock-lessly, and the atomic count stays ``W - 1`` — the paper's
+    half-of-centralized bound is layout-independent.
+
+    A single-socket topology degenerates to :func:`tree_episode` exactly
+    (the whole tree is one intra-socket subtree), which is what pins the
+    topology path to ``tests/golden_modes.json``-era numbers.
+
+    ``topo`` is a :class:`~repro.core.topology.MachineTopology` (host-side:
+    the barrier episode is charged once per run, outside the traced step).
+    """
+    W = n_workers
+    zs = topo.zone_size_for(W)                   # workers per socket block
+    s_eff = min(-(-W // zs), topo.n_sockets)     # socket blocks actually used
+    # the gather waits for the *deepest* subtree: when W is not a socket
+    # multiple the last domain absorbs the remainder (domain ids clip to
+    # n_sockets - 1), so it is the widest block
+    width = max(zs, W - (topo.n_sockets - 1) * zs)
+    d_local = math.ceil(math.log2(width)) if width > 1 else 0
+    t = d_local * (costs.c_atomic + costs.c_zone)    # intra-socket gather
+    t += d_local * costs.c_zone                      # intra-socket release
+    n_top = 0
+    span = 1
+    while span < s_eff:                 # socket-level merges, pairwise
+        d_lvl = 0
+        for i in range(0, s_eff, 2 * span):
+            for a in range(i, min(i + span, s_eff)):
+                for b in range(i + span, min(i + 2 * span, s_eff)):
+                    d_lvl = max(d_lvl, int(topo.dist[a][b]))
+        if d_lvl:
+            t += (costs.c_atomic + d_lvl) + d_lvl    # gather + release
+            n_top += 1
+        span *= 2
+    if d_local + n_top == 0:            # W == 1: keep the legacy depth floor
+        t = costs.c_atomic + 2 * costs.c_zone
+    return BarrierStats(jnp.int32(t), jnp.int32(W - 1))
+
+
+def episode_for(barrier_name: str, n_workers: int, costs: CostModel,
+                topology=None) -> BarrierStats:
+    """The barrier episode one case pays, topology included.
+
+    ``centralized_count`` is topology-independent (one contended line is one
+    contended line wherever it is homed).  The tree barrier lays out flat
+    without a topology — or with a *flat* one, keeping pre-topology results
+    bitwise — and hierarchically otherwise (:func:`tree_episode_topo`).
+    """
+    if barrier_name == "centralized_count":
+        return centralized_episode(n_workers, costs)
+    if topology is None or topology.is_flat:
+        return tree_episode(n_workers, costs)
+    return tree_episode_topo(n_workers, topology, costs)
+
+
 def episode_arrays(barrier_id: jax.Array, n_workers: jax.Array,
                    costs: CostModel) -> BarrierStats:
     """Traced-friendly episode selector for the batched sweep engine:

@@ -69,9 +69,13 @@ def case_key(gdigest: str, spec, cfg) -> str:
     ``zone_size`` (not ``n_zones``) enters the key because it is what the
     simulator actually consumes; ``cfg.n_workers`` does not (the engine
     overrides it with the spec's own worker count + padding, and results
-    are padding-invariant by contract).
+    are padding-invariant by contract).  A machine topology enters as its
+    structural identity (socket count + distance matrix + flat flag, not
+    the preset *name*) — and only when one is set: flat cases keep their
+    pre-topology keys, so the store stays warm across the topology
+    feature's introduction.
     """
-    blob = json.dumps(dict(
+    fields = dict(
         v=CODE_VERSION,
         graph=gdigest,
         queue=spec.spec.queue, barrier=spec.spec.barrier,
@@ -83,7 +87,11 @@ def case_key(gdigest: str, spec, cfg) -> str:
         max_steps=cfg.max_steps,
         costs={k: repr(v) for k, v in
                sorted(dataclasses.asdict(cfg.costs).items())},
-    ), sort_keys=True)
+    )
+    topo = getattr(spec, "topology", None)
+    if topo is not None:
+        fields["topology"] = topo.cache_key()
+    blob = json.dumps(fields, sort_keys=True)
     return hashlib.sha256(blob.encode()).hexdigest()
 
 
@@ -138,16 +146,31 @@ class ResultCache:
             raise
 
     @staticmethod
-    def _entry_version(path: str) -> str:
-        """The code-version tag an entry was stamped with — or the
-        sentinels ``unversioned`` (pre-stamp record) / ``unreadable``
-        (no longer parses).  Shared by ``stats`` and ``clear --version``
-        so the reported populations are exactly the prunable ones."""
+    def _entry_meta(path: str) -> tuple:
+        """``(code_version, topology)`` an entry was stamped with.
+
+        Sentinels mirror the PR-3 version-split handling: a record written
+        before stamping existed reports ``unversioned``; one written before
+        the topology stamp existed reports ``pre-topology`` (still a valid
+        flat-machine entry — topology never entered flat keys — so it is
+        *reported*, not rejected); a file that no longer parses reports
+        ``unreadable`` on both axes."""
         try:
             with open(path) as f:
-                return json.load(f).get("code_version", "unversioned")
+                rec = json.load(f)
         except (OSError, ValueError):
-            return "unreadable"
+            return "unreadable", "unreadable"
+        if not isinstance(rec, dict):
+            return "unreadable", "unreadable"
+        return (rec.get("code_version", "unversioned"),
+                rec.get("topology", "pre-topology"))
+
+    @classmethod
+    def _entry_version(cls, path: str) -> str:
+        """The code-version tag an entry was stamped with (see
+        :meth:`_entry_meta`).  Shared by ``stats`` and ``clear --version``
+        so the reported populations are exactly the prunable ones."""
+        return cls._entry_meta(path)[0]
 
     def _entries(self):
         if not os.path.isdir(self.root):
@@ -164,20 +187,26 @@ class ResultCache:
         """Entry counts and sizes, split by the code version that wrote
         each entry — after a ``CODE_VERSION`` bump the split shows how much
         of the store is stale (legacy-keyed entries can never hit again;
-        pre-stamp entries count as ``unversioned``)."""
+        pre-stamp entries count as ``unversioned``) — and by the stamped
+        machine topology (entries written before the topology stamp report
+        under a ``pre-topology`` bucket; they remain valid flat-machine
+        hits, the bucket only records their age)."""
         n = size = 0
         versions: dict = {}
+        topologies: dict = {}
         for path in self._entries():
             n += 1
             try:
                 size += os.path.getsize(path)
             except OSError:
                 pass
-            v = self._entry_version(path)
+            v, topo = self._entry_meta(path)
             versions[v] = versions.get(v, 0) + 1
+            topologies[topo] = topologies.get(topo, 0) + 1
         return dict(root=self.root, entries=n, bytes=size,
                     session_hits=self.hits, session_misses=self.misses,
                     code_version=CODE_VERSION, versions=versions,
+                    topologies=topologies,
                     stale_entries=n - versions.get(CODE_VERSION, 0))
 
     def clear(self, version: Optional[str] = None) -> int:

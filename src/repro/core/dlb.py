@@ -1,7 +1,9 @@
 """NUMA-aware dynamic load balancing policies (paper §IV).
 
 * ``pick_victim`` — conditionally-random victim selection: NUMA-local with
-  probability ``p_local``, NUMA-remote otherwise (never self).
+  probability ``p_local``, NUMA-remote otherwise (never self).  Under a
+  non-flat :mod:`repro.core.topology` the remote choice is weighted
+  inversely with the NUMA distance matrix (near sockets preferred).
 * ``NA-RP`` (redirect push, Alg. 3) — a victim that accepted a thief redirects
   its *newly created* tasks to the thief's queue until ``n_steal`` tasks are
   pushed or the thief's queue fills.  Implemented as per-worker
@@ -41,12 +43,61 @@ def zone_of(w: jax.Array, zone_size: int) -> jax.Array:
     return w // zone_size
 
 
+def remote_weight_table(me: jax.Array, n_workers, zone_size, topo
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Loop-invariant table for the hierarchy-aware remote choice: per
+    (thief, candidate) integer weights *inversely related to domain
+    distance* — the nearest remote domain's workers carry weight
+    ``1 + (d_max - d_near)``, the farthest carry ``1`` (integer weights off
+    ``topo.dist``, so the draw→victim map stays exact).  Depends only on
+    ``me``/``zone_size``/``topo``, never on the PRNG draw, so callers
+    (``phases.thief_phase``) hoist it out of the victim-retry loop.
+
+    Vectorized over the worker lanes: ``me`` is ``(W,)``, the table is
+    ``(W, W)``.  Returns ``(cum_weights, total_weight)``.
+    """
+    W = me.shape[0]
+    j = jnp.arange(W, dtype=jnp.int32)
+    dom_j = jnp.minimum(j // zone_size, topo.n_domains - 1)
+    dom_me = jnp.minimum(me // zone_size, topo.n_domains - 1)
+    d = topo.dist[dom_me[:, None], dom_j[None, :]]             # (W, W)
+    remote = (j[None, :] < n_workers) & (dom_j[None, :] != dom_me[:, None])
+    dmax = jnp.max(jnp.where(remote, d, 0), axis=1, keepdims=True)
+    wgt = jnp.where(remote, dmax - d + 1, 0)                   # (W, W)
+    cum = jnp.cumsum(wgt, axis=1)
+    return cum, cum[:, -1]
+
+
+def _remote_weighted(draw: jax.Array, cum: jax.Array, total: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Sample from a :func:`remote_weight_table`.  ``draw`` is the same
+    non-negative PRNG draw the flat path consumes: the hierarchy changes
+    *where* steal requests go, never how much randomness a step uses.
+    Returns ``(victim, has_remote)``."""
+    W = cum.shape[-1]
+    r = draw[:, None] % jnp.maximum(total[:, None], 1)
+    # victim = first lane whose cumulative weight exceeds r (zero-weight
+    # lanes share their predecessor's cumsum, so they are never selected)
+    victim = jnp.sum((cum <= r).astype(jnp.int32), axis=1)
+    return jnp.minimum(victim, W - 1), total > 0
+
+
 def pick_victim(rng: jax.Array, me: jax.Array, n_workers, zone_size,
-                p_local: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Random victim != me; same zone with probability ``p_local``.
+                p_local: jax.Array, topo=None, remote_tbl=None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Random victim != me; same zone/domain with probability ``p_local``.
 
     ``n_workers`` and ``zone_size`` may be Python ints or traced scalars (the
-    batched sweep engine varies both under one compiled shape).
+    batched sweep engine varies both under one compiled shape).  ``topo``
+    (a :class:`~repro.core.topology.TopoArrays`, optional) makes the choice
+    hierarchy-aware: the local candidate set becomes ``me``'s *clipped NUMA
+    domain* (the last domain absorbs remainder workers when ``n_workers``
+    is not a socket multiple, matching the comm/penalty pricing) and remote
+    victims are weighted inversely with NUMA distance
+    (:func:`remote_weight_table`, hoistable via ``remote_tbl``); flat
+    topologies — and ``topo=None`` — keep the historical uniform choice
+    bitwise (same PRNG consumption either way).  With ``topo`` set,
+    ``me``/``rng`` must be the full ``(W,)`` lane vectors.
 
     Returns (rng', victim). Degenerate topologies (single zone / 1-wide zones)
     fall back to whichever side has candidates.
@@ -65,6 +116,24 @@ def pick_victim(rng: jax.Array, me: jax.Array, n_workers, zone_size,
     remote = jnp.where(off_r >= zbase, off_r + Z, off_r)
     has_local = Z > 1
     has_remote = W > Z
+    if topo is not None:
+        # hierarchical local set = the clipped domain's block [start, end):
+        # identical to the raw zone when W divides evenly, wider for the
+        # last domain otherwise — so same-domain remainder workers can
+        # steal from each other (consistent with _comm/_same_domain)
+        dom_me = jnp.minimum(me // Z, topo.n_domains - 1)
+        start = dom_me * Z
+        end = jnp.where(dom_me == topo.n_domains - 1, W, (dom_me + 1) * Z)
+        size = end - start
+        off_h = draw % jnp.maximum(size - 1, 1)
+        local_h = start + off_h + (off_h >= (me - start)).astype(jnp.int32)
+        if remote_tbl is None:
+            remote_tbl = remote_weight_table(me, W, Z, topo)
+        remote_h, has_remote_h = _remote_weighted(draw, *remote_tbl)
+        local = jnp.where(topo.flat, local, local_h)
+        remote = jnp.where(topo.flat, remote, remote_h)
+        has_local = jnp.where(topo.flat, has_local, size > 1)
+        has_remote = jnp.where(topo.flat, has_remote, has_remote_h)
     use_local = jnp.where(has_local & has_remote, want_local,
                           jnp.asarray(has_local))
     victim = jnp.where(use_local, local, remote).astype(jnp.int32)

@@ -36,6 +36,12 @@ Queue-touching inner kernels are pluggable: every phase takes a
 counter bump — so a backend (:mod:`repro.core.backends`) can swap the
 reference jnp implementations for Pallas kernels without touching phase
 logic.  Backends must be bitwise identical (tests/test_backends.py).
+
+Every cross-worker latency (``_comm``), the thief's victim choice, and the
+memory-bound execution penalty consult the machine topology carried in
+``case.topo`` (:mod:`repro.core.topology`): flat machines keep the
+historical two-level ``c_zone``/``c_numa`` arithmetic bitwise, hierarchical
+machines pay distance-matrix costs.
 """
 
 from __future__ import annotations
@@ -46,6 +52,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dlb, messaging, xqueue
+from repro.core import topology as topology_mod
 from repro.core.costs import CostModel
 from repro.core.state import (CTR, K_SPAWN, NV_CAP, WS_CAP, GraphArrays,
                               SimState, SweepCase)
@@ -104,12 +111,38 @@ def _me(st: SimState) -> jax.Array:
     return jnp.arange(st.s_top.shape[0], dtype=jnp.int32)
 
 
-def _comm(costs: CostModel, a, b, zsz):
+def _comm(costs: CostModel, a, b, case: SweepCase):
+    """Lock-less latency of worker ``a`` touching a line owned by ``b``.
+
+    Flat machine: the historical two-level model (``c_zone`` intra-zone,
+    ``c_numa`` anywhere else).  Non-flat topology: a distance-matrix lookup
+    between the endpoints' NUMA domains — steal requests, queue transfers,
+    and redirected pushes all pay the *actual* inter-socket distance, which
+    is what makes hierarchy-aware balancing measurable.
+    """
+    t = case.topo
+    zsz = case.zone_size
     same = a == b
     same_zone = (a // zsz) == (b // zsz)
+    legacy = jnp.where(same_zone, costs.c_zone, costs.c_numa)
+    hier = t.dist[topology_mod.domain_of(a, zsz, t.n_domains),
+                  topology_mod.domain_of(b, zsz, t.n_domains)]
     return jnp.where(same, costs.c_cache,
-                     jnp.where(same_zone, costs.c_zone,
-                               costs.c_numa)).astype(jnp.int32)
+                     jnp.where(t.flat, legacy, hier)).astype(jnp.int32)
+
+
+def _same_domain(a, b, case: SweepCase):
+    """Do workers ``a`` and ``b`` share a NUMA domain?  Flat machines use
+    the raw zone grid; hierarchical ones the *clipped* domain ids, so
+    remainder workers absorbed into the last socket (when ``n_workers`` is
+    not a socket multiple) classify consistently with ``_comm``'s pricing.
+    """
+    t = case.topo
+    zsz = case.zone_size
+    flat_eq = (a // zsz) == (b // zsz)
+    hier_eq = (topology_mod.domain_of(a, zsz, t.n_domains)
+               == topology_mod.domain_of(b, zsz, t.n_domains))
+    return jnp.where(t.flat, flat_eq, hier_eq)
 
 
 def _bump(ops: StepOps, ctr, name, mask_or_val):
@@ -221,10 +254,6 @@ def spawn_phase(st: SimState, running, *, g: GraphArrays, case: SweepCase,
     me = _me(st)
     m = axis_masks(case)
     n_w = case.n_workers
-    zsz = case.zone_size
-
-    def zone(x):
-        return x // zsz
 
     for _ in range(K_SPAWN):
         active = (st.s_top > 0) & running
@@ -247,7 +276,7 @@ def spawn_phase(st: SimState, running, *, g: GraphArrays, case: SweepCase,
         tgt = jnp.where(use_rp, jnp.maximum(st.rp.tgt, 0), st.rr % n_w)
         cost_x = jnp.where(
             act_x,
-            costs.c_alloc + costs.c_slot + _comm(costs, me, tgt, zsz), 0)
+            costs.c_alloc + costs.c_slot + _comm(costs, me, tgt, case), 0)
 
         clock = st.clock + cost_g + cost_x
         gq = st.g_buf.shape[0]
@@ -266,11 +295,10 @@ def spawn_phase(st: SimState, running, *, g: GraphArrays, case: SweepCase,
         ctr = _bump(ops, st.ctr, "static_push",
                     act_g | (pushed_x & ~use_rp))
         ctr = _bump(ops, ctr, "atomic_ops", act_g)
+        same_d = _same_domain(me, tgt, case)
         ctr = _bump(ops, ctr, "stolen", pushed_x & use_rp)  # redirections
-        ctr = _bump(ops, ctr, "stolen_local",
-                    pushed_x & use_rp & (zone(me) == zone(tgt)))
-        ctr = _bump(ops, ctr, "stolen_remote",
-                    pushed_x & use_rp & (zone(me) != zone(tgt)))
+        ctr = _bump(ops, ctr, "stolen_local", pushed_x & use_rp & same_d)
+        ctr = _bump(ops, ctr, "stolen_remote", pushed_x & use_rp & ~same_d)
         # Alg. 3: stop on quota exhausted or thief queue full
         left = st.rp.left - (pushed_x & use_rp).astype(jnp.int32)
         drop = (use_rp & ~ok) | (left <= 0)
@@ -328,7 +356,6 @@ def dequeue_phase(st: SimState, running, *, case: SweepCase,
     me = _me(st)
     m = axis_masks(case)
     n_w = case.n_workers
-    zsz = case.zone_size
     active_w = me < n_w
     idle_m = (st.s_top == 0) & active_w & running
 
@@ -352,7 +379,7 @@ def dequeue_phase(st: SimState, running, *, case: SweepCase,
     xq, task_x, ts_x, src, found_x, checked = ops.pop_first(
         st.xq, st.deq_rr, idle_x, n_w)
     cost_x = jnp.where(idle_x, checked * costs.c_cache, 0)
-    cost_x = cost_x + jnp.where(found_x, _comm(costs, me, src, zsz), 0)
+    cost_x = cost_x + jnp.where(found_x, _comm(costs, me, src, case), 0)
     deq_rr = st.deq_rr + (found_x & (src != me)).astype(jnp.int32)
 
     task = jnp.where(m.is_locked, task_g, task_x)
@@ -394,6 +421,9 @@ def thief_phase(st: SimState, found, running, *, case: SweepCase,
     # the (batched) loop's per-iteration select overhead never touches
     # the big queue/stack/counter buffers.
     rounds = st.cells.round   # victim-owned; thieves only read it
+    # the (W, W) distance-weight table is draw-independent: built once
+    # here, not per retry iteration
+    remote_tbl = dlb.remote_weight_table(me, n_w, zsz, case.topo)
 
     def cond(carry):
         v = carry[0]
@@ -402,11 +432,12 @@ def thief_phase(st: SimState, found, running, *, case: SweepCase,
     def body(carry):
         v, rng, req_round, req_tid, clock, n_sent = carry
         sm = do_req & (v < params.n_victim)
-        rng, victim = dlb.pick_victim(rng, me, n_w, zsz, params.p_local)
+        rng, victim = dlb.pick_victim(rng, me, n_w, zsz, params.p_local,
+                                      case.topo, remote_tbl=remote_tbl)
         cells, sent = messaging.thief_send(
             messaging.Cells(rounds, req_round, req_tid), me, victim, sm)
-        cost = jnp.where(sm, 2 * _comm(costs, me, victim, zsz), 0)
-        cost = cost + jnp.where(sent, _comm(costs, me, victim, zsz), 0)
+        cost = jnp.where(sm, 2 * _comm(costs, me, victim, case), 0)
+        cost = cost + jnp.where(sent, _comm(costs, me, victim, case), 0)
         return (v + 1, rng, cells.req_round, cells.req_tid, clock + cost,
                 n_sent + sent.astype(jnp.int32))
 
@@ -432,25 +463,21 @@ def victim_phase(st: SimState, found, *, case: SweepCase,
     me = _me(st)
     m = axis_masks(case)
     params = case.params
-    zsz = case.zone_size
-
-    def zone(x):
-        return x // zsz
 
     valid = messaging.victim_valid(st.cells) & found
     thief = jnp.maximum(st.cells.req_tid, 0)
 
-    # NA-WS: bulk transfer to the thief's queue (Alg. 4)
+    # NA-WS: bulk transfer to the thief's queue (Alg. 4) — the per-task
+    # transfer latency below is the topology-aware endpoint distance
     vm_ws = valid & m.is_naws
-    comm_c = _comm(costs, me, thief, zsz)
+    comm_c = _comm(costs, me, thief, case)
     xq, clock, stolen, src_empty, tgt_full = dlb.ws_transfer(
         st.xq, vm_ws, thief, params.n_steal, st.clock, comm_c,
         st.deq_rr, WS_CAP, case.n_workers)
+    same_d = _same_domain(me, thief, case)
     ctr = _bump(ops, st.ctr, "stolen", stolen)
-    ctr = _bump(ops, ctr, "stolen_local",
-                jnp.where(zone(me) == zone(thief), stolen, 0))
-    ctr = _bump(ops, ctr, "stolen_remote",
-                jnp.where(zone(me) != zone(thief), stolen, 0))
+    ctr = _bump(ops, ctr, "stolen_local", jnp.where(same_d, stolen, 0))
+    ctr = _bump(ops, ctr, "stolen_remote", jnp.where(~same_d, stolen, 0))
     ctr = _bump(ops, ctr, "req_has_steal", vm_ws & (stolen > 0))
     ctr = _bump(ops, ctr, "src_empty", src_empty)
     ctr = _bump(ops, ctr, "tgt_full", tgt_full)
@@ -482,31 +509,36 @@ def exec_phase(st: SimState, task, ts, found, *, g: GraphArrays,
     m = axis_masks(case)
     zsz = case.zone_size
 
-    def zone(x):
-        return x // zsz
-
     safe = jnp.where(found, task, 0)
     dur_t = jnp.where(found, g.dur[safe], 0)
     # memory-bound tasks run slower away from their creator's data
     # (paper SVI-B: the locality mechanism behind the DLB gains);
     # mem_bound == 0 keeps the exact integer durations (no f32
-    # round-trip, which would perturb tasks >= 2^24 ns)
+    # round-trip, which would perturb tasks >= 2^24 ns).  Under a
+    # non-flat topology the cross-socket penalty scales with the NUMA
+    # distance (normalized at c_numa = one interconnect hop), so far
+    # socket pairs hurt streaming tasks more than adjacent ones.
     cr0 = st.creator[safe]
+    t = case.topo
+    same_d = _same_domain(cr0, me, case)
+    d_cr = t.dist[topology_mod.domain_of(cr0, zsz, t.n_domains),
+                  topology_mod.domain_of(me, zsz, t.n_domains)]
+    pen_rem = jnp.where(
+        t.flat, costs.exec_remote_penalty,
+        1.0 + (costs.exec_remote_penalty - 1.0)
+        * d_cr.astype(jnp.float32) / jnp.float32(costs.c_numa))
     pen = jnp.where(cr0 == me, 1.0,
-                    jnp.where(zone(cr0) == zone(me),
-                              costs.exec_zone_penalty,
-                              costs.exec_remote_penalty))
+                    jnp.where(same_d, costs.exec_zone_penalty, pen_rem))
     mult = 1.0 + case.mem_bound * (pen - 1.0)
     dur_t = jnp.where(case.mem_bound > 0,
                       (dur_t.astype(jnp.float32) * mult).astype(jnp.int32),
                       dur_t)
     start = jnp.maximum(st.clock, jnp.where(found, ts, 0))
     clock = jnp.where(found, start + dur_t, st.clock)
-    cr = st.creator[safe]
     ctr = _bump(ops, st.ctr, "exec", found)
-    ctr = _bump(ops, ctr, "self", found & (cr == me))
-    ctr = _bump(ops, ctr, "local", found & (cr != me) & (zone(cr) == zone(me)))
-    ctr = _bump(ops, ctr, "remote", found & (zone(cr) != zone(me)))
+    ctr = _bump(ops, ctr, "self", found & (cr0 == me))
+    ctr = _bump(ops, ctr, "local", found & (cr0 != me) & same_d)
+    ctr = _bump(ops, ctr, "remote", found & ~same_d)
     ctr = _bump(ops, ctr, "busy_ns", dur_t)
     st = st._replace(clock=clock, ctr=ctr)
     st = _finish(st, jnp.where(found, task, -1), g)

@@ -21,8 +21,10 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Sequence, Tuple
 
+from repro.core import topology as topology_mod
 from repro.core.spec import DLB_BALANCERS, RuntimeSpec, resolve_spec
 from repro.core.taskgraph import TaskGraph
+from repro.core.topology import MachineTopology
 
 #: legacy alias — balancers whose DLB knobs (n_victim/n_steal/t_interval/
 #: p_local) are live; a chunk mixing knob values under these balancers is
@@ -38,6 +40,13 @@ class CaseSpec:
     (queue × barrier × balance); the legacy string ``mode=`` keyword still
     works but emits a ``DeprecationWarning``.  Reading ``.mode`` returns the
     legacy ladder name when the spec is on-ladder, else the spec slug.
+
+    ``topology`` names the simulated machine — a
+    :class:`~repro.core.topology.MachineTopology`, a preset name from
+    ``topology.PRESETS``, or ``None`` for the historical flat machine
+    (``n_zones`` equal zones, bitwise identical to the pre-topology
+    engine).  With a topology set, its sockets *are* the zones:
+    ``n_zones`` is ignored and ``zone_size`` derives from the socket count.
     """
     spec: RuntimeSpec = RuntimeSpec()
     n_workers: int = 32
@@ -48,6 +57,7 @@ class CaseSpec:
     t_interval: int = 100
     p_local: float = 1.0
     graph: int = 0          # index into the graphs list passed to run_cases
+    topology: MachineTopology | None = None
 
     # hand-written so the deprecated ``mode=`` keyword stays an init-only
     # argument without becoming a field (which would break eq/hash and
@@ -56,6 +66,7 @@ class CaseSpec:
                  n_workers: int = 32, n_zones: int = 4, seed: int = 0,
                  n_victim: int = 4, n_steal: int = 8, t_interval: int = 100,
                  p_local: float = 1.0, graph: int = 0,
+                 topology: MachineTopology | str | None = None,
                  mode: str | RuntimeSpec | None = None):
         set_ = object.__setattr__      # frozen dataclass
         set_(self, "spec", resolve_spec(spec, mode, where="CaseSpec"))
@@ -67,6 +78,7 @@ class CaseSpec:
         set_(self, "t_interval", t_interval)
         set_(self, "p_local", p_local)
         set_(self, "graph", graph)
+        set_(self, "topology", topology_mod.resolve(topology))
 
     @property
     def mode(self) -> str:
@@ -75,6 +87,8 @@ class CaseSpec:
 
     @property
     def zone_size(self) -> int:
+        if self.topology is not None:
+            return self.topology.zone_size_for(self.n_workers)
         return max(self.n_workers // self.n_zones, 1)
 
     @property
@@ -148,8 +162,13 @@ def build_plan(graphs: Sequence[TaskGraph], specs: Sequence[CaseSpec],
     gq_cap = (t_pad + 2
               if any(s.spec.queue == "locked_global" for s in specs) else 4)
 
+    # topology is traced like the DLB knobs (chunks may mix topologies under
+    # one compiled shape) but clusters in the sort so vmapped chunks stay
+    # machine-homogeneous where possible
     order = sorted(range(len(specs)), key=lambda i: (
-        specs[i].spec.axis_ids, specs[i].graph, specs[i].n_steal,
+        specs[i].spec.axis_ids,
+        "" if specs[i].topology is None else specs[i].topology.sort_key,
+        specs[i].graph, specs[i].n_steal,
         specs[i].n_victim, specs[i].t_interval, specs[i].p_local,
         specs[i].seed))
     groups: List[List[int]] = []

@@ -70,6 +70,7 @@ import numpy as np
 
 from repro.core import backends as backends_mod
 from repro.core import barrier as barrier_mod
+from repro.core import topology as topology_mod
 from repro.core.spec import MODE_SPECS, RuntimeSpec, resolve_spec
 from repro.core.state import (CTR, CTR_NAMES, K_SPAWN, NC, NV_CAP,  # noqa: F401
                               WS_CAP, GraphArrays, Params, SimConfig,
@@ -135,18 +136,23 @@ _run_cached = jax.jit(_run_jit, static_argnums=(0, 1))
 
 def run_schedule(graph: TaskGraph, mode: str | RuntimeSpec | None = None,
                  params: Params | None = None, cfg: SimConfig | None = None,
-                 seed: int = 0, *, spec: RuntimeSpec | str | None = None
-                 ) -> SimResult:
+                 seed: int = 0, *, spec: RuntimeSpec | str | None = None,
+                 topology=None) -> SimResult:
     """Simulate scheduling ``graph`` under one runtime configuration.
 
     ``spec`` is the canonical way to name the configuration (a
     :class:`RuntimeSpec` lattice point); the legacy string ``mode=`` still
     works but emits a ``DeprecationWarning``.  Default is the SLB baseline
     (XQueue + tree barrier + static round-robin, the old ``"xgomptb"``).
-    ``cfg.backend`` picks the step backend (``reference`` / ``pallas``,
-    bitwise identical).  Returns makespan + the paper's §V counters.
+    ``topology`` names the simulated machine (a
+    :class:`~repro.core.topology.MachineTopology` or preset name; ``None``
+    = the flat ``cfg.n_zones`` machine, bitwise-identical to the
+    pre-topology engine).  ``cfg.backend`` picks the step backend
+    (``reference`` / ``pallas``, bitwise identical).  Returns makespan +
+    the paper's §V counters.
     """
     rspec = resolve_spec(spec, mode, where="run_schedule")
+    topo = topology_mod.resolve(topology)
     cfg = cfg or SimConfig()
     # resolve the backend (None -> env -> reference) *before* the jit
     # dispatch so the compiled-function cache keys on the concrete name
@@ -155,15 +161,15 @@ def run_schedule(graph: TaskGraph, mode: str | RuntimeSpec | None = None,
     params = params or make_params()
     gq_cap = graph.n_tasks + 2 if rspec.queue == "locked_global" else 4
     W = cfg.n_workers
-    case = make_case(rspec, W, max(W // cfg.n_zones, 1), seed,
-                     round(float(graph.mem_bound), 3), params)
+    zone_size = (topo.zone_size_for(W) if topo is not None
+                 else max(W // cfg.n_zones, 1))
+    case = make_case(rspec, W, zone_size, seed,
+                     round(float(graph.mem_bound), 3), params,
+                     topology=topo)
     st = jax.block_until_ready(
         _run_cached(cfg, gq_cap, graph_arrays(graph), case))
 
-    if rspec.barrier == "centralized_count":
-        episode = barrier_mod.centralized_episode(W, cfg.costs)
-    else:
-        episode = barrier_mod.tree_episode(W, cfg.costs)
+    episode = barrier_mod.episode_for(rspec.barrier, W, cfg.costs, topo)
     ctr = np.asarray(st.ctr)
     counters = {n: int(ctr[:, i].sum()) for i, n in enumerate(CTR_NAMES)}
     counters["atomic_ops"] += int(episode.atomic_ops)

@@ -24,9 +24,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dlb, messaging, xqueue
+from repro.core import topology as topology_mod
 from repro.core.costs import DEFAULT_COSTS, CostModel
 from repro.core.spec import MODE_SPECS, RuntimeSpec
 from repro.core.taskgraph import TaskGraph
+from repro.core.topology import MachineTopology, TopoArrays
 
 # counters (paper §V)
 CTR_NAMES = (
@@ -71,25 +73,33 @@ class SweepCase(NamedTuple):
     barrier_id: jax.Array  # int32 index into spec.BARRIERS
     balance_id: jax.Array  # int32 index into spec.BALANCERS
     n_workers: jax.Array   # int32 active workers (≤ the padded static width)
-    zone_size: jax.Array   # int32 workers per NUMA zone
+    zone_size: jax.Array   # int32 workers per NUMA zone / socket
     seed: jax.Array        # int32 PRNG seed
     mem_bound: jax.Array   # float32 memory-bound fraction of task runtime
     params: Params
+    topo: TopoArrays       # machine topology (flat degenerate by default)
 
 
 def make_case(spec: RuntimeSpec | str | int, n_workers: int, zone_size: int,
               seed: int = 0, mem_bound: float = 0.0,
-              params: Params | None = None) -> SweepCase:
+              params: Params | None = None,
+              topology: MachineTopology | str | None = None) -> SweepCase:
     """Lift a runtime configuration to traced scalars.
 
     ``spec`` accepts a :class:`RuntimeSpec`, a legacy mode name or spec
     slug, or a legacy integer mode id (silently — the deprecation for mode
     strings fires at the public entry points, not in this plumbing).
+    ``topology`` accepts a :class:`~repro.core.topology.MachineTopology`
+    or preset name; ``None`` is the flat degenerate machine (the legacy
+    two-level zone model, bitwise identical to the pre-topology engine).
+    Callers passing a topology are expected to pass the matching
+    ``zone_size`` (``topology.zone_size_for(n_workers)``).
     """
     if isinstance(spec, int):
         spec = MODE_SPECS[tuple(MODE_SPECS)[spec]]
     else:
         spec = RuntimeSpec.coerce(spec)
+    topo = topology_mod.resolve(topology)
     return SweepCase(
         queue_id=jnp.int32(spec.queue_id),
         barrier_id=jnp.int32(spec.barrier_id),
@@ -97,7 +107,9 @@ def make_case(spec: RuntimeSpec | str | int, n_workers: int, zone_size: int,
         n_workers=jnp.int32(n_workers),
         zone_size=jnp.int32(zone_size), seed=jnp.int32(seed),
         mem_bound=jnp.float32(mem_bound),
-        params=params if params is not None else make_params())
+        params=params if params is not None else make_params(),
+        topo=(topology_mod.degenerate_arrays() if topo is None
+              else topo.arrays()))
 
 
 class GraphArrays(NamedTuple):

@@ -50,6 +50,7 @@ import numpy as np
 from repro.core import backends as backends_mod
 from repro.core import barrier as barrier_mod
 from repro.core import cache as cache_mod
+from repro.core import topology as topology_mod
 from repro.core.executors import STRATEGIES, ExecContext, select_executor
 from repro.core.plan import CaseSpec, build_plan
 from repro.core.scheduler import CTR_NAMES, SimConfig, graph_arrays
@@ -97,6 +98,7 @@ class SweepResult:
             app=self.graph_names[s.graph], mode=s.mode,
             queue=s.spec.queue, barrier=s.spec.barrier,
             balance=s.spec.balance,
+            topology=topology_mod.label(s.topology),
             n_workers=s.n_workers, seed=s.seed, n_victim=s.n_victim,
             n_steal=s.n_steal, t_interval=s.t_interval, p_local=s.p_local,
             time_ns=int(self.time_ns[i]), completed=bool(self.completed[i]),
@@ -192,17 +194,18 @@ def run_cases(graphs: Sequence[TaskGraph] | TaskGraph,
                         counters={n: int(ctr_sum[i][k])
                                   for k, n in enumerate(CTR_NAMES)},
                         n_done=int(n_done[i]), overflow=bool(overflow[i]),
-                        step_i=int(step_i[i])))
+                        step_i=int(step_i[i]),
+                        topology=topology_mod.label(specs[i].topology)))
 
-    # barrier episode per case (host-side: the barrier axis and W are known
-    # per spec, matching run_schedule's accounting bit-for-bit)
+    # barrier episode per case (host-side: the barrier axis, W, and the
+    # machine topology are known per spec, matching run_schedule's
+    # accounting bit-for-bit; a non-flat topology lays the tree barrier
+    # out along the socket hierarchy — see barrier.tree_episode_topo)
     ep_t = np.zeros(B, np.int64)
     ep_a = np.zeros(B, np.int64)
     for i, s in enumerate(specs):
-        if s.spec.barrier == "centralized_count":
-            ep = barrier_mod.centralized_episode(s.n_workers, cfg.costs)
-        else:
-            ep = barrier_mod.tree_episode(s.n_workers, cfg.costs)
+        ep = barrier_mod.episode_for(s.spec.barrier, s.n_workers, cfg.costs,
+                                     s.topology)
         ep_t[i] = int(ep.time_ns)
         ep_a[i] = int(ep.atomic_ops)
 
@@ -232,8 +235,10 @@ def run_grid(graphs: Sequence[TaskGraph] | TaskGraph,
              cache=None, backend: str | None = None, *,
              queues: Sequence[str] | None = None,
              barriers: Sequence[str] | None = None,
-             balancers: Sequence[str] | None = None) -> SweepResult:
-    """Cartesian sweep over the spec lattice × workers × seeds × DLB knobs.
+             balancers: Sequence[str] | None = None,
+             topologies: Sequence = (None,)) -> SweepResult:
+    """Cartesian sweep over the spec lattice × machine × workers × seeds ×
+    DLB knobs.
 
     The runtime axes are named per :mod:`repro.core.spec`:
     ``queues`` × ``barriers`` × ``balancers`` (each defaulting to the SLB
@@ -241,6 +246,15 @@ def run_grid(graphs: Sequence[TaskGraph] | TaskGraph,
 
         run_grid(graphs, queues=spec.QUEUES, barriers=spec.BARRIERS,
                  balancers=spec.BALANCERS)
+
+    ``topologies`` makes the simulated machine a grid axis like every other
+    knob: entries are :class:`~repro.core.topology.MachineTopology`
+    instances, preset names (``"uds"`` / ``"dual_socket_24"`` /
+    ``"quad_socket_48"``), or ``None`` for the historical flat machine
+    (axis label ``"flat"``), e.g.::
+
+        run_grid(graphs, balancers=spec.BALANCERS,
+                 topologies=(None, "dual_socket_24", "quad_socket_48"))
 
     The legacy ``modes=`` argument (a non-cartesian list of ladder names)
     still works — string entries emit a ``DeprecationWarning`` and the grid
@@ -288,14 +302,19 @@ def run_grid(graphs: Sequence[TaskGraph] | TaskGraph,
         spec_list = spec_product(lattice["queue"], lattice["barrier"],
                                  lattice["balance"])
         spec_axes = lattice
+    topo_list = tuple(topology_mod.resolve(t) for t in topologies)
+    assert topo_list, "empty topology axis in run_grid"
     axes = dict(app=tuple(g.name for g in graphs), **spec_axes,
+                topology=tuple(topology_mod.label(t) for t in topo_list),
                 n_workers=tuple(n_workers), seed=tuple(seeds),
                 n_victim=tuple(n_victim), n_steal=tuple(n_steal),
                 t_interval=tuple(t_interval), p_local=tuple(p_local))
     specs = [
         CaseSpec(spec=sp, n_workers=w, n_zones=zones, seed=sd, n_victim=nv,
-                 n_steal=ns, t_interval=ti, p_local=pl, graph=gi)
-        for gi in range(len(graphs)) for sp in spec_list for w in n_workers
+                 n_steal=ns, t_interval=ti, p_local=pl, graph=gi,
+                 topology=tp)
+        for gi in range(len(graphs)) for sp in spec_list
+        for tp in topo_list for w in n_workers
         for sd in seeds for nv in n_victim for ns in n_steal
         for ti in t_interval for pl in p_local
     ]

@@ -1,0 +1,224 @@
+"""Machine-topology model: hierarchical NUMA domains as sweepable data.
+
+The paper's central claim is about *multi-socket* machines — NUMA-aware
+balancing wins precisely because crossing a socket boundary costs more than
+staying local — yet the simulator historically modeled a flat worker array
+with one scalar ``zone_size`` and a single cross-zone latency.  This module
+makes the machine itself first-class and sweepable:
+
+* :class:`MachineTopology` — the host-side description: ``n_sockets`` ×
+  ``cores_per_socket`` plus a symmetric NUMA *distance matrix* (ns per
+  lock-less remote-line touch, the same unit as ``CostModel.c_numa``).
+  Hashable and JSON-able, so it rides in :class:`~repro.core.plan.CaseSpec`,
+  sorts into plan chunks, and keys the result cache.
+* :class:`TopoArrays` — the traced pytree the simulator consumes, carried in
+  ``SweepCase``: the padded ``(DMAX, DMAX)`` distance matrix, the live
+  domain count, and a ``flat`` flag.  Every field is an array, so a batch of
+  cases with *different* topologies vmaps/shards like any other knob.
+
+Backward-compatibility contract (the ``flat`` flag): the historical flat
+model — two latency levels, ``c_zone`` intra-zone / ``c_numa`` inter-zone,
+victim choice NUMA-local with probability ``p_local`` and uniform among all
+remote workers otherwise, a ``ceil(log2 W)``-level tree barrier — is the
+*degenerate point* of this model.  Cases built without a topology (and
+topologies built via :meth:`MachineTopology.flat`) set ``flat=True``, which
+routes every consumer (``phases.comm_cost``, ``dlb.pick_victim``,
+``barrier.episode_for``) through arithmetic bitwise identical to the
+pre-topology code — tests/test_topology.py and tests/test_golden_modes.py
+hold that line.  Non-flat topologies switch the same call sites to the
+hierarchy: communication and steal/transfer latencies are distance-matrix
+lookups between the endpoints' domains, remote victims are sampled with
+probability inversely related to domain distance, and the tree barrier's
+layout follows the socket hierarchy (intra-socket subtrees, then
+socket-level merges priced at the actual inter-socket distance).
+
+Workers map onto domains by index blocks: worker ``w`` lives in domain
+``min(w // zone_size, n_domains - 1)`` with ``zone_size = max(n_workers //
+n_sockets, 1)`` — the same arithmetic the flat model used for zones, so a
+topology's sockets *are* the zones of every other subsystem (counters,
+locality penalties, messaging costs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costs import DEFAULT_COSTS
+
+#: static padded width of the traced distance matrix — fixes the compiled
+#: shape so one vmapped batch can mix topologies of any socket count ≤ DMAX
+DMAX = 8
+
+
+class TopoArrays(NamedTuple):
+    """The traced view of a topology (one ``SweepCase`` field).
+
+    ``dist`` is padded to ``(DMAX, DMAX)``; only the leading ``n_domains``
+    rows/columns are ever read (consumers clip domain ids into range).
+    ``flat`` selects the legacy two-level arithmetic — see the module
+    docstring's compatibility contract.
+    """
+    n_domains: jax.Array    # int32 scalar — live rows/cols of ``dist``
+    dist: jax.Array         # (DMAX, DMAX) int32 — inter-domain latency, ns
+    flat: jax.Array         # bool scalar — legacy flat-model semantics
+
+
+def domain_of(w: jax.Array, zone_size, n_domains) -> jax.Array:
+    """Domain id of worker ``w`` (all arguments may be traced).  The clip
+    keeps padded worker lanes addressable inside the padded matrix."""
+    return jnp.minimum(w // zone_size, n_domains - 1).astype(jnp.int32)
+
+
+def _legacy_matrix(n: int) -> Tuple[Tuple[int, ...], ...]:
+    """The flat model's two-level matrix: c_zone intra, c_numa inter."""
+    c = DEFAULT_COSTS
+    return tuple(tuple(c.c_zone if i == j else c.c_numa for j in range(n))
+                 for i in range(n))
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineTopology:
+    """Host-side machine description: sockets × cores and NUMA distances.
+
+    ``dist`` is a symmetric ``n_sockets``-square tuple-of-tuples in
+    nanoseconds — the lock-less latency of touching a cache line homed in
+    the other socket (diagonal: intra-socket cross-core, i.e. the flat
+    model's ``c_zone``).  ``cores_per_socket`` records the modeled
+    machine's natural size (``natural_workers``); simulated cases may run
+    any worker count, splitting workers evenly over sockets.
+    """
+    name: str
+    n_sockets: int
+    cores_per_socket: int
+    dist: Tuple[Tuple[int, ...], ...]
+    is_flat: bool = False
+
+    def __post_init__(self):
+        assert 1 <= self.n_sockets <= DMAX, \
+            f"{self.name}: n_sockets must be in [1, {DMAX}]"
+        assert self.cores_per_socket >= 1, self.name
+        d = self.dist
+        assert len(d) == self.n_sockets and \
+            all(len(r) == self.n_sockets for r in d), \
+            f"{self.name}: dist must be {self.n_sockets}-square"
+        for i in range(self.n_sockets):
+            for j in range(self.n_sockets):
+                assert int(d[i][j]) > 0, f"{self.name}: dist[{i}][{j}] <= 0"
+                assert d[i][j] == d[j][i], \
+                    f"{self.name}: dist must be symmetric at ({i},{j})"
+                if i != j:
+                    assert d[i][j] > d[i][i], \
+                        f"{self.name}: off-diagonal dist[{i}][{j}] must " \
+                        f"exceed the intra-socket diagonal"
+
+    # --- derived sizes ---
+    @property
+    def natural_workers(self) -> int:
+        """The modeled machine's core count (benchmarks' full-scale W)."""
+        return self.n_sockets * self.cores_per_socket
+
+    def zone_size_for(self, n_workers: int) -> int:
+        """Workers per socket when ``n_workers`` spread over the sockets —
+        the same block arithmetic the flat model used for zones."""
+        return max(n_workers // self.n_sockets, 1)
+
+    # --- identity (cache keys, plan sort, artifacts) ---
+    def cache_key(self) -> dict:
+        """JSON-able identity for the result-cache key: everything results
+        depend on — the matrix, socket count, and flat flag — and nothing
+        they don't (the *name* is presentation, like a graph's)."""
+        return dict(n_sockets=self.n_sockets,
+                    dist=[list(r) for r in self.dist],
+                    flat=bool(self.is_flat))
+
+    @property
+    def sort_key(self) -> str:
+        """Stable string for plan-order clustering (None sorts first as '')."""
+        return f"{self.n_sockets:02d}:{self.name}:{self.dist}"
+
+    def asdict(self) -> dict:
+        return dict(name=self.name, n_sockets=self.n_sockets,
+                    cores_per_socket=self.cores_per_socket,
+                    dist=[list(r) for r in self.dist],
+                    is_flat=bool(self.is_flat))
+
+    # --- traced view ---
+    def arrays(self) -> TopoArrays:
+        """Lift to the traced ``(DMAX, DMAX)``-padded pytree.  Padding
+        rows/cols repeat the largest distance; they are unreachable (domain
+        ids clip to ``n_domains - 1``) so the fill never matters."""
+        fill = max(max(r) for r in self.dist)
+        d = np.full((DMAX, DMAX), fill, np.int32)
+        d[:self.n_sockets, :self.n_sockets] = np.asarray(self.dist, np.int32)
+        return TopoArrays(n_domains=jnp.int32(self.n_sockets),
+                          dist=jnp.asarray(d),
+                          flat=jnp.asarray(bool(self.is_flat)))
+
+    # --- constructors ---
+    @classmethod
+    def flat(cls, n_zones: int, name: Optional[str] = None
+             ) -> "MachineTopology":
+        """The degenerate topology mirroring the flat model's ``n_zones``
+        zone grid — bitwise identical to running with no topology at all
+        (tests/test_topology.py asserts it)."""
+        return cls(name=name or f"flat{n_zones}", n_sockets=n_zones,
+                   cores_per_socket=1, dist=_legacy_matrix(n_zones),
+                   is_flat=True)
+
+
+#: TopoArrays for cases built without a topology: the flat model.  The
+#: matrix content is never read on the flat path (consumers use the legacy
+#: CostModel constants directly), only the shape must be right.
+def degenerate_arrays() -> TopoArrays:
+    return TopoArrays(n_domains=jnp.int32(1),
+                      dist=jnp.asarray(np.full((DMAX, DMAX),
+                                               DEFAULT_COSTS.c_numa,
+                                               np.int32)),
+                      flat=jnp.asarray(True))
+
+
+#: canned presets matching the paper's evaluation machines (§V): a
+#: single-socket workstation, a dual-socket Skylake-SP-class node, and a
+#: quad-socket node where the interconnect is two hops between far socket
+#: pairs.  Distances follow the cost model's published-figure calibration
+#: (c_zone=30 intra-socket, c_numa=100 one QPI/UPI hop, 160 two hops).
+PRESETS = {
+    "uds": MachineTopology(
+        name="uds", n_sockets=1, cores_per_socket=48,
+        dist=((30,),)),
+    "dual_socket_24": MachineTopology(
+        name="dual_socket_24", n_sockets=2, cores_per_socket=12,
+        dist=((30, 100),
+              (100, 30))),
+    "quad_socket_48": MachineTopology(
+        name="quad_socket_48", n_sockets=4, cores_per_socket=12,
+        dist=((30, 100, 160, 160),
+              (100, 30, 160, 160),
+              (160, 160, 30, 100),
+              (160, 160, 100, 30))),
+}
+
+
+def resolve(topology) -> Optional[MachineTopology]:
+    """Normalize a ``topology=`` argument: ``None`` (flat model), a preset
+    name from :data:`PRESETS`, or a :class:`MachineTopology` instance."""
+    if topology is None or isinstance(topology, MachineTopology):
+        return topology
+    assert isinstance(topology, str), topology
+    try:
+        return PRESETS[topology]
+    except KeyError:
+        raise ValueError(
+            f"unknown topology preset {topology!r}; available: "
+            f"{sorted(PRESETS)} (or pass a MachineTopology)") from None
+
+
+def label(topology) -> str:
+    """Axis/row label: the preset name, or ``flat`` for no topology."""
+    t = resolve(topology)
+    return "flat" if t is None else t.name

@@ -30,6 +30,7 @@ import json
 import os
 from typing import Dict, Iterable, Optional, Sequence
 
+from repro.core import topology as topology_mod
 from repro.core.cache import CODE_VERSION
 from repro.core.plan import CaseSpec
 from repro.core.scheduler import SimConfig
@@ -38,6 +39,17 @@ from repro.core.sweep import run_cases
 from repro.core.taskgraph import TaskGraph
 
 DEFAULT_TUNED_DIR = os.path.join("experiments", "tuned")
+
+
+def _resolve_topology(topology):
+    """Normalize a ``topology=`` argument for artifact slotting: flat
+    topologies are bitwise-identical to the no-topology machine, so they
+    collapse onto the historical (topology-free) slot — a result tuned
+    under ``MachineTopology.flat(n)`` stays addressable by the flat
+    engine's lookup and vice versa."""
+    t = topology_mod.resolve(topology)
+    return None if t is not None and t.is_flat else t
+
 
 #: refinement ladders — the per-knob positions the search can land on.
 #: Bounds follow the simulator's static caps (NV_CAP=24, WS_CAP=32) and the
@@ -86,18 +98,23 @@ def tune_spec(graph: TaskGraph, spec: RuntimeSpec | str, cfg: SimConfig, *,
               seeds: Sequence[int] = (0,), rounds: int = 2,
               survivors: int = 4, coarse: Optional[dict] = None,
               extra: Sequence[TunedParams] = (), cache=None,
-              strategy: str = "auto", chunk_size: int = 64) -> dict:
+              strategy: str = "auto", chunk_size: int = 64,
+              topology=None) -> dict:
     """Search the DLB knobs for one (graph, spec); returns the best point.
 
     ``spec`` must sit on a DLB balancer (na_rp / na_ws) — the knobs are
     dead otherwise; any queue/barrier combination is tunable, including
-    off-ladder ones.  ``extra`` configurations join rung 0 — seeding the
-    hand-tuned reference guarantees the result matches or beats it under
-    the same seeds.  Returns ``dict(params, makespan_ns, n_configs,
-    n_sims, seeds)``.
+    off-ladder ones.  ``topology`` tunes against a specific machine
+    (:class:`~repro.core.topology.MachineTopology` or preset name) — the
+    best knobs on a quad-socket machine differ from the flat default's, so
+    artifacts are slotted per topology too.  ``extra`` configurations join
+    rung 0 — seeding the hand-tuned reference guarantees the result matches
+    or beats it under the same seeds.  Returns ``dict(params, makespan_ns,
+    n_configs, n_sims, seeds)``.
     """
     spec = RuntimeSpec.coerce(spec)
     assert spec.balance in DLB_BALANCERS, spec
+    topology = _resolve_topology(topology)
     coarse = coarse or COARSE
     seeds = tuple(seeds)
     scores: Dict[TunedParams, float] = {}
@@ -111,7 +128,7 @@ def tune_spec(graph: TaskGraph, spec: RuntimeSpec | str, cfg: SimConfig, *,
         specs = [CaseSpec(spec=spec, n_workers=cfg.n_workers,
                           n_zones=cfg.n_zones, seed=sd, n_victim=p.n_victim,
                           n_steal=p.n_steal, t_interval=p.t_interval,
-                          p_local=p.p_local)
+                          p_local=p.p_local, topology=topology)
                  for p in todo for sd in seeds]
         res = run_cases(graph, specs, cfg=cfg, cache=cache,
                         strategy=strategy, chunk_size=chunk_size)
@@ -163,29 +180,36 @@ def sim_signature(cfg: SimConfig) -> str:
 
 
 def artifact_path(app: str, spec: RuntimeSpec | str, smoke: bool,
-                  tuned_dir: str = DEFAULT_TUNED_DIR) -> str:
+                  tuned_dir: str = DEFAULT_TUNED_DIR,
+                  topology=None) -> str:
     """``<tuned_dir>/<smoke|full>/<app>__<spec-slug>.json`` — one slot per
     (scale, app, lattice point), so tuning one spec or scale never clobbers
-    another's committed artifact."""
+    another's committed artifact.  A non-flat topology appends
+    ``@<topology-name>`` to the slug (per-machine slots); flat/None keeps
+    the historical filename, so pre-topology artifacts stay addressable."""
     spec = RuntimeSpec.coerce(spec)
+    topology = _resolve_topology(topology)
+    suffix = "" if topology is None else f"@{topology.name}"
     return os.path.join(tuned_dir, "smoke" if smoke else "full",
-                        f"{app}__{spec.slug}.json")
+                        f"{app}__{spec.slug}{suffix}.json")
 
 
 def save_artifact(app: str, spec: RuntimeSpec | str, result: dict,
                   cfg: SimConfig, *, smoke: bool,
                   slb_ns: Optional[int] = None,
                   ref: Optional[dict] = None,
-                  tuned_dir: str = DEFAULT_TUNED_DIR) -> str:
-    """Write one (app, spec) artifact (see :func:`artifact_path`).
+                  tuned_dir: str = DEFAULT_TUNED_DIR,
+                  topology=None) -> str:
+    """Write one (app, spec[, topology]) artifact (see :func:`artifact_path`).
 
     ``result`` is :func:`tune_spec`'s return value.  The artifact records
-    the spec axes, the simulated machine (worker/zone counts, step budget)
-    and the smoke flag so consumers only apply parameters tuned at *their*
-    scale and lattice point, plus the hand-tuned reference comparison when
-    provided.
+    the spec axes, the simulated machine (worker/zone counts, machine
+    topology, step budget) and the smoke flag so consumers only apply
+    parameters tuned at *their* scale, lattice point, and machine, plus
+    the hand-tuned reference comparison when provided.
     """
     spec = RuntimeSpec.coerce(spec)
+    topology = _resolve_topology(topology)
     rec = dict(
         app=app, spec=spec.asdict(), spec_slug=spec.slug,
         smoke=bool(smoke), code_version=CODE_VERSION,
@@ -197,11 +221,13 @@ def save_artifact(app: str, spec: RuntimeSpec | str, result: dict,
         n_sims=int(result["n_sims"]),
         seeds=list(result["seeds"]),
     )
+    if topology is not None:
+        rec["topology"] = topology.asdict()
     if slb_ns is not None:
         rec["slb_ns"] = int(slb_ns)
     if ref is not None:
         rec["ref"] = ref
-    path = artifact_path(app, spec, smoke, tuned_dir)
+    path = artifact_path(app, spec, smoke, tuned_dir, topology=topology)
     os.makedirs(os.path.dirname(path), exist_ok=True)
     with open(path, "w") as f:
         json.dump(rec, f, indent=1, sort_keys=True)
@@ -214,18 +240,21 @@ def load_tuned(app: str, spec: RuntimeSpec | str, *, smoke: bool,
                n_workers: Optional[int] = None,
                n_zones: Optional[int] = None,
                max_steps: Optional[int] = None,
-               tuned_dir: str = DEFAULT_TUNED_DIR) -> Optional[dict]:
-    """Load the (app, spec) artifact if it matches the requested machine.
+               tuned_dir: str = DEFAULT_TUNED_DIR,
+               topology=None) -> Optional[dict]:
+    """Load the (app, spec[, topology]) artifact if it matches the
+    requested machine.
 
     Passing ``cfg`` checks the full simulation scale: worker count, zone
     topology, and the physics signature (queue/stack caps, step budget,
     cost model).  Returns the artifact dict, or None when absent,
-    unreadable, tuned at a different scale or lattice point, or tuned
-    against older simulator semantics (code-version mismatch) — callers
-    then fall back to their static tables.
+    unreadable, tuned at a different scale, lattice point, or machine
+    topology, or tuned against older simulator semantics (code-version
+    mismatch) — callers then fall back to their static tables.
     """
     spec = RuntimeSpec.coerce(spec)
-    path = artifact_path(app, spec, smoke, tuned_dir)
+    topology = _resolve_topology(topology)
+    path = artifact_path(app, spec, smoke, tuned_dir, topology=topology)
     try:
         with open(path) as f:
             rec = json.load(f)
@@ -236,6 +265,9 @@ def load_tuned(app: str, spec: RuntimeSpec | str, *, smoke: bool,
     if bool(rec.get("smoke")) != bool(smoke):
         return None
     if rec.get("spec") != spec.asdict():
+        return None
+    want_topo = None if topology is None else topology.asdict()
+    if rec.get("topology") != want_topo:
         return None
     if cfg is not None:
         if rec.get("n_workers") != cfg.n_workers:

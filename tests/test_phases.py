@@ -70,13 +70,18 @@ def _advance(case, st, k_steps):
 
 
 def check_phases_padded_inert(spec: RuntimeSpec, n_workers: int, seed: int,
-                              k_steps: int):
+                              k_steps: int, topology=None):
     """Shared checker: advance ``k_steps`` composed steps, then apply each
-    phase once and assert the padded lanes never move."""
-    zone = max(n_workers // 2, 1)
+    phase once and assert the padded lanes never move.  ``topology`` runs
+    the same check on a hierarchical machine (tests/test_topology.py
+    sweeps it over random socket counts)."""
+    if topology is not None:
+        zone = topology.zone_size_for(n_workers)
+    else:
+        zone = max(n_workers // 2, 1)
     case = make_case(spec, n_workers, zone, seed=seed,
                      params=make_params(n_victim=2, n_steal=4, t_interval=5,
-                                        p_local=0.7))
+                                        p_local=0.7), topology=topology)
     st = init_state(GARR, W, CFG.stack_cap, CFG.queue_cap, 4, case.seed)
     st = _advance(case, st, jnp.int32(k_steps))
     running = (st.n_done < GARR.n_tasks) & (st.step_i < CFG.max_steps) \

@@ -85,7 +85,8 @@ def test_axis_values_match_run_py_registry():
     off = bench_run.parse_spec_filter("queue=locked_global,balance=na_ws")
     only_lattice = [n for n, info in bench_run.SUITES.items()
                     if bench_run.spec_covers(info["axes"], off)]
-    assert only_lattice == ["ablation_lattice"]
+    # only the full-lattice suites reach off-ladder combos
+    assert only_lattice == ["ablation_lattice", "numa_ablation"]
 
 
 def test_invalid_axis_values_rejected():

@@ -1,0 +1,347 @@
+"""Machine-topology subsystem: pytree round-trips, distance-matrix
+validation, hierarchy-aware phase inertness, and the degenerate-bitwise
+contract (flat ``p_local`` path == flat-degenerate topology; single-socket
+``uds`` through the *hierarchical* code path == flat single-zone machine).
+"""
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import barrier, cache, dlb, taskgraph, topology, tune
+from repro.core.costs import DEFAULT_COSTS
+from repro.core.scheduler import SimConfig, run_schedule
+from repro.core.spec import RuntimeSpec
+from repro.core.state import make_case
+from repro.core.sweep import CaseSpec, run_cases, run_grid
+from repro.core.topology import DMAX, PRESETS, MachineTopology
+
+from test_phases import check_phases_padded_inert
+
+CFG = SimConfig(n_workers=16, n_zones=4, max_steps=60_000, stack_cap=64)
+
+#: one queue-bound and one memory-bound app — mem_bound exercises the
+#: distance-scaled execution penalty too
+GRAPHS = [taskgraph.build("fib", n=9), taskgraph.build("sort", levels=5)]
+
+SPECS = (RuntimeSpec(), RuntimeSpec(balance="na_rp"),
+         RuntimeSpec(balance="na_ws"),
+         RuntimeSpec("locked_global", "centralized_count", "static_rr"))
+
+
+def _cases(specs, *, n_zones=4, topology=None, p_local=0.5):
+    return [CaseSpec(spec=sp, n_workers=CFG.n_workers, n_zones=n_zones,
+                     graph=gi, p_local=p_local, t_interval=5,
+                     topology=topology)
+            for gi in range(len(GRAPHS)) for sp in specs]
+
+
+def _assert_bitwise(a, b, label):
+    assert a.completed.all() and b.completed.all(), label
+    assert (a.time_ns == b.time_ns).all(), (label, a.time_ns, b.time_ns)
+    assert (a.steps == b.steps).all(), label
+    for name in a.counters:
+        assert (a.counters[name] == b.counters[name]).all(), (label, name)
+
+
+# ---------------- validation ----------------
+def test_presets_validate():
+    for name, t in PRESETS.items():
+        assert t.name == name
+        assert 1 <= t.n_sockets <= DMAX
+        d = np.asarray(t.dist)
+        assert d.shape == (t.n_sockets, t.n_sockets)
+        assert (d == d.T).all(), name                      # symmetric
+        assert (d > 0).all(), name
+        off = d[~np.eye(t.n_sockets, dtype=bool)]
+        if off.size:
+            assert (off > d.diagonal().max()).all(), name  # hierarchy
+        assert t.natural_workers == t.n_sockets * t.cores_per_socket
+
+
+def test_invalid_topologies_rejected():
+    with pytest.raises(AssertionError):    # asymmetric
+        MachineTopology("bad", 2, 4, ((30, 100), (90, 30)))
+    with pytest.raises(AssertionError):    # off-diagonal not above diagonal
+        MachineTopology("bad", 2, 4, ((30, 30), (30, 30)))
+    with pytest.raises(AssertionError):    # not square
+        MachineTopology("bad", 2, 4, ((30, 100),))
+    with pytest.raises(AssertionError):    # too many sockets for DMAX
+        n = DMAX + 1
+        MachineTopology("bad", n, 1, tuple(
+            tuple(30 if i == j else 100 for j in range(n))
+            for i in range(n)))
+    with pytest.raises(ValueError):        # unknown preset name
+        topology.resolve("no_such_machine")
+
+
+# ---------------- pytree round-trip ----------------
+def test_topo_arrays_pytree_round_trip():
+    t = PRESETS["quad_socket_48"]
+    arrs = t.arrays()
+    leaves, treedef = jax.tree_util.tree_flatten(arrs)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert int(back.n_domains) == t.n_sockets
+    assert not bool(back.flat)
+    assert back.dist.shape == (DMAX, DMAX)
+    assert (np.asarray(back.dist)[:t.n_sockets, :t.n_sockets]
+            == np.asarray(t.dist)).all()
+    # a batch of *different* machines stacks like any other case knob
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), PRESETS["uds"].arrays(),
+        PRESETS["dual_socket_24"].arrays())
+    assert stacked.dist.shape == (2, DMAX, DMAX)
+    assert list(np.asarray(stacked.n_domains)) == [1, 2]
+
+
+def test_make_case_carries_topology():
+    t = PRESETS["dual_socket_24"]
+    case = make_case(RuntimeSpec(), 16, t.zone_size_for(16), topology=t)
+    assert int(case.topo.n_domains) == 2 and not bool(case.topo.flat)
+    flat_case = make_case(RuntimeSpec(), 16, 4)
+    assert bool(flat_case.topo.flat)
+    # both shapes identical => one compiled program covers both machines
+    assert jax.tree_util.tree_structure(case) \
+        == jax.tree_util.tree_structure(flat_case)
+
+
+# ---------------- degenerate bitwise contracts ----------------
+def test_flat_p_local_path_matches_degenerate_topology():
+    """The flat ``p_local`` engine and an explicit flat-degenerate
+    topology mirroring its zone grid must agree bitwise — every phase,
+    both DLB policies, memory-bound penalties and barrier included."""
+    flat = run_cases(GRAPHS, _cases(SPECS), cfg=CFG, cache=None)
+    degen = run_cases(
+        GRAPHS, _cases(SPECS, topology=MachineTopology.flat(CFG.n_zones)),
+        cfg=CFG, cache=None)
+    _assert_bitwise(flat, degen, "flat-vs-degenerate")
+
+
+def test_uds_single_socket_matches_flat_single_zone():
+    """``uds`` takes the hierarchical path (distance-matrix comm, socket
+    tree barrier) yet a single socket must degenerate to the flat
+    single-zone machine bitwise."""
+    flat = run_cases(GRAPHS, _cases(SPECS, n_zones=1), cfg=CFG, cache=None)
+    uds = run_cases(GRAPHS, _cases(SPECS, topology=PRESETS["uds"]),
+                    cfg=CFG, cache=None)
+    _assert_bitwise(flat, uds, "uds-vs-flat-single-zone")
+
+
+def test_remainder_workers_steal_within_clipped_domain():
+    """When n_workers is not a socket multiple the last domain absorbs the
+    remainder (domain ids clip); victim selection must treat that whole
+    block as local — consistent with how comm costs and penalties price
+    it — so remainder workers can balance load with their domain peers."""
+    import jax.numpy as jnp
+    topo = PRESETS["quad_socket_48"].arrays()
+    w_pad, n_w, zsz = 16, 10, 2     # workers 6..9 all clip to domain 3
+    me = jnp.arange(w_pad, dtype=jnp.int32)
+    rng = me.astype(jnp.uint32) * jnp.uint32(2654435761) + jnp.uint32(7)
+    seen = set()
+    for _ in range(200):
+        rng, victim = dlb.pick_victim(rng, me, n_w, zsz, jnp.float32(1.0),
+                                      topo)
+        seen.add(int(np.asarray(victim)[8]))
+    assert seen == {6, 7, 9}, seen  # every domain peer, never self/remote
+
+
+def test_multi_socket_changes_results():
+    """Sanity: a real hierarchy must *not* be a no-op — cross-socket
+    distances show up in makespans."""
+    flat = run_cases(GRAPHS, _cases(SPECS), cfg=CFG, cache=None)
+    quad = run_cases(GRAPHS,
+                     _cases(SPECS, topology=PRESETS["quad_socket_48"]),
+                     cfg=CFG, cache=None)
+    assert quad.completed.all()
+    assert (flat.time_ns != quad.time_ns).any()
+
+
+def test_run_schedule_topology_matches_engine():
+    t = PRESETS["quad_socket_48"]
+    r = run_schedule(GRAPHS[0], spec=RuntimeSpec(balance="na_ws"), cfg=CFG,
+                     topology=t)
+    res = run_cases(GRAPHS[0],
+                    [CaseSpec(spec=RuntimeSpec(balance="na_ws"),
+                              n_workers=CFG.n_workers, topology=t)],
+                    cfg=CFG, cache=None)
+    assert r.completed and int(res.time_ns[0]) == r.time_ns
+
+
+# ---------------- barrier hierarchy ----------------
+def test_tree_barrier_single_socket_degenerates():
+    for w in (2, 8, 16, 64):
+        legacy = barrier.tree_episode(w, DEFAULT_COSTS)
+        topo = barrier.tree_episode_topo(w, PRESETS["uds"], DEFAULT_COSTS)
+        assert int(topo.time_ns) == int(legacy.time_ns), w
+        assert int(topo.atomic_ops) == int(legacy.atomic_ops), w
+
+
+def test_tree_barrier_scales_with_hierarchy_depth():
+    w = 16
+    flat_t = int(barrier.tree_episode(w, DEFAULT_COSTS).time_ns)
+    dual = barrier.tree_episode_topo(w, PRESETS["dual_socket_24"],
+                                     DEFAULT_COSTS)
+    quad = barrier.tree_episode_topo(w, PRESETS["quad_socket_48"],
+                                     DEFAULT_COSTS)
+    # deeper/farther hierarchies pay more for the socket-level merges …
+    assert flat_t < int(dual.time_ns) < int(quad.time_ns)
+    # … but the atomic count stays the paper's W-1 bound, layout-free
+    assert int(dual.atomic_ops) == int(quad.atomic_ops) == w - 1
+    # episode_for routes: flat topology -> legacy layout
+    ep = barrier.episode_for("tree", w, DEFAULT_COSTS,
+                             MachineTopology.flat(4))
+    assert int(ep.time_ns) == flat_t
+
+
+# ---------------- grid / cache / tuner integration ----------------
+def test_run_grid_topology_axis():
+    res = run_grid(GRAPHS[0], balancers=("static_rr", "na_ws"),
+                   topologies=(None, "dual_socket_24"),
+                   n_workers=(8,), cfg=CFG, cache=None)
+    assert res.grid_axes["topology"] == ("flat", "dual_socket_24")
+    assert res.makespans.shape == tuple(
+        len(v) for v in res.grid_axes.values())
+    labels = {r["topology"] for r in map(res.row, range(len(res.specs)))}
+    assert labels == {"flat", "dual_socket_24"}
+    assert res.completed.all()
+
+
+def test_cache_key_includes_topology():
+    g = GRAPHS[0]
+    dg = cache.graph_digest(g)
+    flat_spec = CaseSpec(n_workers=8, n_zones=2)
+    dual = CaseSpec(n_workers=8, topology="dual_socket_24")
+    dual2 = CaseSpec(n_workers=8, topology=PRESETS["dual_socket_24"])
+    renamed = CaseSpec(n_workers=8, topology=dataclasses.replace(
+        PRESETS["dual_socket_24"], name="other_name"))
+    assert cache.case_key(dg, flat_spec, CFG) \
+        != cache.case_key(dg, dual, CFG)
+    # identity is structural: same machine == same key, names don't matter
+    assert cache.case_key(dg, dual, CFG) == cache.case_key(dg, dual2, CFG)
+    assert cache.case_key(dg, dual, CFG) == cache.case_key(dg, renamed, CFG)
+
+
+def test_cache_stats_pre_topology_bucket(tmp_path):
+    """Entries written before the topology stamp report under a
+    ``pre-topology`` bucket instead of breaking ``cache stats`` —
+    mirroring the code-version split handling."""
+    store = cache.ResultCache(root=str(tmp_path))
+    rec = dict(clock_max=1, counters={}, n_done=1, overflow=False, step_i=1)
+    store.put("a" * 64, dict(rec))                      # no topology stamp
+    store.put("b" * 64, dict(rec, topology="flat"))
+    store.put("c" * 64, dict(rec, topology="quad_socket_48"))
+    # a pre-stamp record as PR-2 wrote it: no code_version either
+    legacy_path = store._path("d" * 64)
+    os.makedirs(os.path.dirname(legacy_path), exist_ok=True)
+    with open(legacy_path, "w") as f:
+        json.dump(rec, f)
+    s = store.stats()
+    assert s["topologies"] == {"pre-topology": 2, "flat": 1,
+                               "quad_socket_48": 1}
+    assert s["versions"].get("unversioned") == 1
+
+
+def test_cache_round_trip_with_topology(tmp_path):
+    store = cache.ResultCache(root=str(tmp_path))
+    specs = _cases((RuntimeSpec(balance="na_ws"),),
+                   topology=PRESETS["dual_socket_24"])[:1]
+    cold = run_cases(GRAPHS, specs, cfg=CFG, cache=store)
+    warm = run_cases(GRAPHS, specs, cfg=CFG, cache=store)
+    assert cold.cache_hits == 0 and warm.cache_hits == 1
+    _assert_bitwise(cold, warm, "topology-cache-round-trip")
+
+
+def test_tuned_artifacts_slot_per_topology(tmp_path):
+    t = PRESETS["dual_socket_24"]
+    spec = RuntimeSpec(balance="na_ws")
+    p_flat = tune.artifact_path("fib", spec, True, str(tmp_path))
+    p_topo = tune.artifact_path("fib", spec, True, str(tmp_path),
+                                topology=t)
+    assert p_flat != p_topo and "@dual_socket_24" in p_topo
+    # flat topologies collapse onto the historical (topology-free) slot —
+    # they are the same machine bitwise
+    assert tune.artifact_path("fib", spec, True, str(tmp_path),
+                              topology=MachineTopology.flat(4)) == p_flat
+    result = dict(params=tune.TunedParams(), makespan_ns=123,
+                  n_configs=1, n_sims=1, seeds=(0,))
+    tune.save_artifact("fib", spec, result, CFG, smoke=True,
+                       tuned_dir=str(tmp_path), topology=t)
+    rec = tune.load_tuned("fib", spec, smoke=True, cfg=CFG,
+                          tuned_dir=str(tmp_path), topology=t)
+    assert rec is not None and rec["topology"]["name"] == t.name
+    # the flat slot stays empty — per-machine artifacts never cross-load
+    assert tune.load_tuned("fib", spec, smoke=True, cfg=CFG,
+                           tuned_dir=str(tmp_path)) is None
+
+
+@pytest.mark.parametrize("preset", sorted(PRESETS))
+def test_tune_spec_accepts_topology_smoke(preset):
+    res = tune.tune_spec(
+        GRAPHS[0], RuntimeSpec(balance="na_ws"),
+        SimConfig(n_workers=8, n_zones=2, max_steps=60_000, stack_cap=64),
+        topology=preset, rounds=0,
+        coarse=dict(n_victim=(2,), n_steal=(4,), t_interval=(30,),
+                    p_local=(0.5, 1.0)))
+    assert res["makespan_ns"] > 0 and res["n_configs"] == 2
+
+
+# ---------------- padded-lane inertness on hierarchical machines ----------
+#: deterministic corner sample (runs without hypothesis): every preset,
+#: both DLB policies, odd worker counts
+DETERMINISTIC_TOPO = [
+    (RuntimeSpec(balance="na_ws"), "dual_socket_24", 6, 0, 9),
+    (RuntimeSpec(balance="na_rp"), "quad_socket_48", 7, 1, 9),
+    (RuntimeSpec(), "uds", 5, 2, 6),
+    (RuntimeSpec("locked_global", "tree", "na_ws"), "quad_socket_48",
+     5, 3, 8),
+]
+
+
+@pytest.mark.parametrize("spec,preset,n_w,seed,k", DETERMINISTIC_TOPO,
+                         ids=lambda v: str(getattr(v, "slug", v)))
+def test_padded_lanes_inert_topology_deterministic(spec, preset, n_w,
+                                                   seed, k):
+    check_phases_padded_inert(spec, n_w, seed, k,
+                              topology=PRESETS[preset])
+
+
+try:
+    from hypothesis import given, settings, strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @hst.composite
+    def machine(draw):
+        """Random hierarchical machine: socket count in [1, 4], symmetric
+        distance matrix off a random per-pair hop cost."""
+        n = draw(hst.integers(min_value=1, max_value=4))
+        d = [[30] * n for _ in range(n)]
+        for i in range(n):
+            for j in range(i + 1, n):
+                d[i][j] = d[j][i] = draw(hst.sampled_from((60, 100, 160)))
+        return MachineTopology(f"rand{n}", n, 4,
+                               tuple(tuple(r) for r in d))
+
+    @settings(max_examples=10, deadline=None)
+    @given(spec=hst.sampled_from(
+               (RuntimeSpec(balance="na_rp"), RuntimeSpec(balance="na_ws"))),
+           topo=machine(),
+           n_workers=hst.integers(min_value=1, max_value=7),
+           seed=hst.integers(min_value=0, max_value=2**16),
+           k_steps=hst.integers(min_value=1, max_value=10))
+    def test_padded_lanes_inert_topology_random(spec, topo, n_workers,
+                                                seed, k_steps):
+        """Satellite acceptance: the hierarchy-aware victim machinery (and
+        every other phase) leaves padded worker lanes untouched for random
+        socket counts and distance matrices."""
+        check_phases_padded_inert(spec, n_workers, seed, k_steps,
+                                  topology=topo)
