@@ -1,8 +1,8 @@
 """Regression gate for the benchmark record: fresh vs committed baseline.
 
 CI's ``bench-regression`` job runs the deterministic smoke suites
-(``ablation_lattice`` + ``numa_ablation``), then compares the key
-speedup/throughput fields of the freshly written
+(``ablation_lattice`` + ``numa_ablation`` + ``streaming_slo``), then
+compares the key speedup/throughput fields of the freshly written
 ``experiments/bench/BENCH_sweep_smoke.json`` against the committed
 ``benchmarks/baselines/smoke.json`` with a relative tolerance (±25% by
 default) and fails the job on any field drifting outside it.  The compared
@@ -13,7 +13,8 @@ simulator's semantics changed, not that a runner was slow.
     # gate (CI):
     python benchmarks/check_regression.py
     # regenerate the baseline after an intentional physics change:
-    BENCH_SMOKE=1 python -m benchmarks.run ablation_lattice numa_ablation
+    BENCH_SMOKE=1 python -m benchmarks.run ablation_lattice \
+        numa_ablation streaming_slo
     python benchmarks/check_regression.py --write-baseline
 
 The baseline file stores its own tolerance and the flat list of compared
@@ -38,6 +39,8 @@ FIELD_PATTERNS = (
     "numa_ablation.speedup_attribution.*.barrier.*",
     "numa_ablation.speedup_attribution.*.balance.*",
     "numa_ablation.makespan_geomean_by_topology.*",
+    "streaming_slo.slo_by_topology.*.*.p99_geomean_ns",
+    "streaming_slo.slo_by_topology.*.*.throughput_geomean",
 )
 
 DEFAULT_TOLERANCE = 0.25

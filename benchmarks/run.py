@@ -61,6 +61,12 @@ SUITES = {
              "all executors + both backends; per-topology attribution "
              "(BENCH_sweep.json, gated by check_regression.py)",
         axes=dict(queue=_Q, barrier=_B, balance=_L)),
+    "streaming_slo": dict(
+        desc="open-system streaming — lattice x topologies x Poisson "
+             "offered loads (arrivals axis) on all executors + both "
+             "backends; p50/p90/p99 + throughput-vs-load curves "
+             "(BENCH_sweep.json, gated by check_regression.py)",
+        axes=dict(queue=_Q, barrier=_B, balance=_L)),
     "bots_speedup": dict(
         desc="Fig. 4/5 — per-mode makespans + XGOMP(TB) speedups",
         axes=dict(queue=_Q, barrier=_B, balance=("static_rr",))),

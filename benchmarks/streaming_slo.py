@@ -1,0 +1,176 @@
+"""Open-system streaming: tail-latency SLOs vs offered load.
+
+Every other suite is *closed-system* — the whole DAG is eligible at t=0 and
+the headline number is makespan.  The paper's motivating regime ("millions
+of users, heavy traffic") is *open-system*: tasks arrive continuously and
+the numbers that matter are the tail of completion − release latency and
+the throughput sustained under a given offered load.  With
+:mod:`repro.core.arrivals` the arrival process is a grid axis, so this
+suite:
+
+* sweeps the full 2 × 2 × 3 RuntimeSpec lattice × machine topologies
+  (flat vs dual-socket) × ≥3 Poisson offered loads through ``run_grid`` on
+  **all three executors** (serial / vmap / sharded) *and* **both step
+  backends** (reference / pallas), asserting every combination — including
+  the p50/p90/p99 and throughput arrays — is bitwise identical;
+* reports, per lattice point, nearest-rank p50/p90/p99 latency and
+  sustained throughput (``experiments/bench/streaming_slo.json`` rows);
+* records throughput-vs-offered-load curves and p99 geomeans per
+  (topology, offered load) under the ``streaming_slo`` key of
+  ``BENCH_sweep.json`` — fields ``benchmarks/check_regression.py`` gates
+  CI on.
+
+The release schedules are counter-based-RNG deterministic (see
+``arrivals.release_times``), so like every other gated field these are
+simulated-ns quantities, bit-stable across hosts.
+"""
+
+import numpy as np
+
+from benchmarks.ablation_lattice import EXECUTOR_STRATEGIES, KNOBS
+from benchmarks.common import SIM, SMOKE, csv_row, emit, graph_for, \
+    merge_bench_sweep
+from repro.core import arrivals as arrivals_mod
+from repro.core import topology
+from repro.core.spec import BALANCERS, BARRIERS, QUEUES
+from repro.core.sweep import run_grid
+
+STREAM_APPS = ("fib",) if SMOKE else ("fib", "sort")
+
+#: flat vs the paper-style dual-socket machine (quad is covered closed-
+#: system by numa_ablation; two topologies keep the open grid CI-sized)
+TOPOLOGIES = (None, "dual_socket_24")
+
+#: the offered-load axis: ≥3 Poisson points spanning under- to
+#: over-subscribed (rate is tasks per microsecond of virtual time).
+#: Integer rates only: the labels become keys in the check_regression
+#: dotted paths, where a '.' (e.g. ``poisson@0.5``) would split the path
+ARRIVALS = ("poisson:1", "poisson:4", "poisson:16")
+
+#: both step backends must agree bitwise on every (spec, topo, load) cell
+BACKENDS = ("reference", "pallas")
+
+#: per-case SLO arrays that must match bitwise across executors/backends
+SLO_NAMES = ("p50_ns", "p90_ns", "p99_ns", "throughput")
+
+
+def _geomean(x) -> float:
+    return float(np.exp(np.log(np.asarray(x, float)).mean()))
+
+
+def _assert_equal(res, ref, label):
+    assert res.completed.all(), label
+    assert (res.time_ns == ref.time_ns).all(), \
+        f"{label} diverged from the reference run on the streaming grid"
+    for name in ("exec", "stolen", "stolen_remote", "atomic_ops"):
+        assert (res.counters[name] == ref.counters[name]).all(), \
+            (label, name)
+    # the SLO reductions derive from the same integer completion stamps,
+    # so they too must be bitwise equal (floats included — same arithmetic
+    # on the same ints)
+    for name in SLO_NAMES:
+        assert (getattr(res, name) == getattr(ref, name)).all(), \
+            (label, name)
+
+
+def run(cache=None):
+    graphs = [graph_for(app) for app in STREAM_APPS]
+    topo_labels = [topology.label(t) for t in TOPOLOGIES]
+    arr_procs = [arrivals_mod.resolve(a) for a in ARRIVALS]
+    arr_labels = [p.label() for p in arr_procs]
+    # labels key the gated record; dots would split check_regression paths
+    assert all("." not in a for a in arr_labels), arr_labels
+
+    # lattice × topologies × offered loads on every executor and both step
+    # backends; no cache — a warm hit would skip execution and void the
+    # bitwise claims
+    results = {}
+    for strategy in EXECUTOR_STRATEGIES:
+        results[strategy] = run_grid(
+            graphs, queues=QUEUES, barriers=BARRIERS, balancers=BALANCERS,
+            topologies=TOPOLOGIES, arrivals=ARRIVALS,
+            n_workers=(SIM.n_workers,), n_zones=SIM.n_zones, cfg=SIM,
+            strategy=strategy, cache=None, **KNOBS)
+    ref = results["batched"]
+    for strategy, res in results.items():
+        _assert_equal(res, ref, strategy)
+    pallas = run_grid(
+        graphs, queues=QUEUES, barriers=BARRIERS, balancers=BALANCERS,
+        topologies=TOPOLOGIES, arrivals=ARRIVALS,
+        n_workers=(SIM.n_workers,), n_zones=SIM.n_zones, cfg=SIM,
+        strategy="batched", cache=None, backend="pallas", **KNOBS)
+    _assert_equal(pallas, ref, "pallas-backend")
+
+    n_spec = len(QUEUES) * len(BARRIERS) * len(BALANCERS)
+    # grid order: app × queue × barrier × balance × topology × arrivals
+    shape = (len(STREAM_APPS), len(QUEUES), len(BARRIERS), len(BALANCERS),
+             len(TOPOLOGIES), len(ARRIVALS))
+    slo = {name: ref.slo(name).reshape(shape) for name in SLO_NAMES}
+    assert (slo["p99_ns"] > 0).all() and (slo["throughput"] > 0).all()
+
+    #: lattice points sampled into the CSV timeseries — the SLB baseline
+    #: and the best DLB point, per (topology, offered load)
+    csv_specs = ("locked-cent-static_rr", "xqueue-tree-na_ws")
+    rows = []
+    for i, s in enumerate(ref.specs):
+        row = ref.row(i)
+        row["spec_slug"] = s.spec.slug
+        rows.append(row)
+        if s.spec.slug in csv_specs and row["app"] == STREAM_APPS[0]:
+            csv_row(f"streaming_slo/{row['app']}/{row['topology']}/"
+                    f"{row['arrivals']}/{s.spec.slug}",
+                    row["p99_ns"] / 1e3,
+                    f"thr:{row['throughput_tasks_per_s']:.0f}/s")
+    emit(rows, "streaming_slo")
+
+    # throughput-vs-offered-load curve + latency geomeans per (topology,
+    # load), aggregated over apps × the full lattice — the gated fields
+    slo_by_topology = {}
+    for t, tlabel in enumerate(topo_labels):
+        curve = {}
+        for a, (alabel, proc) in enumerate(zip(arr_labels, arr_procs)):
+            cell = slo["throughput"][..., t, a]
+            curve[alabel] = dict(
+                offered_tasks_per_us=proc.rate,
+                throughput_geomean=_geomean(cell),
+                p50_geomean_ns=_geomean(slo["p50_ns"][..., t, a]),
+                p90_geomean_ns=_geomean(slo["p90_ns"][..., t, a]),
+                p99_geomean_ns=_geomean(slo["p99_ns"][..., t, a]),
+            )
+        slo_by_topology[tlabel] = curve
+
+    record = dict(
+        apps=list(STREAM_APPS),
+        n_workers=SIM.n_workers,
+        knobs={k: v[0] for k, v in KNOBS.items()},
+        topologies=topo_labels,
+        arrivals=arr_labels,
+        offered_loads_tasks_per_us=[p.rate for p in arr_procs],
+        executors=list(EXECUTOR_STRATEGIES),
+        backends=list(BACKENDS),
+        n_lattice_points=n_spec,
+        bitwise_identical_across_executors=True,
+        bitwise_identical_across_backends=True,
+        slo_by_topology=slo_by_topology,
+        note=("open-system streaming: Poisson task arrivals at the listed "
+              "offered loads, nearest-rank p50/p90/p99 of completion - "
+              "release latency and throughput over the busy span, geomean "
+              "over apps x the 12-point RuntimeSpec lattice per (topology, "
+              "load); all cells ran bitwise-identically — SLO arrays "
+              "included — on serial/vmap/sharded executors and "
+              "reference/pallas step backends"),
+    )
+    merge_bench_sweep({"streaming_slo": record})
+
+    for tlabel in topo_labels:
+        for alabel, c in slo_by_topology[tlabel].items():
+            print(f"# streaming_slo[{tlabel}][{alabel}]: offered "
+                  f"{c['offered_tasks_per_us']:g}/us, sustained "
+                  f"{c['throughput_geomean']:.0f}/s, p99 "
+                  f"{c['p99_geomean_ns'] / 1e3:.1f}us")
+    print(f"# streaming_slo: {len(rows)} cells "
+          f"({n_spec} lattice points x {len(topo_labels)} topologies x "
+          f"{len(arr_labels)} offered loads x {len(STREAM_APPS)} apps), "
+          f"bitwise across {len(EXECUTOR_STRATEGIES)} executors + "
+          f"{len(BACKENDS)} backends")
+    return rows

@@ -12,9 +12,10 @@ on-disk results) → ``executors`` (serial / vmap / sharded) → ``sweep``
 (the ``run_cases``/``run_grid`` entry points) → ``tune`` (the DLB-knob
 autotuner emitting per-(app, spec) ``experiments/tuned/`` artifacts)."""
 
-from repro.core import backends, balance, barrier, cache, dlb, executors, \
-    messaging, phases, plan, spec, state, sweep, taskgraph, topology, tune, \
-    xqueue
+from repro.core import arrivals, backends, balance, barrier, cache, dlb, \
+    executors, messaging, phases, plan, spec, state, sweep, taskgraph, \
+    topology, tune, xqueue
+from repro.core.arrivals import ArrivalProcess, release_times, slo_metrics
 from repro.core.backends import BACKENDS, StepBackend, get_backend
 from repro.core.cache import CODE_VERSION, ResultCache, case_key, graph_digest
 from repro.core.costs import DEFAULT_COSTS, CostModel
@@ -33,9 +34,10 @@ from repro.core.tune import (TunedParams, artifact_path, load_tuned,
                              save_artifact, tune_mode, tune_spec)
 
 __all__ = [
-    "backends", "balance", "barrier", "cache", "dlb", "executors",
-    "messaging", "phases", "plan", "spec", "state", "sweep", "taskgraph",
-    "topology", "tune", "xqueue",
+    "arrivals", "backends", "balance", "barrier", "cache", "dlb",
+    "executors", "messaging", "phases", "plan", "spec", "state", "sweep",
+    "taskgraph", "topology", "tune", "xqueue",
+    "ArrivalProcess", "release_times", "slo_metrics",
     "MachineTopology", "TopoArrays", "PRESETS", "DMAX",
     "StepBackend", "BACKENDS", "get_backend", "StepOps", "PHASES",
     "RuntimeSpec", "QUEUES", "BARRIERS", "BALANCERS", "AXES",

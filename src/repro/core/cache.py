@@ -91,6 +91,12 @@ def case_key(gdigest: str, spec, cfg) -> str:
     topo = getattr(spec, "topology", None)
     if topo is not None:
         fields["topology"] = topo.cache_key()
+    # the arrival process likewise enters only when one is set: closed
+    # cases keep their pre-streaming keys, so the store stays warm across
+    # the open-system feature's introduction
+    arr = getattr(spec, "arrivals", None)
+    if arr is not None:
+        fields["arrivals"] = arr.cache_key()
     blob = json.dumps(fields, sort_keys=True)
     return hashlib.sha256(blob.encode()).hexdigest()
 
@@ -147,23 +153,26 @@ class ResultCache:
 
     @staticmethod
     def _entry_meta(path: str) -> tuple:
-        """``(code_version, topology)`` an entry was stamped with.
+        """``(code_version, topology, arrivals)`` an entry was stamped with.
 
         Sentinels mirror the PR-3 version-split handling: a record written
         before stamping existed reports ``unversioned``; one written before
         the topology stamp existed reports ``pre-topology`` (still a valid
         flat-machine entry — topology never entered flat keys — so it is
-        *reported*, not rejected); a file that no longer parses reports
-        ``unreadable`` on both axes."""
+        *reported*, not rejected); one written before the streaming mode
+        reports ``pre-streaming`` (likewise a valid closed-system entry);
+        a file that no longer parses reports ``unreadable`` on every
+        axis."""
         try:
             with open(path) as f:
                 rec = json.load(f)
         except (OSError, ValueError):
-            return "unreadable", "unreadable"
+            return "unreadable", "unreadable", "unreadable"
         if not isinstance(rec, dict):
-            return "unreadable", "unreadable"
+            return "unreadable", "unreadable", "unreadable"
         return (rec.get("code_version", "unversioned"),
-                rec.get("topology", "pre-topology"))
+                rec.get("topology", "pre-topology"),
+                rec.get("arrivals", "pre-streaming"))
 
     @classmethod
     def _entry_version(cls, path: str) -> str:
@@ -194,19 +203,21 @@ class ResultCache:
         n = size = 0
         versions: dict = {}
         topologies: dict = {}
+        arrivals: dict = {}
         for path in self._entries():
             n += 1
             try:
                 size += os.path.getsize(path)
             except OSError:
                 pass
-            v, topo = self._entry_meta(path)
+            v, topo, arr = self._entry_meta(path)
             versions[v] = versions.get(v, 0) + 1
             topologies[topo] = topologies.get(topo, 0) + 1
+            arrivals[arr] = arrivals.get(arr, 0) + 1
         return dict(root=self.root, entries=n, bytes=size,
                     session_hits=self.hits, session_misses=self.misses,
                     code_version=CODE_VERSION, versions=versions,
-                    topologies=topologies,
+                    topologies=topologies, arrivals=arrivals,
                     stale_entries=n - versions.get(CODE_VERSION, 0))
 
     def clear(self, version: Optional[str] = None) -> int:

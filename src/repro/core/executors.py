@@ -45,6 +45,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro.core import arrivals as arrivals_mod
 from repro.core import backends as backends_mod
 from repro.core.plan import CaseSpec, ChunkPlan
 from repro.core.scheduler import (NC, GraphArrays, SimConfig, SweepCase,
@@ -60,22 +61,39 @@ class ChunkRaw(NamedTuple):
     n_done: np.ndarray     # (n,)
     overflow: np.ndarray   # (n,) bool
     step_i: np.ndarray     # (n,)
+    done_ns: np.ndarray    # (n, T) int — per-task completion stamps
 
 
 @dataclasses.dataclass(frozen=True)
 class ExecContext:
-    """Shared executor inputs fixed by the plan: padded config + graphs."""
+    """Shared executor inputs fixed by the plan: padded config + graphs.
+
+    ``release_len`` is the shared length of every case's traced release
+    vector — the plan's ``t_pad`` when any case in the run is open-system,
+    else the closed system's 1-length placeholder.  Uniform length keeps
+    closed and open cases stackable inside one vmapped chunk; closed cases
+    carry a zero vector with ``closed=True``, which spawn_phase routes
+    through the exact pre-arrival arithmetic.
+    """
     cfg: SimConfig                   # n_workers == the plan's w_pad
     gq_cap: int
     graphs: Sequence[TaskGraph]
     garr: Sequence[GraphArrays]      # padded to the plan's t_pad
+    release_len: int = 1
 
     def case_for(self, s: CaseSpec) -> SweepCase:
+        if s.arrivals is None and self.release_len == 1:
+            release = None
+        else:
+            release = arrivals_mod.padded_release(
+                s.arrivals, self.graphs[s.graph].n_tasks, s.seed,
+                self.release_len)
         return make_case(
             s.spec, s.n_workers, s.zone_size, s.seed,
             round(float(self.graphs[s.graph].mem_bound), 3),
             make_params(s.n_victim, s.n_steal, s.t_interval, s.p_local),
-            topology=s.topology)
+            topology=s.topology, release_ns=release,
+            closed=s.arrivals is None)
 
 
 def _batch_body(cfg: SimConfig, gq_cap: int, gb, cb: SweepCase):
@@ -106,7 +124,7 @@ def _batch_body(cfg: SimConfig, gq_cap: int, gb, cb: SweepCase):
 
     st0 = jax.vmap(init_one)(gb, cb)
     st = jax.lax.while_loop(cond, lambda s: step_b(gb, cb, s), st0)
-    return st.clock, st.ctr, st.n_done, st.overflow, st.step_i
+    return st.clock, st.ctr, st.n_done, st.overflow, st.step_i, st.done_ns
 
 
 _run_batch = jax.jit(_batch_body, static_argnums=(0, 1))
@@ -125,7 +143,7 @@ def _run_batch_sharded(cfg: SimConfig, gq_cap: int, n_dev: int, gb,
     # check_rep=False: jax 0.4.x has no replication rule for while_loop;
     # nothing here is replicated anyway (every in/out is batch-sharded)
     return shard_map(body, mesh=mesh, in_specs=(P("b"), P("b")),
-                     out_specs=(P("b"),) * 5, check_rep=False)(gb, cb)
+                     out_specs=(P("b"),) * 6, check_rep=False)(gb, cb)
 
 
 def _stack_chunk(ctx: ExecContext, specs_chunk: Sequence[CaseSpec],
@@ -159,11 +177,13 @@ class SerialExecutor(Executor):
 
     def run_chunk(self, ctx, specs, chunk):
         n, W = chunk.n_real, ctx.cfg.n_workers
+        T = ctx.garr[0].dur.shape[0]
         clock = np.zeros((n, W), np.int64)
         ctr = np.zeros((n, W, NC), np.int64)
         n_done = np.zeros(n, np.int64)
         overflow = np.zeros(n, bool)
         step_i = np.zeros(n, np.int64)
+        done_ns = np.zeros((n, T), np.int64)
         for j, i in enumerate(chunk.indices):
             s = specs[i]
             st = jax.block_until_ready(_run_cached(
@@ -173,7 +193,8 @@ class SerialExecutor(Executor):
             n_done[j] = int(st.n_done)
             overflow[j] = bool(st.overflow)
             step_i[j] = int(st.step_i)
-        return ChunkRaw(clock, ctr, n_done, overflow, step_i)
+            done_ns[j] = np.asarray(st.done_ns)
+        return ChunkRaw(clock, ctr, n_done, overflow, step_i, done_ns)
 
 
 class VmapExecutor(Executor):
@@ -186,11 +207,11 @@ class VmapExecutor(Executor):
         n = chunk.n_real
         gb, cb = _stack_chunk(ctx, [specs[i] for i in chunk.indices],
                               self.padded_size(chunk))
-        cl, ct, nd, ov, si = jax.block_until_ready(
+        cl, ct, nd, ov, si, dn = jax.block_until_ready(
             self._dispatch(ctx, gb, cb))
         return ChunkRaw(np.asarray(cl)[:n], np.asarray(ct)[:n],
                         np.asarray(nd)[:n], np.asarray(ov)[:n],
-                        np.asarray(si)[:n])
+                        np.asarray(si)[:n], np.asarray(dn)[:n])
 
     def _dispatch(self, ctx, gb, cb):
         return _run_batch(ctx.cfg, ctx.gq_cap, gb, cb)

@@ -176,8 +176,13 @@ def _finish(st: SimState, ftask, g: GraphArrays) -> SimState:
     active = ftask >= 0
     safe = jnp.where(active, ftask, 0)
     done = st.done.at[jnp.where(active, ftask, T)].set(True, mode="drop")
+    # completion stamp: the finisher's clock already includes the task's
+    # execution time at both call sites (exec_phase and the
+    # execute-immediately rule), so this is the task's finish time
+    done_ns = st.done_ns.at[jnp.where(active, ftask, T)].max(
+        st.clock, mode="drop")
     n_done = st.n_done + jnp.sum(active, dtype=jnp.int32)
-    st = st._replace(done=done, n_done=n_done)
+    st = st._replace(done=done, done_ns=done_ns, n_done=n_done)
     # spawned children: one O(1) range entry
     nch = jnp.where(active, g.n_children[safe], 0)
     st = _stack_push(st, nch > 0, g.first_child[safe], nch)
@@ -256,10 +261,21 @@ def spawn_phase(st: SimState, running, *, g: GraphArrays, case: SweepCase,
     n_w = case.n_workers
 
     for _ in range(K_SPAWN):
-        active = (st.s_top > 0) & running
+        avail = (st.s_top > 0) & running
         topi = jnp.maximum(st.s_top - 1, 0)
         etask = st.s_task[me, topi]
         ecnt = st.s_cnt[me, topi]
+        # open-system injection gate: a task enters the runtime only once
+        # the worker's clock reaches its release stamp; case.closed skips
+        # the gate entirely (bitwise the pre-arrival arithmetic).  A
+        # blocked spawner sleeps forward to the head task's release —
+        # without the sleep its clock could freeze (a worker with a
+        # non-empty stack never dequeues), deadlocking the injection.
+        R = case.release_ns.shape[0]
+        rel = case.release_ns[jnp.clip(etask, 0, R - 1)]
+        released = case.closed | (st.clock >= rel)
+        active = avail & released
+        st = st._replace(clock=jnp.where(avail & ~released, rel, st.clock))
         task = jnp.where(active, etask, 0)
 
         # --- GOMP lane: serialized global-lock push (lock + pq + malloc)

@@ -21,7 +21,9 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Sequence, Tuple
 
+from repro.core import arrivals as arrivals_mod
 from repro.core import topology as topology_mod
+from repro.core.arrivals import ArrivalProcess
 from repro.core.spec import DLB_BALANCERS, RuntimeSpec, resolve_spec
 from repro.core.taskgraph import TaskGraph
 from repro.core.topology import MachineTopology
@@ -47,6 +49,12 @@ class CaseSpec:
     (``n_zones`` equal zones, bitwise identical to the pre-topology
     engine).  With a topology set, its sockets *are* the zones:
     ``n_zones`` is ignored and ``zone_size`` derives from the socket count.
+
+    ``arrivals`` names the open-system arrival process — an
+    :class:`~repro.core.arrivals.ArrivalProcess`, a string spec
+    (``"poisson:2"``), or ``None`` for the historical closed system
+    (all tasks eligible at t=0, bitwise identical to the pre-arrival
+    engine).
     """
     spec: RuntimeSpec = RuntimeSpec()
     n_workers: int = 32
@@ -58,6 +66,7 @@ class CaseSpec:
     p_local: float = 1.0
     graph: int = 0          # index into the graphs list passed to run_cases
     topology: MachineTopology | None = None
+    arrivals: ArrivalProcess | None = None
 
     # hand-written so the deprecated ``mode=`` keyword stays an init-only
     # argument without becoming a field (which would break eq/hash and
@@ -67,6 +76,7 @@ class CaseSpec:
                  n_victim: int = 4, n_steal: int = 8, t_interval: int = 100,
                  p_local: float = 1.0, graph: int = 0,
                  topology: MachineTopology | str | None = None,
+                 arrivals: ArrivalProcess | str | None = None,
                  mode: str | RuntimeSpec | None = None):
         set_ = object.__setattr__      # frozen dataclass
         set_(self, "spec", resolve_spec(spec, mode, where="CaseSpec"))
@@ -79,6 +89,7 @@ class CaseSpec:
         set_(self, "p_local", p_local)
         set_(self, "graph", graph)
         set_(self, "topology", topology_mod.resolve(topology))
+        set_(self, "arrivals", arrivals_mod.resolve(arrivals))
 
     @property
     def mode(self) -> str:
@@ -168,6 +179,7 @@ def build_plan(graphs: Sequence[TaskGraph], specs: Sequence[CaseSpec],
     order = sorted(range(len(specs)), key=lambda i: (
         specs[i].spec.axis_ids,
         "" if specs[i].topology is None else specs[i].topology.sort_key,
+        "" if specs[i].arrivals is None else specs[i].arrivals.sort_key,
         specs[i].graph, specs[i].n_steal,
         specs[i].n_victim, specs[i].t_interval, specs[i].p_local,
         specs[i].seed))

@@ -68,6 +68,7 @@ import dataclasses
 import jax
 import numpy as np
 
+from repro.core import arrivals as arrivals_mod
 from repro.core import backends as backends_mod
 from repro.core import barrier as barrier_mod
 from repro.core import topology as topology_mod
@@ -107,10 +108,22 @@ class SimResult:
     per_worker_clock: np.ndarray
     per_worker_exec: np.ndarray
     spec: RuntimeSpec | None = None   # the lattice point that produced this
+    arrivals: str = "closed"          # arrival-process label (see arrivals)
+    slo: dict | None = None           # arrivals.slo_metrics record
 
     @property
     def throughput_tasks_per_s(self) -> float:
         return self.counters["exec"] / max(self.time_ns, 1) * 1e9
+
+    @property
+    def latency_p99_ns(self) -> int:
+        """Nearest-rank p99 of per-task (completion − release) latency."""
+        return int(self.slo["p99_ns"]) if self.slo else -1
+
+    @property
+    def sustained_tasks_per_s(self) -> float:
+        """Completions over the busy span (open-system throughput)."""
+        return float(self.slo["throughput_tasks_per_s"]) if self.slo else 0.0
 
 
 def _run_jit(cfg: SimConfig, gq_cap: int, g: GraphArrays,
@@ -137,7 +150,7 @@ _run_cached = jax.jit(_run_jit, static_argnums=(0, 1))
 def run_schedule(graph: TaskGraph, mode: str | RuntimeSpec | None = None,
                  params: Params | None = None, cfg: SimConfig | None = None,
                  seed: int = 0, *, spec: RuntimeSpec | str | None = None,
-                 topology=None) -> SimResult:
+                 topology=None, arrivals=None) -> SimResult:
     """Simulate scheduling ``graph`` under one runtime configuration.
 
     ``spec`` is the canonical way to name the configuration (a
@@ -148,11 +161,15 @@ def run_schedule(graph: TaskGraph, mode: str | RuntimeSpec | None = None,
     :class:`~repro.core.topology.MachineTopology` or preset name; ``None``
     = the flat ``cfg.n_zones`` machine, bitwise-identical to the
     pre-topology engine).  ``cfg.backend`` picks the step backend
-    (``reference`` / ``pallas``, bitwise identical).  Returns makespan +
-    the paper's §V counters.
+    (``reference`` / ``pallas``, bitwise identical).  ``arrivals`` runs
+    the open-system mode (an :class:`~repro.core.arrivals.ArrivalProcess`
+    or string spec; ``None`` = closed system, bitwise identical to the
+    pre-arrival engine).  Returns makespan + the paper's §V counters, plus
+    the per-task SLO record (p50/p90/p99 latency, sustained throughput).
     """
     rspec = resolve_spec(spec, mode, where="run_schedule")
     topo = topology_mod.resolve(topology)
+    arr = arrivals_mod.resolve(arrivals)
     cfg = cfg or SimConfig()
     # resolve the backend (None -> env -> reference) *before* the jit
     # dispatch so the compiled-function cache keys on the concrete name
@@ -163,9 +180,11 @@ def run_schedule(graph: TaskGraph, mode: str | RuntimeSpec | None = None,
     W = cfg.n_workers
     zone_size = (topo.zone_size_for(W) if topo is not None
                  else max(W // cfg.n_zones, 1))
+    release = (None if arr is None
+               else arrivals_mod.release_times(arr, graph.n_tasks, seed))
     case = make_case(rspec, W, zone_size, seed,
                      round(float(graph.mem_bound), 3), params,
-                     topology=topo)
+                     topology=topo, release_ns=release)
     st = jax.block_until_ready(
         _run_cached(cfg, gq_cap, graph_arrays(graph), case))
 
@@ -174,6 +193,10 @@ def run_schedule(graph: TaskGraph, mode: str | RuntimeSpec | None = None,
     counters = {n: int(ctr[:, i].sum()) for i, n in enumerate(CTR_NAMES)}
     counters["atomic_ops"] += int(episode.atomic_ops)
     time_ns = int(np.asarray(st.clock).max()) + int(episode.time_ns)
+    rel_host = (np.zeros(graph.n_tasks, np.int64) if release is None
+                else release)
+    slo = arrivals_mod.slo_metrics(np.asarray(st.done_ns), rel_host,
+                                   graph.n_tasks)
     return SimResult(
         name=graph.name, mode=rspec.label, n_workers=W,
         completed=bool(st.n_done == graph.n_tasks) and not bool(st.overflow),
@@ -181,5 +204,5 @@ def run_schedule(graph: TaskGraph, mode: str | RuntimeSpec | None = None,
         per_worker_busy=ctr[:, CTR["busy_ns"]].copy(),
         per_worker_clock=np.asarray(st.clock).copy(),
         per_worker_exec=ctr[:, CTR["exec"]].copy(),
-        spec=rspec,
+        spec=rspec, arrivals=arrivals_mod.label(arr), slo=slo,
     )

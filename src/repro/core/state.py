@@ -78,12 +78,15 @@ class SweepCase(NamedTuple):
     mem_bound: jax.Array   # float32 memory-bound fraction of task runtime
     params: Params
     topo: TopoArrays       # machine topology (flat degenerate by default)
+    closed: jax.Array      # bool scalar — closed system (no arrival gating)
+    release_ns: jax.Array  # (R,) int32 per-task release stamps (open system)
 
 
 def make_case(spec: RuntimeSpec | str | int, n_workers: int, zone_size: int,
               seed: int = 0, mem_bound: float = 0.0,
               params: Params | None = None,
-              topology: MachineTopology | str | None = None) -> SweepCase:
+              topology: MachineTopology | str | None = None,
+              release_ns=None, closed: bool | None = None) -> SweepCase:
     """Lift a runtime configuration to traced scalars.
 
     ``spec`` accepts a :class:`RuntimeSpec`, a legacy mode name or spec
@@ -94,12 +97,23 @@ def make_case(spec: RuntimeSpec | str | int, n_workers: int, zone_size: int,
     two-level zone model, bitwise identical to the pre-topology engine).
     Callers passing a topology are expected to pass the matching
     ``zone_size`` (``topology.zone_size_for(n_workers)``).
+
+    ``release_ns`` is the open-system per-task release vector (int ns; see
+    :mod:`repro.core.arrivals`); ``None`` is the closed system, where the
+    ``closed`` flag routes :func:`~repro.core.phases.spawn_phase` through
+    arithmetic bitwise identical to the pre-arrival engine.  ``closed``
+    may be forced ``True`` alongside a (zero) vector so closed and open
+    cases stack with uniform shapes inside one vmapped chunk.
     """
     if isinstance(spec, int):
         spec = MODE_SPECS[tuple(MODE_SPECS)[spec]]
     else:
         spec = RuntimeSpec.coerce(spec)
     topo = topology_mod.resolve(topology)
+    if closed is None:
+        closed = release_ns is None
+    release = (jnp.zeros((1,), jnp.int32) if release_ns is None
+               else jnp.asarray(np.asarray(release_ns, np.int32)))
     return SweepCase(
         queue_id=jnp.int32(spec.queue_id),
         barrier_id=jnp.int32(spec.barrier_id),
@@ -109,7 +123,9 @@ def make_case(spec: RuntimeSpec | str | int, n_workers: int, zone_size: int,
         mem_bound=jnp.float32(mem_bound),
         params=params if params is not None else make_params(),
         topo=(topology_mod.degenerate_arrays() if topo is None
-              else topo.arrays()))
+              else topo.arrays()),
+        closed=jnp.asarray(bool(closed)),
+        release_ns=release)
 
 
 class GraphArrays(NamedTuple):
@@ -163,6 +179,7 @@ class SimState(NamedTuple):
     # task-graph dynamic state
     join_cnt: jax.Array
     done: jax.Array
+    done_ns: jax.Array  # (T,) int32 completion clock per task (-1 = never)
     creator: jax.Array
     # worker state
     clock: jax.Array
@@ -212,6 +229,7 @@ def init_state(g: GraphArrays, W: int, S: int, q_cap: int, gq_cap: int,
         s_top=jnp.zeros((W,), jnp.int32),
         join_cnt=g.join_dep,
         done=jnp.zeros((T,), bool),
+        done_ns=jnp.full((T,), -1, jnp.int32),
         creator=jnp.zeros((T,), jnp.int32),
         clock=jnp.zeros((W,), jnp.int32),
         rr=jnp.arange(W, dtype=jnp.int32),      # round-robin starts at master

@@ -47,6 +47,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core import arrivals as arrivals_mod
 from repro.core import backends as backends_mod
 from repro.core import barrier as barrier_mod
 from repro.core import cache as cache_mod
@@ -68,6 +69,12 @@ class SweepResult:
     in ``specs`` order.  When produced by ``run_grid``, ``grid_axes`` names
     the cartesian axes and ``makespans`` / ``counter(name)`` reshape to the
     grid shape ``tuple(len(v) for v in grid_axes.values())``.
+
+    The SLO arrays (``p50_ns``/``p90_ns``/``p99_ns``/``throughput``) carry
+    per-task latency percentiles and sustained throughput — populated for
+    open- *and* closed-system cases alike (a closed case's "latency" is the
+    completion clock, release 0), ``NaN`` only when a case was served from
+    a cache entry written before the streaming fields existed.
     """
     specs: List[CaseSpec]
     graph_names: List[str]
@@ -78,6 +85,10 @@ class SweepResult:
     wall_s: float = 0.0               # engine wall-clock for this sweep
     cache_hits: int = 0               # cases served from the result cache
     grid_axes: Optional[Dict[str, tuple]] = None
+    p50_ns: Optional[np.ndarray] = None        # (B,) float64 (NaN = unknown)
+    p90_ns: Optional[np.ndarray] = None
+    p99_ns: Optional[np.ndarray] = None
+    throughput: Optional[np.ndarray] = None    # (B,) tasks/s over busy span
 
     def _grid(self, a: np.ndarray) -> np.ndarray:
         if self.grid_axes is None:
@@ -91,6 +102,11 @@ class SweepResult:
     def counter(self, name: str) -> np.ndarray:
         return self._grid(self.counters[name])
 
+    def slo(self, name: str) -> np.ndarray:
+        """Grid-shaped view of one SLO array (``p50_ns``/``p90_ns``/
+        ``p99_ns``/``throughput``)."""
+        return self._grid(getattr(self, name))
+
     def row(self, i: int) -> dict:
         """One case as a flat dict (benchmark emission helper)."""
         s = self.specs[i]
@@ -99,9 +115,13 @@ class SweepResult:
             queue=s.spec.queue, barrier=s.spec.barrier,
             balance=s.spec.balance,
             topology=topology_mod.label(s.topology),
+            arrivals=arrivals_mod.label(s.arrivals),
             n_workers=s.n_workers, seed=s.seed, n_victim=s.n_victim,
             n_steal=s.n_steal, t_interval=s.t_interval, p_local=s.p_local,
             time_ns=int(self.time_ns[i]), completed=bool(self.completed[i]),
+            p50_ns=float(self.p50_ns[i]), p90_ns=float(self.p90_ns[i]),
+            p99_ns=float(self.p99_ns[i]),
+            throughput_tasks_per_s=float(self.throughput[i]),
             counters={k: int(v[i]) for k, v in self.counters.items()})
 
 
@@ -150,6 +170,18 @@ def run_cases(graphs: Sequence[TaskGraph] | TaskGraph,
     n_done = np.zeros(B, np.int64)
     overflow = np.zeros(B, bool)
     step_i = np.zeros(B, np.int64)
+    slo_arr = {n: np.full(B, np.nan) for n in arrivals_mod.SLO_FIELDS}
+
+    def fill_slo(i: int, rec: Optional[dict]) -> None:
+        if rec:
+            for n in arrivals_mod.SLO_FIELDS:
+                slo_arr[n][i] = float(rec[n])
+
+    def release_for(s: CaseSpec) -> np.ndarray:
+        g = graphs[s.graph]
+        if s.arrivals is None:
+            return np.zeros(g.n_tasks, np.int64)
+        return arrivals_mod.release_times(s.arrivals, g.n_tasks, s.seed)
 
     store = cache_mod.resolve(cache)
     keys: List[Optional[str]] = [None] * B
@@ -170,6 +202,10 @@ def run_cases(graphs: Sequence[TaskGraph] | TaskGraph,
             n_done[i] = int(rec["n_done"])
             overflow[i] = bool(rec["overflow"])
             step_i[i] = int(rec["step_i"])
+            # entries written before the streaming mode carry no SLO
+            # record — still valid hits (closed keys never changed), the
+            # SLO arrays just stay NaN for them
+            fill_slo(i, rec.get("slo"))
 
     if miss:
         miss_specs = [specs[i] for i in miss]
@@ -177,25 +213,34 @@ def run_cases(graphs: Sequence[TaskGraph] | TaskGraph,
         run_cfg = dataclasses.replace(cfg, n_workers=plan.w_pad)
         ctx = ExecContext(
             cfg=run_cfg, gq_cap=plan.gq_cap, graphs=graphs,
-            garr=[graph_arrays(g, plan.t_pad) for g in graphs])
+            garr=[graph_arrays(g, plan.t_pad) for g in graphs],
+            release_len=(plan.t_pad
+                         if any(s.arrivals is not None for s in miss_specs)
+                         else 1))
         for chunk in plan.chunks:
             ex = select_executor(strategy, chunk)
             raw = ex.run_chunk(ctx, miss_specs, chunk)
             for j, mi in enumerate(chunk.indices):
                 i = miss[mi]
+                s = specs[i]
                 clock_max[i] = int(raw.clock[j].max())
                 ctr_sum[i] = raw.ctr[j].sum(axis=0)
                 n_done[i] = int(raw.n_done[j])
                 overflow[i] = bool(raw.overflow[j])
                 step_i[i] = int(raw.step_i[j])
+                slo = arrivals_mod.slo_metrics(
+                    raw.done_ns[j], release_for(s),
+                    graphs[s.graph].n_tasks)
+                fill_slo(i, slo)
                 if store is not None:
                     store.put(keys[i], dict(
                         clock_max=int(clock_max[i]),
                         counters={n: int(ctr_sum[i][k])
                                   for k, n in enumerate(CTR_NAMES)},
                         n_done=int(n_done[i]), overflow=bool(overflow[i]),
-                        step_i=int(step_i[i]),
-                        topology=topology_mod.label(specs[i].topology)))
+                        step_i=int(step_i[i]), slo=slo,
+                        topology=topology_mod.label(s.topology),
+                        arrivals=arrivals_mod.label(s.arrivals)))
 
     # barrier episode per case (host-side: the barrier axis, W, and the
     # machine topology are known per spec, matching run_schedule's
@@ -218,7 +263,10 @@ def run_cases(graphs: Sequence[TaskGraph] | TaskGraph,
     return SweepResult(
         specs=specs, graph_names=[g.name for g in graphs],
         time_ns=time_ns, counters=counters, completed=completed,
-        steps=step_i, wall_s=time.perf_counter() - t0, cache_hits=hits)
+        steps=step_i, wall_s=time.perf_counter() - t0, cache_hits=hits,
+        p50_ns=slo_arr["p50_ns"], p90_ns=slo_arr["p90_ns"],
+        p99_ns=slo_arr["p99_ns"],
+        throughput=slo_arr["throughput_tasks_per_s"])
 
 
 def run_grid(graphs: Sequence[TaskGraph] | TaskGraph,
@@ -236,7 +284,8 @@ def run_grid(graphs: Sequence[TaskGraph] | TaskGraph,
              queues: Sequence[str] | None = None,
              barriers: Sequence[str] | None = None,
              balancers: Sequence[str] | None = None,
-             topologies: Sequence = (None,)) -> SweepResult:
+             topologies: Sequence = (None,),
+             arrivals: Sequence = (None,)) -> SweepResult:
     """Cartesian sweep over the spec lattice × machine × workers × seeds ×
     DLB knobs.
 
@@ -255,6 +304,15 @@ def run_grid(graphs: Sequence[TaskGraph] | TaskGraph,
 
         run_grid(graphs, balancers=spec.BALANCERS,
                  topologies=(None, "dual_socket_24", "quad_socket_48"))
+
+    ``arrivals`` sweeps the open-system arrival process the same way:
+    entries are :class:`~repro.core.arrivals.ArrivalProcess` instances,
+    string specs (``"poisson:2"`` / ``"lognormal:2:1.5"`` /
+    ``"bursty:2:8:0.25"``), or ``None`` for the historical closed system
+    (axis label ``"closed"``), e.g. a throughput-vs-offered-load curve::
+
+        run_grid(graphs, balancers=spec.BALANCERS,
+                 arrivals=("poisson:0.5", "poisson:2", "poisson:8"))
 
     The legacy ``modes=`` argument (a non-cartesian list of ladder names)
     still works — string entries emit a ``DeprecationWarning`` and the grid
@@ -304,17 +362,20 @@ def run_grid(graphs: Sequence[TaskGraph] | TaskGraph,
         spec_axes = lattice
     topo_list = tuple(topology_mod.resolve(t) for t in topologies)
     assert topo_list, "empty topology axis in run_grid"
+    arr_list = tuple(arrivals_mod.resolve(a) for a in arrivals)
+    assert arr_list, "empty arrivals axis in run_grid"
     axes = dict(app=tuple(g.name for g in graphs), **spec_axes,
                 topology=tuple(topology_mod.label(t) for t in topo_list),
+                arrivals=tuple(arrivals_mod.label(a) for a in arr_list),
                 n_workers=tuple(n_workers), seed=tuple(seeds),
                 n_victim=tuple(n_victim), n_steal=tuple(n_steal),
                 t_interval=tuple(t_interval), p_local=tuple(p_local))
     specs = [
         CaseSpec(spec=sp, n_workers=w, n_zones=zones, seed=sd, n_victim=nv,
                  n_steal=ns, t_interval=ti, p_local=pl, graph=gi,
-                 topology=tp)
+                 topology=tp, arrivals=ar)
         for gi in range(len(graphs)) for sp in spec_list
-        for tp in topo_list for w in n_workers
+        for tp in topo_list for ar in arr_list for w in n_workers
         for sd in seeds for nv in n_victim for ns in n_steal
         for ti in t_interval for pl in p_local
     ]

@@ -30,6 +30,7 @@ import json
 import os
 from typing import Dict, Iterable, Optional, Sequence
 
+from repro.core import arrivals as arrivals_mod
 from repro.core import topology as topology_mod
 from repro.core.cache import CODE_VERSION
 from repro.core.plan import CaseSpec
@@ -99,7 +100,7 @@ def tune_spec(graph: TaskGraph, spec: RuntimeSpec | str, cfg: SimConfig, *,
               survivors: int = 4, coarse: Optional[dict] = None,
               extra: Sequence[TunedParams] = (), cache=None,
               strategy: str = "auto", chunk_size: int = 64,
-              topology=None) -> dict:
+              topology=None, arrivals=None) -> dict:
     """Search the DLB knobs for one (graph, spec); returns the best point.
 
     ``spec`` must sit on a DLB balancer (na_rp / na_ws) — the knobs are
@@ -107,17 +108,24 @@ def tune_spec(graph: TaskGraph, spec: RuntimeSpec | str, cfg: SimConfig, *,
     off-ladder ones.  ``topology`` tunes against a specific machine
     (:class:`~repro.core.topology.MachineTopology` or preset name) — the
     best knobs on a quad-socket machine differ from the flat default's, so
-    artifacts are slotted per topology too.  ``extra`` configurations join
-    rung 0 — seeding the hand-tuned reference guarantees the result matches
-    or beats it under the same seeds.  Returns ``dict(params, makespan_ns,
-    n_configs, n_sims, seeds)``.
+    artifacts are slotted per topology too.  ``arrivals`` tunes against an
+    open-system arrival process (:class:`~repro.core.arrivals
+    .ArrivalProcess` or string spec): the objective switches from mean
+    makespan to mean *p99 task latency* — the SLO number that matters in
+    steady state — and artifacts slot per process.  ``extra``
+    configurations join rung 0 — seeding the hand-tuned reference
+    guarantees the result matches or beats it under the same seeds.
+    Returns ``dict(params, makespan_ns, n_configs, n_sims, seeds,
+    objective[, p99_ns])``.
     """
     spec = RuntimeSpec.coerce(spec)
     assert spec.balance in DLB_BALANCERS, spec
     topology = _resolve_topology(topology)
+    arrivals = arrivals_mod.resolve(arrivals)
     coarse = coarse or COARSE
     seeds = tuple(seeds)
     scores: Dict[TunedParams, float] = {}
+    makespans: Dict[TunedParams, float] = {}
     n_sims = 0
 
     def evaluate(cands: Sequence[TunedParams]) -> None:
@@ -128,7 +136,8 @@ def tune_spec(graph: TaskGraph, spec: RuntimeSpec | str, cfg: SimConfig, *,
         specs = [CaseSpec(spec=spec, n_workers=cfg.n_workers,
                           n_zones=cfg.n_zones, seed=sd, n_victim=p.n_victim,
                           n_steal=p.n_steal, t_interval=p.t_interval,
-                          p_local=p.p_local, topology=topology)
+                          p_local=p.p_local, topology=topology,
+                          arrivals=arrivals)
                  for p in todo for sd in seeds]
         res = run_cases(graph, specs, cfg=cfg, cache=cache,
                         strategy=strategy, chunk_size=chunk_size)
@@ -137,9 +146,17 @@ def tune_spec(graph: TaskGraph, spec: RuntimeSpec | str, cfg: SimConfig, *,
         for j, p in enumerate(todo):
             sl = slice(j * k, (j + 1) * k)
             if not res.completed[sl].all():
-                scores[p] = float("inf")
+                scores[p] = makespans[p] = float("inf")
+                continue
+            makespans[p] = float(res.time_ns[sl].mean())
+            if arrivals is None:
+                scores[p] = makespans[p]
             else:
-                scores[p] = float(res.time_ns[sl].mean())
+                # open system: optimize the tail, not the makespan.  A NaN
+                # p99 (a pre-streaming cache entry) cannot happen here —
+                # open-system keys carry the arrival process, so every hit
+                # was written with the SLO record
+                scores[p] = float(res.p99_ns[sl].mean())
 
     rung0 = [TunedParams(nv, ns, ti, pl)
              for nv in coarse["n_victim"] for ns in coarse["n_steal"]
@@ -155,8 +172,12 @@ def tune_spec(graph: TaskGraph, spec: RuntimeSpec | str, cfg: SimConfig, *,
     best = min(scores, key=lambda p: (scores[p], p))
     assert scores[best] != float("inf"), \
         f"no completing configuration found for {graph.name}/{spec.slug}"
-    return dict(params=best, makespan_ns=int(scores[best]),
-                n_configs=len(scores), n_sims=n_sims, seeds=seeds)
+    out = dict(params=best, makespan_ns=int(makespans[best]),
+               n_configs=len(scores), n_sims=n_sims, seeds=seeds,
+               objective="makespan" if arrivals is None else "p99_latency")
+    if arrivals is not None:
+        out["p99_ns"] = int(scores[best])
+    return out
 
 
 def tune_mode(graph: TaskGraph, mode: str, cfg: SimConfig, **kw) -> dict:
@@ -181,15 +202,20 @@ def sim_signature(cfg: SimConfig) -> str:
 
 def artifact_path(app: str, spec: RuntimeSpec | str, smoke: bool,
                   tuned_dir: str = DEFAULT_TUNED_DIR,
-                  topology=None) -> str:
+                  topology=None, arrivals=None) -> str:
     """``<tuned_dir>/<smoke|full>/<app>__<spec-slug>.json`` — one slot per
     (scale, app, lattice point), so tuning one spec or scale never clobbers
     another's committed artifact.  A non-flat topology appends
-    ``@<topology-name>`` to the slug (per-machine slots); flat/None keeps
-    the historical filename, so pre-topology artifacts stay addressable."""
+    ``@<topology-name>`` to the slug (per-machine slots), an arrival
+    process appends ``+<process-label>`` (per-offered-load slots);
+    flat/None and closed/None keep the historical filename, so older
+    artifacts stay addressable."""
     spec = RuntimeSpec.coerce(spec)
     topology = _resolve_topology(topology)
+    arrivals = arrivals_mod.resolve(arrivals)
     suffix = "" if topology is None else f"@{topology.name}"
+    if arrivals is not None:
+        suffix += f"+{arrivals.label()}"
     return os.path.join(tuned_dir, "smoke" if smoke else "full",
                         f"{app}__{spec.slug}{suffix}.json")
 
@@ -199,17 +225,20 @@ def save_artifact(app: str, spec: RuntimeSpec | str, result: dict,
                   slb_ns: Optional[int] = None,
                   ref: Optional[dict] = None,
                   tuned_dir: str = DEFAULT_TUNED_DIR,
-                  topology=None) -> str:
-    """Write one (app, spec[, topology]) artifact (see :func:`artifact_path`).
+                  topology=None, arrivals=None) -> str:
+    """Write one (app, spec[, topology][, arrivals]) artifact (see
+    :func:`artifact_path`).
 
     ``result`` is :func:`tune_spec`'s return value.  The artifact records
     the spec axes, the simulated machine (worker/zone counts, machine
-    topology, step budget) and the smoke flag so consumers only apply
-    parameters tuned at *their* scale, lattice point, and machine, plus
-    the hand-tuned reference comparison when provided.
+    topology, step budget), the arrival process, and the smoke flag so
+    consumers only apply parameters tuned at *their* scale, lattice point,
+    machine, and offered load, plus the hand-tuned reference comparison
+    when provided.
     """
     spec = RuntimeSpec.coerce(spec)
     topology = _resolve_topology(topology)
+    arrivals = arrivals_mod.resolve(arrivals)
     rec = dict(
         app=app, spec=spec.asdict(), spec_slug=spec.slug,
         smoke=bool(smoke), code_version=CODE_VERSION,
@@ -220,14 +249,19 @@ def save_artifact(app: str, spec: RuntimeSpec | str, result: dict,
         n_configs=int(result["n_configs"]),
         n_sims=int(result["n_sims"]),
         seeds=list(result["seeds"]),
+        objective=result.get("objective", "makespan"),
     )
     if topology is not None:
         rec["topology"] = topology.asdict()
+    if arrivals is not None:
+        rec["arrivals"] = arrivals.asdict()
+        rec["p99_ns"] = int(result["p99_ns"])
     if slb_ns is not None:
         rec["slb_ns"] = int(slb_ns)
     if ref is not None:
         rec["ref"] = ref
-    path = artifact_path(app, spec, smoke, tuned_dir, topology=topology)
+    path = artifact_path(app, spec, smoke, tuned_dir, topology=topology,
+                         arrivals=arrivals)
     os.makedirs(os.path.dirname(path), exist_ok=True)
     with open(path, "w") as f:
         json.dump(rec, f, indent=1, sort_keys=True)
@@ -241,9 +275,9 @@ def load_tuned(app: str, spec: RuntimeSpec | str, *, smoke: bool,
                n_zones: Optional[int] = None,
                max_steps: Optional[int] = None,
                tuned_dir: str = DEFAULT_TUNED_DIR,
-               topology=None) -> Optional[dict]:
-    """Load the (app, spec[, topology]) artifact if it matches the
-    requested machine.
+               topology=None, arrivals=None) -> Optional[dict]:
+    """Load the (app, spec[, topology][, arrivals]) artifact if it matches
+    the requested machine and offered load.
 
     Passing ``cfg`` checks the full simulation scale: worker count, zone
     topology, and the physics signature (queue/stack caps, step budget,
@@ -254,7 +288,9 @@ def load_tuned(app: str, spec: RuntimeSpec | str, *, smoke: bool,
     """
     spec = RuntimeSpec.coerce(spec)
     topology = _resolve_topology(topology)
-    path = artifact_path(app, spec, smoke, tuned_dir, topology=topology)
+    arrivals = arrivals_mod.resolve(arrivals)
+    path = artifact_path(app, spec, smoke, tuned_dir, topology=topology,
+                         arrivals=arrivals)
     try:
         with open(path) as f:
             rec = json.load(f)
@@ -268,6 +304,9 @@ def load_tuned(app: str, spec: RuntimeSpec | str, *, smoke: bool,
         return None
     want_topo = None if topology is None else topology.asdict()
     if rec.get("topology") != want_topo:
+        return None
+    want_arr = None if arrivals is None else arrivals.asdict()
+    if rec.get("arrivals") != want_arr:
         return None
     if cfg is not None:
         if rec.get("n_workers") != cfg.n_workers:

@@ -1,0 +1,268 @@
+"""Open-system arrivals: deterministic release schedules + SLO reduction.
+
+Host-side properties of :mod:`repro.core.arrivals` — the release-schedule
+generator must be a pure function of ``(process, n_tasks, seed)`` (bitwise,
+across hosts), schedules must be sorted/non-negative with an immediately
+runnable root, the empirical offered load must track the nominal rate, and
+``slo_metrics`` must agree with an independent NumPy reference including
+the corner cases (ties, never-completed tasks, a single task) — plus one
+engine-level determinism check through ``run_schedule``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import arrivals
+
+KINDS = [arrivals.poisson(2.0), arrivals.lognormal(2.0, sigma=1.5),
+         arrivals.bursty(2.0, burst_len=4, duty=0.5)]
+IDS = [p.label() for p in KINDS]
+
+
+# ---------------- process identity ----------------
+
+def test_resolve_round_trips():
+    assert arrivals.resolve(None) is None
+    for s, want in [("poisson:2", arrivals.poisson(2.0)),
+                    ("lognormal:2:1.5", arrivals.lognormal(2.0, 1.5)),
+                    ("lognormal:2", arrivals.lognormal(2.0)),
+                    ("bursty:2:4:0.5", arrivals.bursty(2.0, 4, 0.5)),
+                    ("bursty:8", arrivals.bursty(8.0))]:
+        got = arrivals.resolve(s)
+        assert got == want, s
+        # the label is itself resolvable identity
+        assert arrivals.resolve(got) is got
+    with pytest.raises(ValueError):
+        arrivals.resolve("uniform:2")
+
+
+def test_labels():
+    assert arrivals.label(None) == "closed"
+    assert arrivals.label("poisson:2") == "poisson@2"
+    assert arrivals.label("lognormal:2:1.5") == "lognormal@2s1.5"
+    assert arrivals.label("bursty:2:4:0.5") == "bursty@2b4d0.5"
+
+
+def test_unused_knobs_normalize():
+    """Equal processes must hash/cache-key equal even when constructed with
+    junk in the knobs their kind ignores."""
+    a = arrivals.ArrivalProcess("poisson", 2.0, sigma=9.0, burst_len=7,
+                                duty=0.1)
+    b = arrivals.poisson(2.0)
+    assert a == b and hash(a) == hash(b)
+    assert a.cache_key() == b.cache_key()
+    assert arrivals.poisson(2.0).cache_key() != \
+        arrivals.poisson(2.5).cache_key()
+    assert arrivals.lognormal(2.0, 1.0).cache_key() != \
+        arrivals.lognormal(2.0, 1.5).cache_key()
+
+
+def test_case_keys_split_on_arrivals():
+    """The result-cache key carries the arrival process only when one is
+    set — closed specs keep their pre-streaming keys (warm store), open
+    specs with different processes/rates never collide."""
+    from repro.core.cache import case_key, graph_digest
+    from repro.core.scheduler import SimConfig
+    from repro.core.sweep import CaseSpec
+    from repro.core.taskgraph import fib
+
+    gd = graph_digest(fib(6))
+    cfg = SimConfig(n_workers=8, n_zones=2)
+
+    def key(**kw):
+        return case_key(gd, CaseSpec(spec="na_ws", n_workers=8, n_zones=2,
+                                     **kw), cfg)
+
+    keys = [key(), key(arrivals="poisson:2"), key(arrivals="poisson:4"),
+            key(arrivals="lognormal:2:1.5"), key(arrivals="bursty:2:4:0.5")]
+    assert len(set(keys)) == len(keys)
+    # the process is identity, not spelling: string and instance agree
+    assert key(arrivals="poisson:2") == key(arrivals=arrivals.poisson(2.0))
+
+
+# ---------------- release schedules ----------------
+
+@pytest.mark.parametrize("proc", KINDS, ids=IDS)
+def test_release_deterministic_and_sorted(proc):
+    a = arrivals.release_times(proc, 500, seed=7)
+    b = arrivals.release_times(proc, 500, seed=7)
+    assert a.dtype == np.int64
+    assert np.array_equal(a, b)                      # same seed → bitwise
+    assert a[0] == 0                                 # runnable root
+    assert (a >= 0).all() and (np.diff(a) >= 0).all()
+    c = arrivals.release_times(proc, 500, seed=8)
+    assert not np.array_equal(a, c)                  # seed actually enters
+    # a prefix of a longer schedule is the schedule of the prefix
+    assert np.array_equal(a[:100], arrivals.release_times(proc, 100, 7))
+
+
+@pytest.mark.parametrize("proc", KINDS, ids=IDS)
+def test_empirical_rate_tracks_offered_load(proc):
+    """The mean inter-arrival gap must track ``1000/rate`` ns — the offered
+    load is what the throughput curves are plotted against."""
+    n = 4000
+    rel = arrivals.release_times(proc, n, seed=0)
+    mean_gap = float(rel[-1]) / (n - 1)
+    assert abs(mean_gap / proc.mean_gap_ns - 1.0) < 0.25, \
+        (proc.label(), mean_gap, proc.mean_gap_ns)
+
+
+def test_padded_release():
+    proc = arrivals.poisson(2.0)
+    rel = arrivals.release_times(proc, 20, seed=3)
+    pad = arrivals.padded_release(proc, 20, seed=3, pad_to=32)
+    assert pad.shape == (32,) and pad.dtype == np.int32
+    assert np.array_equal(pad[:20], rel.astype(np.int32))
+    assert (pad[20:] == rel[-1]).all()               # inert fill
+    closed = arrivals.padded_release(None, 20, seed=3, pad_to=32)
+    assert closed.shape == (32,) and (closed == 0).all()
+
+
+def test_release_single_task():
+    for proc in KINDS:
+        rel = arrivals.release_times(proc, 1, seed=0)
+        assert rel.shape == (1,) and rel[0] == 0
+
+
+# ---------------- SLO reduction ----------------
+
+def _reference_slo(done, rel):
+    """Independent nearest-rank reference (pure Python, no shortcuts)."""
+    lat = sorted(d - r for d, r in zip(done, rel) if d >= 0)
+    n = len(lat)
+    if n == 0:
+        return dict(n_completed=0, p50_ns=-1, p90_ns=-1, p99_ns=-1,
+                    span_ns=0, throughput_tasks_per_s=0.0)
+
+    def pct(q):
+        import math
+        return lat[max(math.ceil(q / 100 * n) - 1, 0)]
+
+    span = max(max(d for d in done if d >= 0)
+               - min(r for d, r in zip(done, rel) if d >= 0), 1)
+    return dict(n_completed=n, p50_ns=pct(50), p90_ns=pct(90),
+                p99_ns=pct(99), span_ns=span,
+                throughput_tasks_per_s=n * 1e9 / span)
+
+
+def test_slo_matches_reference_with_ties_and_dropouts():
+    rng = np.random.default_rng(42)
+    for trial in range(20):
+        n = int(rng.integers(1, 200))
+        rel = np.sort(rng.integers(0, 50, n))        # heavy ties
+        lat = rng.integers(0, 20, n)                 # heavy latency ties
+        done = rel + lat
+        done[rng.random(n) < 0.3] = -1               # never completed
+        got = arrivals.slo_metrics(done, rel, n)
+        want = _reference_slo(done.tolist(), rel.tolist())
+        assert got == pytest.approx(want), trial
+        # results are JSON-able Python natives, not numpy scalars
+        assert all(not isinstance(v, np.generic) for v in got.values())
+
+
+def test_slo_single_task():
+    got = arrivals.slo_metrics([120], [100], 1)
+    assert got["n_completed"] == 1
+    assert got["p50_ns"] == got["p90_ns"] == got["p99_ns"] == 20
+    assert got["span_ns"] == 20
+    assert got["throughput_tasks_per_s"] == pytest.approx(1e9 / 20)
+
+
+def test_slo_never_completed():
+    got = arrivals.slo_metrics([-1, -1, -1], [0, 10, 20], 3)
+    assert got == dict(n_completed=0, p50_ns=-1, p90_ns=-1, p99_ns=-1,
+                       span_ns=0, throughput_tasks_per_s=0.0)
+
+
+def test_slo_zero_span_clamps():
+    """All tasks released and done at the same instant: the busy span
+    clamps to 1 ns instead of dividing by zero."""
+    got = arrivals.slo_metrics([5, 5], [5, 5], 2)
+    assert got["span_ns"] == 1
+    assert got["throughput_tasks_per_s"] == pytest.approx(2e9)
+
+
+def test_slo_ignores_lane_padding():
+    """Only the first ``n_tasks`` entries are real — trailing lane padding
+    (whatever it holds) must not leak into the percentiles."""
+    done = [10, 20, -1, 999999]
+    rel = [0, 0, 0, 0]
+    got = arrivals.slo_metrics(done, rel, 3)
+    assert got["n_completed"] == 2
+    assert got["p99_ns"] == 20
+
+
+# ---------------- engine-level determinism ----------------
+
+def test_run_schedule_deterministic_under_arrivals():
+    """Same (graph, spec, arrivals, seed) → bitwise identical results and
+    SLO records across runs; the closed run reports SLOs too (latency
+    == completion time when everything releases at t=0)."""
+    from repro.core import run_schedule, taskgraph
+    from repro.core.scheduler import SimConfig
+
+    cfg = SimConfig(n_workers=8, n_zones=2, max_steps=60_000)
+    g = taskgraph.fib(8)
+    a = run_schedule(g, spec="na_ws", cfg=cfg, arrivals="poisson:2")
+    b = run_schedule(g, spec="na_ws", cfg=cfg, arrivals="poisson:2")
+    assert a.completed and b.completed
+    assert a.time_ns == b.time_ns and a.slo == b.slo
+    assert a.arrivals == "poisson@2"
+    assert a.slo["n_completed"] == g.n_tasks
+    assert 0 <= a.slo["p50_ns"] <= a.slo["p90_ns"] <= a.slo["p99_ns"]
+
+    closed = run_schedule(g, spec="na_ws", cfg=cfg)
+    assert closed.arrivals == "closed"
+    assert closed.slo["n_completed"] == g.n_tasks
+    # closed latency tails are bounded by the makespan
+    assert closed.slo["p99_ns"] <= closed.time_ns
+
+
+try:
+    from hypothesis import given, settings, strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:     # the deterministic cases above still run
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    _procs = hst.one_of(
+        hst.floats(min_value=0.1, max_value=64.0,
+                   allow_nan=False).map(arrivals.poisson),
+        hst.tuples(hst.floats(min_value=0.1, max_value=64.0),
+                   hst.floats(min_value=0.1, max_value=2.5)).map(
+                       lambda t: arrivals.lognormal(*t)),
+        hst.tuples(hst.floats(min_value=0.1, max_value=64.0),
+                   hst.integers(min_value=2, max_value=16),
+                   hst.floats(min_value=0.05, max_value=1.0)).map(
+                       lambda t: arrivals.bursty(*t)),
+    )
+
+    @settings(max_examples=40, deadline=None)
+    @given(proc=_procs, n=hst.integers(min_value=1, max_value=512),
+           seed=hst.integers(min_value=0, max_value=2**31 - 1))
+    def test_release_properties_random(proc, n, seed):
+        """Satellite acceptance: for random processes, sizes, and seeds —
+        same key → identical schedule; schedules sorted, non-negative,
+        int64, root at 0; padding inert."""
+        a = arrivals.release_times(proc, n, seed)
+        assert np.array_equal(a, arrivals.release_times(proc, n, seed))
+        assert a.dtype == np.int64 and a.shape == (n,)
+        assert a[0] == 0 and (a >= 0).all()
+        assert (np.diff(a) >= 0).all()
+        pad = arrivals.padded_release(proc, n, seed, pad_to=n + 7)
+        assert np.array_equal(pad[:n], a.astype(np.int32))
+        assert (pad[n:] == a[-1]).all()
+
+    @settings(max_examples=40, deadline=None)
+    @given(n=hst.integers(min_value=1, max_value=128),
+           seed=hst.integers(min_value=0, max_value=2**31 - 1))
+    def test_slo_matches_reference_random(n, seed):
+        rng = np.random.default_rng(seed)
+        rel = np.sort(rng.integers(0, 100, n))
+        done = rel + rng.integers(0, 50, n)
+        done[rng.random(n) < 0.25] = -1
+        got = arrivals.slo_metrics(done, rel, n)
+        assert got == pytest.approx(_reference_slo(done.tolist(),
+                                                   rel.tolist()))

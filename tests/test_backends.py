@@ -115,6 +115,41 @@ def test_backends_bitwise_end_to_end_all_executors(graph):
     assert (ref.counters["exec"] == graph.n_tasks).all()
 
 
+def test_backends_bitwise_open_system(graph):
+    """Satellite acceptance: open-system (streaming) cases — every lattice
+    point under Poisson arrivals plus long-tail/bursty spot checks — agree
+    bitwise across both backends and all three executors, SLO arrays
+    (p50/p90/p99 latency, throughput) included."""
+    specs = [CaseSpec(spec=s, n_workers=CFG.n_workers, n_zones=CFG.n_zones,
+                      t_interval=10, p_local=0.8, arrivals="poisson:2")
+             for s in LATTICE]
+    specs += [CaseSpec(spec="na_ws", n_workers=CFG.n_workers,
+                       n_zones=CFG.n_zones, t_interval=10, p_local=0.8,
+                       arrivals=a)
+              for a in ("lognormal:2:1.5", "bursty:2:4:0.5")]
+    ref = None
+    for backend in sorted(BACKENDS):
+        for strategy in ("serial", "batched", "sharded"):
+            res = run_cases(graph, specs, cfg=CFG, strategy=strategy,
+                            backend=backend)
+            assert res.completed.all(), (backend, strategy)
+            if ref is None:
+                ref = res
+                continue
+            label = (backend, strategy)
+            assert (res.time_ns == ref.time_ns).all(), label
+            assert (res.steps == ref.steps).all(), label
+            for n in CTR_NAMES:
+                assert (res.counters[n] == ref.counters[n]).all(), \
+                    (*label, n)
+            for n in ("p50_ns", "p90_ns", "p99_ns", "throughput"):
+                assert (getattr(res, n) == getattr(ref, n)).all(), \
+                    (*label, n)
+    assert (ref.counters["exec"] == graph.n_tasks).all()
+    # open-system latency tails are real (released later than t=0)
+    assert (ref.p99_ns > 0).all() and (ref.throughput > 0).all()
+
+
 def test_backend_excluded_from_cache_keys(graph, tmp_path):
     """Backends are bitwise-equal by contract, so cases simulated under one
     backend are valid cache hits under any other — the key must not depend

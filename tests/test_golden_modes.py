@@ -58,6 +58,29 @@ def test_legacy_modes_match_pre_redesign_golden(graphs, specs, strategy):
                 (*label, name)
 
 
+def test_golden_bitwise_with_open_cases_in_batch(graphs, specs):
+    """Satellite acceptance: closed-system cases mixed into the same batch
+    as open-system (streaming) ones — which forces every lane to carry a
+    padded release vector and routes the closed cases through the traced
+    ``closed`` flag instead of the no-vector fast path — still reproduce
+    the pre-redesign goldens bitwise, on every executor."""
+    open_specs = [CaseSpec(spec=RuntimeSpec.from_mode("na_ws"),
+                           n_workers=CFG.n_workers, n_zones=CFG.n_zones,
+                           graph=gi, arrivals="poisson:2", **GOLDEN["knobs"])
+                  for gi in range(len(graphs))]
+    for strategy in ("serial", "batched", "sharded"):
+        res = run_cases(list(graphs.values()), specs + open_specs, cfg=CFG,
+                        strategy=strategy)
+        assert res.completed.all(), strategy
+        for i, c in enumerate(GOLDEN["cases"]):
+            label = ("mixed-open-batch", strategy, c["graph"], c["mode"])
+            assert int(res.time_ns[i]) == c["time_ns"], label
+            assert int(res.steps[i]) == c["steps"], label
+            for name in CTR_NAMES:
+                assert int(res.counters[name][i]) == c["counters"][name], \
+                    (*label, name)
+
+
 def test_golden_covers_every_mode():
     modes = {c["mode"] for c in GOLDEN["cases"]}
     assert modes == {"gomp", "xgomp", "xgomptb", "na_rp", "na_ws"}

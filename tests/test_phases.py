@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import arrivals as arrivals_mod
 from repro.core import phases, taskgraph
 from repro.core.backends import get_backend
 from repro.core.scheduler import SimConfig, graph_arrays
@@ -70,18 +71,24 @@ def _advance(case, st, k_steps):
 
 
 def check_phases_padded_inert(spec: RuntimeSpec, n_workers: int, seed: int,
-                              k_steps: int, topology=None):
+                              k_steps: int, topology=None, arrivals=None):
     """Shared checker: advance ``k_steps`` composed steps, then apply each
     phase once and assert the padded lanes never move.  ``topology`` runs
     the same check on a hierarchical machine (tests/test_topology.py
-    sweeps it over random socket counts)."""
+    sweeps it over random socket counts); ``arrivals`` runs it open-system
+    — the spawn release gate and its clock sleep must be just as inert on
+    padded lanes as the closed path."""
     if topology is not None:
         zone = topology.zone_size_for(n_workers)
     else:
         zone = max(n_workers // 2, 1)
+    arr = arrivals_mod.resolve(arrivals)
+    release = None if arr is None else \
+        arrivals_mod.release_times(arr, GRAPH.n_tasks, seed)
     case = make_case(spec, n_workers, zone, seed=seed,
                      params=make_params(n_victim=2, n_steal=4, t_interval=5,
-                                        p_local=0.7), topology=topology)
+                                        p_local=0.7), topology=topology,
+                     release_ns=release)
     st = init_state(GARR, W, CFG.stack_cap, CFG.queue_cap, 4, case.seed)
     st = _advance(case, st, jnp.int32(k_steps))
     running = (st.n_done < GARR.n_tasks) & (st.step_i < CFG.max_steps) \
@@ -124,6 +131,20 @@ def test_padded_lanes_inert_deterministic(spec, n_w, seed, k):
     check_phases_padded_inert(spec, n_w, seed, k)
 
 
+#: one open-system process per kind — runs without hypothesis installed
+ARRIVAL_SAMPLES = ("poisson:2", "lognormal:2:1.5", "bursty:2:4:0.5")
+
+
+@pytest.mark.parametrize("arrivals", ARRIVAL_SAMPLES)
+def test_padded_lanes_inert_under_arrivals(arrivals):
+    """Satellite acceptance: padded lanes stay inert when the spawn phase
+    gates injection on release stamps (both DLB policies, odd workers)."""
+    check_phases_padded_inert(RuntimeSpec(balance="na_ws"), 5, 3, 8,
+                              arrivals=arrivals)
+    check_phases_padded_inert(RuntimeSpec(balance="na_rp"), 6, 1, 8,
+                              arrivals=arrivals)
+
+
 try:
     from hypothesis import given, settings, strategies as hst
     HAVE_HYPOTHESIS = True
@@ -143,3 +164,16 @@ if HAVE_HYPOTHESIS:
         counts, padded lanes are provably inert across every individual
         phase function."""
         check_phases_padded_inert(spec, n_workers, seed, k_steps)
+
+    @settings(max_examples=8, deadline=None)
+    @given(spec=hst.sampled_from(LATTICE),
+           n_workers=hst.integers(min_value=1, max_value=W - 1),
+           seed=hst.integers(min_value=0, max_value=2**16),
+           k_steps=hst.integers(min_value=1, max_value=10),
+           arrivals=hst.sampled_from(ARRIVAL_SAMPLES))
+    def test_padded_lanes_inert_random_arrivals(spec, n_workers, seed,
+                                                k_steps, arrivals):
+        """The same inertness claim on the open-system path, for random
+        lattice points, worker counts, and arrival kinds."""
+        check_phases_padded_inert(spec, n_workers, seed, k_steps,
+                                  arrivals=arrivals)

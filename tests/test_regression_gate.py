@@ -1,0 +1,172 @@
+"""benchmarks/check_regression.py end-to-end: the bench-regression gate.
+
+The gate is the thing standing between a silent simulator-semantics change
+and a green CI, so it gets its own end-to-end tests: write-baseline →
+check round-trips, a >tolerance perturbation of a streaming SLO field (and
+of a closed-system field) must exit 1, within-tolerance drift passes, and
+missing/unreadable records fail loudly.  Runs jax-free on synthetic
+records — the module is loaded by file path like ``benchmarks/run.py``.
+"""
+
+import copy
+import functools
+import importlib.util
+import json
+import os
+
+import pytest
+
+
+@functools.lru_cache(maxsize=1)
+def load_gate():
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "check_regression.py")
+    spec = importlib.util.spec_from_file_location("_bench_gate", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+#: a minimal record exercising every FIELD_PATTERNS family, streaming
+#: SLO fields included
+FRESH = {
+    "ablation_lattice": {
+        "speedup_attribution": {
+            "queue": {"xqueue_over_locked_global": 50.0},
+            "barrier": {"tree_over_centralized_count": 2.3},
+            "balance": {"na_rp_over_static_rr": 1.01,
+                        "na_ws_over_static_rr": 0.97},
+        },
+    },
+    "numa_ablation": {
+        "speedup_attribution": {
+            "flat": {"queue": {"xqueue_over_locked_global": 52.0},
+                     "barrier": {"tree_over_centralized_count": 2.3},
+                     "balance": {"na_ws_over_static_rr": 0.96}},
+        },
+        "makespan_geomean_by_topology": {"flat": 166000.0,
+                                         "dual_socket_24": 163000.0},
+    },
+    "streaming_slo": {
+        "slo_by_topology": {
+            "flat": {
+                "poisson@1": {"offered_tasks_per_us": 1.0,
+                              "throughput_geomean": 400000.0,
+                              "p99_geomean_ns": 450000.0},
+                "poisson@16": {"offered_tasks_per_us": 16.0,
+                               "throughput_geomean": 1500000.0,
+                               "p99_geomean_ns": 140000.0},
+            },
+            "dual_socket_24": {
+                "poisson@1": {"offered_tasks_per_us": 1.0,
+                              "throughput_geomean": 398000.0,
+                              "p99_geomean_ns": 460000.0},
+            },
+        },
+    },
+}
+
+
+@pytest.fixture()
+def paths(tmp_path):
+    fresh = tmp_path / "fresh.json"
+    baseline = tmp_path / "baseline.json"
+    fresh.write_text(json.dumps(FRESH))
+    return str(fresh), str(baseline)
+
+
+def _gate(argv):
+    return load_gate().main(argv)
+
+
+def test_write_baseline_then_check_passes(paths, capsys):
+    fresh, baseline = paths
+    assert _gate(["--fresh", fresh, "--baseline", baseline,
+                  "--write-baseline"]) == 0
+    rec = json.loads(open(baseline).read())
+    # streaming SLO fields made it into the gated set
+    streaming = [p for p in rec["fields"]
+                 if p.startswith("streaming_slo.")]
+    assert ("streaming_slo.slo_by_topology.flat.poisson@1.p99_geomean_ns"
+            in streaming)
+    assert ("streaming_slo.slo_by_topology.flat.poisson@1."
+            "throughput_geomean" in streaming)
+    # the helper fields (offered load) are record metadata, not gated
+    assert not any(p.endswith("offered_tasks_per_us") for p in streaming)
+    assert _gate(["--fresh", fresh, "--baseline", baseline]) == 0
+
+
+@pytest.mark.parametrize("path,factor", [
+    (("streaming_slo", "slo_by_topology", "flat", "poisson@1",
+      "p99_geomean_ns"), 1.30),
+    (("streaming_slo", "slo_by_topology", "flat", "poisson@16",
+      "throughput_geomean"), 0.70),
+    (("numa_ablation", "makespan_geomean_by_topology", "flat"), 1.30),
+])
+def test_gate_exits_1_on_perturbation(paths, path, factor):
+    """Satellite acceptance: perturbing a gated field — a streaming p99,
+    a streaming throughput, or a closed-system geomean — by more than the
+    ±25% tolerance makes the gate exit 1."""
+    fresh, baseline = paths
+    assert _gate(["--fresh", fresh, "--baseline", baseline,
+                  "--write-baseline"]) == 0
+    rec = copy.deepcopy(FRESH)
+    node = rec
+    for k in path[:-1]:
+        node = node[k]
+    node[path[-1]] *= factor
+    open(fresh, "w").write(json.dumps(rec))
+    assert _gate(["--fresh", fresh, "--baseline", baseline]) == 1
+
+
+def test_gate_tolerates_small_drift(paths):
+    fresh, baseline = paths
+    assert _gate(["--fresh", fresh, "--baseline", baseline,
+                  "--write-baseline"]) == 0
+    rec = copy.deepcopy(FRESH)
+    cell = rec["streaming_slo"]["slo_by_topology"]["flat"]["poisson@1"]
+    cell["p99_geomean_ns"] *= 1.10            # inside ±25%
+    open(fresh, "w").write(json.dumps(rec))
+    assert _gate(["--fresh", fresh, "--baseline", baseline]) == 0
+    # ...but a tightened CLI tolerance catches it
+    assert _gate(["--fresh", fresh, "--baseline", baseline,
+                  "--tolerance", "0.05"]) == 1
+
+
+def test_gate_fails_on_missing_streaming_section(paths):
+    """A fresh record that silently dropped the streaming suite (e.g. the
+    suite stopped running in CI) must fail, not pass by omission."""
+    fresh, baseline = paths
+    assert _gate(["--fresh", fresh, "--baseline", baseline,
+                  "--write-baseline"]) == 0
+    rec = copy.deepcopy(FRESH)
+    del rec["streaming_slo"]
+    open(fresh, "w").write(json.dumps(rec))
+    assert _gate(["--fresh", fresh, "--baseline", baseline]) == 1
+
+
+def test_gate_unreadable_inputs_exit_2(paths):
+    fresh, baseline = paths
+    assert _gate(["--fresh", os.path.join(os.path.dirname(fresh),
+                                          "nope.json"),
+                  "--baseline", baseline]) == 2
+    open(baseline, "w").write("{not json")
+    assert _gate(["--fresh", fresh, "--baseline", baseline]) == 2
+
+
+def test_committed_baseline_gates_streaming_fields():
+    """The committed smoke baseline actually contains streaming SLO fields
+    (both p99 and throughput, on both topologies) — the gate's coverage of
+    the open-system mode is real, not hypothetical."""
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "baselines", "smoke.json")
+    with open(path) as f:
+        fields = json.load(f)["fields"]
+    for topo in ("flat", "dual_socket_24"):
+        assert any(p.startswith(f"streaming_slo.slo_by_topology.{topo}.")
+                   and p.endswith(".p99_geomean_ns") for p in fields)
+        assert any(p.startswith(f"streaming_slo.slo_by_topology.{topo}.")
+                   and p.endswith(".throughput_geomean") for p in fields)
+    # and the closed-system fields are still gated alongside
+    assert any(p.startswith("numa_ablation.makespan_geomean_by_topology")
+               for p in fields)

@@ -86,7 +86,8 @@ def test_axis_values_match_run_py_registry():
     only_lattice = [n for n, info in bench_run.SUITES.items()
                     if bench_run.spec_covers(info["axes"], off)]
     # only the full-lattice suites reach off-ladder combos
-    assert only_lattice == ["ablation_lattice", "numa_ablation"]
+    assert only_lattice == ["ablation_lattice", "numa_ablation",
+                            "streaming_slo"]
 
 
 def test_invalid_axis_values_rejected():

@@ -205,13 +205,14 @@ def test_run_grid_axis_labeling(graphs):
     res = run_grid(graphs, balancers=("static_rr", "na_ws"),
                    n_workers=(8, 16), seeds=(0, 1), cfg=CFG)
     assert list(res.grid_axes) == ["app", "queue", "barrier", "balance",
-                                   "topology", "n_workers", "seed",
-                                   "n_victim", "n_steal", "t_interval",
-                                   "p_local"]
+                                   "topology", "arrivals", "n_workers",
+                                   "seed", "n_victim", "n_steal",
+                                   "t_interval", "p_local"]
     assert res.grid_axes["app"] == tuple(g.name for g in graphs)
     assert res.grid_axes["queue"] == ("xqueue",)
     assert res.grid_axes["barrier"] == ("tree",)
     assert res.grid_axes["topology"] == ("flat",)
+    assert res.grid_axes["arrivals"] == ("closed",)
     assert res.grid_axes["n_workers"] == (8, 16)
     shape = tuple(len(v) for v in res.grid_axes.values())
     assert res.makespans.shape == shape
