@@ -1,7 +1,8 @@
 """Regression gate for the benchmark record: fresh vs committed baseline.
 
 CI's ``bench-regression`` job runs the deterministic smoke suites
-(``ablation_lattice`` + ``numa_ablation`` + ``streaming_slo``), then
+(``ablation_lattice`` + ``numa_ablation`` + ``streaming_slo`` +
+``moe_serving``), then
 compares the key speedup/throughput fields of the freshly written
 ``experiments/bench/BENCH_sweep_smoke.json`` against the committed
 ``benchmarks/baselines/smoke.json`` with a relative tolerance (±25% by
@@ -14,7 +15,7 @@ simulator's semantics changed, not that a runner was slow.
     python benchmarks/check_regression.py
     # regenerate the baseline after an intentional physics change:
     BENCH_SMOKE=1 python -m benchmarks.run ablation_lattice \
-        numa_ablation streaming_slo
+        numa_ablation streaming_slo moe_serving
     python benchmarks/check_regression.py --write-baseline
 
 The baseline file stores its own tolerance and the flat list of compared
@@ -41,6 +42,12 @@ FIELD_PATTERNS = (
     "numa_ablation.makespan_geomean_by_topology.*",
     "streaming_slo.slo_by_topology.*.*.p99_geomean_ns",
     "streaming_slo.slo_by_topology.*.*.throughput_geomean",
+    "moe_serving.speedup_attribution.*.queue.*",
+    "moe_serving.speedup_attribution.*.barrier.*",
+    "moe_serving.speedup_attribution.*.balance.*",
+    "moe_serving.makespan_geomean_by_app.*",
+    "moe_serving.decode_slo_by_topology.*.*.p99_geomean_ns",
+    "moe_serving.decode_slo_by_topology.*.*.throughput_geomean",
 )
 
 DEFAULT_TOLERANCE = 0.25

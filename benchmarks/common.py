@@ -13,6 +13,7 @@ import time
 
 import numpy as np
 
+from repro import apps as apps_mod
 from repro.core import make_params, run_schedule, taskgraph
 from repro.core.scheduler import SimConfig
 
@@ -21,23 +22,13 @@ OUT_DIR = "experiments/bench"
 #: CI smoke mode: tiny instances, tiny machine (see module docstring)
 SMOKE = os.environ.get("BENCH_SMOKE", "") == "1"
 
-#: scaled-down instances (paper §VI scales its DLB sweeps the same way)
-APPS = {
-    "fib": dict(n=16),
-    "nqueens": dict(n=8),
-    "fp": dict(max_depth=8),
-    "health": dict(levels=4),
-    "uts": dict(n_target=3000),
-    "fft": dict(levels=10),
-    "strassen": dict(levels=3),
-    "sort": dict(levels=9),
-    "align": dict(n_seqs=24),
-}
-if SMOKE:
-    APPS.update(fib=dict(n=10), nqueens=dict(n=6), fp=dict(max_depth=5),
-                health=dict(levels=3), uts=dict(n_target=300),
-                fft=dict(levels=6), strassen=dict(levels=2),
-                sort=dict(levels=5), align=dict(n_seqs=8))
+#: the AppSpec scale preset every suite builds at (paper §VI scales its
+#: DLB sweeps the same way; the size tables live on the registry now)
+SCALE = "smoke" if SMOKE else "bench"
+
+#: the paper's BOTS app set with its per-scale kwargs (registry-derived;
+#: kept as a dict because the tuner and Fig.-suites iterate/inspect it)
+APPS = {a: apps_mod.get(a).kwargs(SCALE) for a in taskgraph.BOTS_APPS}
 
 # stack_cap 64: the BOTS-analogue DAGs never need more than ~tree-depth
 # range entries per worker (overflow is detected and fails the run); the
@@ -48,8 +39,10 @@ SIM = (SimConfig(n_workers=16, n_zones=4, max_steps=60_000, stack_cap=64)
                       stack_cap=64))
 
 
-def graph_for(app: str):
-    return taskgraph.build(app, **APPS.get(app, {}))
+def graph_for(app: str, **kw):
+    """Build any registered app (BOTS or model-derived) at the harness
+    scale; ``kw`` overrides preset knobs (e.g. ``alpha=`` for ``moe``)."""
+    return apps_mod.build(app, scale=SCALE, **kw)
 
 
 def emit(rows, name):

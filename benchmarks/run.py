@@ -67,6 +67,13 @@ SUITES = {
              "backends; p50/p90/p99 + throughput-vs-load curves "
              "(BENCH_sweep.json, gated by check_regression.py)",
         axes=dict(queue=_Q, barrier=_B, balance=_L)),
+    "moe_serving": dict(
+        desc="model-stack workload apps (repro.apps) — MoE expert "
+             "dispatch at Zipf skews + continuous-batching decode, "
+             "closed lattice x topologies and the decode service under "
+             "Poisson loads, on all executors + both backends "
+             "(BENCH_sweep.json, gated by check_regression.py)",
+        axes=dict(queue=_Q, barrier=_B, balance=_L)),
     "bots_speedup": dict(
         desc="Fig. 4/5 — per-mode makespans + XGOMP(TB) speedups",
         axes=dict(queue=_Q, barrier=_B, balance=("static_rr",))),
@@ -104,7 +111,9 @@ SUITES = {
         axes=dict(queue=("xqueue",), barrier=("tree",),
                   balance=("na_rp", "na_ws"))),
     "moe_balance": dict(
-        desc="beyond-paper — DLB policies as MoE-routing balancers",
+        desc="beyond-paper — DLB policies as MoE-routing balancers "
+             "(moe_serving carries the same router stats per skew at "
+             "graph-extraction level)",
         axes=None),
     "roofline": dict(
         desc="aggregation — counter-derived roofline summary",

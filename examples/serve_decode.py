@@ -1,17 +1,68 @@
-"""Batched serving example: prefill a batch of prompts, then greedy-decode
-continuations with the KV-cache decode step (gemma2 smoke variant:
-local/global alternating attention, ring caches on the local layers).
+"""Serving-side decode, two views of the same workload.
+
+The default path is the scheduler's view: ``repro.apps`` extracts the
+continuous-batching decode loop of ``launch/serve.py`` as a deterministic
+task graph — per-sequence decode-step tasks with KV-length-dependent
+durations, chained by batch-join barriers — and runs it through the
+simulator both closed-system (makespan) and open-system (Poisson request
+arrivals, p50/p99 completion-latency SLOs), comparing the paper's SLB
+baseline against the best DLB point.
+
+``--model`` instead runs the real thing: prefill a batch of prompts and
+greedy-decode continuations with the KV-cache decode step (gemma2 smoke
+variant: local/global alternating attention, ring caches on local layers).
 
     PYTHONPATH=src python examples/serve_decode.py
+    PYTHONPATH=src python examples/serve_decode.py --model
 """
 
-from repro.launch import serve
+import sys
+
+from repro import apps
+from repro.core.state import SimConfig
+from repro.core.sweep import run_grid
+
+#: closed (makespan) + one Poisson offered load (tail-latency SLOs)
+ARRIVALS = (None, "poisson:4")
+
+#: SLB baseline vs the paper's best-performing DLB policy
+BALANCERS = ("static_rr", "na_ws")
 
 
-def main():
-    gen = serve.main(["--arch", "gemma2_2b", "--smoke", "--batch", "4",
-                      "--prompt-len", "48", "--gen", "16"])
-    assert gen.shape == (4, 16)
+def main(argv=None, *, scale="smoke"):
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if "--model" in argv:
+        from repro.launch import serve
+        gen = serve.main(["--arch", "gemma2_2b", "--smoke", "--batch", "4",
+                          "--prompt-len", "48", "--gen", "16"])
+        assert gen.shape == (4, 16)
+        return gen
+
+    g = apps.build("decode", scale=scale)
+    print(f"decode graph {g.name}: {g.n_tasks} tasks")
+    cfg = SimConfig(n_workers=16, n_zones=4, max_steps=120_000,
+                    stack_cap=64)
+    res = run_grid(g, queues=("xqueue",), barriers=("tree",),
+                   balancers=BALANCERS, arrivals=ARRIVALS,
+                   n_workers=(cfg.n_workers,), n_zones=cfg.n_zones,
+                   cfg=cfg, cache=None)
+    assert res.completed.all()
+
+    # grid order: app x queue x barrier x balance x arrivals (x trailing
+    # singleton axes); squeeze to (balance, arrivals)
+    shape = (len(BALANCERS), len(ARRIVALS))
+    ms = res.makespans.reshape(shape)
+    p50 = res.slo("p50_ns").reshape(shape)
+    p99 = res.slo("p99_ns").reshape(shape)
+    for b, bal in enumerate(BALANCERS):
+        for a, arr in enumerate(ARRIVALS):
+            system = "closed" if arr is None else arr
+            print(f"{bal:>9s} | {system:<9s} makespan {ms[b, a]/1e3:8.1f}us"
+                  f"  p50 {p50[b, a]/1e3:7.1f}us  p99 {p99[b, a]/1e3:7.1f}us")
+    # the whole point of the DLB policies: they should not lose to SLB on
+    # the skew-prone decode graph, closed or open
+    assert ms[1, 0] <= ms[0, 0] * 1.05, "na_ws lost to static_rr on decode"
+    return res
 
 
 if __name__ == "__main__":

@@ -153,7 +153,8 @@ class ResultCache:
 
     @staticmethod
     def _entry_meta(path: str) -> tuple:
-        """``(code_version, topology, arrivals)`` an entry was stamped with.
+        """``(code_version, topology, arrivals, app)`` an entry was stamped
+        with.
 
         Sentinels mirror the PR-3 version-split handling: a record written
         before stamping existed reports ``unversioned``; one written before
@@ -161,18 +162,21 @@ class ResultCache:
         flat-machine entry — topology never entered flat keys — so it is
         *reported*, not rejected); one written before the streaming mode
         reports ``pre-streaming`` (likewise a valid closed-system entry);
+        one written before the workload-apps stamp reports ``pre-apps``
+        (keys never carried the app name, so these too stay valid hits);
         a file that no longer parses reports ``unreadable`` on every
         axis."""
         try:
             with open(path) as f:
                 rec = json.load(f)
         except (OSError, ValueError):
-            return "unreadable", "unreadable", "unreadable"
+            return ("unreadable",) * 4
         if not isinstance(rec, dict):
-            return "unreadable", "unreadable", "unreadable"
+            return ("unreadable",) * 4
         return (rec.get("code_version", "unversioned"),
                 rec.get("topology", "pre-topology"),
-                rec.get("arrivals", "pre-streaming"))
+                rec.get("arrivals", "pre-streaming"),
+                rec.get("app", "pre-apps"))
 
     @classmethod
     def _entry_version(cls, path: str) -> str:
@@ -204,20 +208,22 @@ class ResultCache:
         versions: dict = {}
         topologies: dict = {}
         arrivals: dict = {}
+        apps: dict = {}
         for path in self._entries():
             n += 1
             try:
                 size += os.path.getsize(path)
             except OSError:
                 pass
-            v, topo, arr = self._entry_meta(path)
+            v, topo, arr, app = self._entry_meta(path)
             versions[v] = versions.get(v, 0) + 1
             topologies[topo] = topologies.get(topo, 0) + 1
             arrivals[arr] = arrivals.get(arr, 0) + 1
+            apps[app] = apps.get(app, 0) + 1
         return dict(root=self.root, entries=n, bytes=size,
                     session_hits=self.hits, session_misses=self.misses,
                     code_version=CODE_VERSION, versions=versions,
-                    topologies=topologies, arrivals=arrivals,
+                    topologies=topologies, arrivals=arrivals, apps=apps,
                     stale_entries=n - versions.get(CODE_VERSION, 0))
 
     def clear(self, version: Optional[str] = None) -> int:

@@ -233,6 +233,10 @@ def run_cases(graphs: Sequence[TaskGraph] | TaskGraph,
                     graphs[s.graph].n_tasks)
                 fill_slo(i, slo)
                 if store is not None:
+                    # app stamp = the graph's family name ("moe(E64,..)"
+                    # → "moe"); metadata only — keys stay app-blind by
+                    # design (identically-shaped graphs share entries), so
+                    # warm caches stay warm across this stamp's arrival
                     store.put(keys[i], dict(
                         clock_max=int(clock_max[i]),
                         counters={n: int(ctr_sum[i][k])
@@ -240,7 +244,8 @@ def run_cases(graphs: Sequence[TaskGraph] | TaskGraph,
                         n_done=int(n_done[i]), overflow=bool(overflow[i]),
                         step_i=int(step_i[i]), slo=slo,
                         topology=topology_mod.label(s.topology),
-                        arrivals=arrivals_mod.label(s.arrivals)))
+                        arrivals=arrivals_mod.label(s.arrivals),
+                        app=graphs[s.graph].name.split("(")[0]))
 
     # barrier episode per case (host-side: the barrier axis, W, and the
     # machine topology are known per spec, matching run_schedule's

@@ -112,6 +112,9 @@ class TaskGraph:
 MEM_BOUND = {
     "fib": 0.05, "nqueens": 0.1, "fft": 0.4, "sort": 0.7, "strassen": 0.7,
     "uts": 0.2, "health": 0.5, "fp": 0.3, "align": 0.1, "posp": 0.3,
+    # workload apps (repro.apps): expert FFNs stream dispatch buffers;
+    # decode streams the KV cache
+    "moe": 0.35, "decode": 0.5,
 }
 
 

@@ -1,0 +1,271 @@
+"""Workload-apps subsystem (``repro.apps``): registry, graph invariants,
+golden digests, router parity, and engine integration.
+
+The apps registry is the single surface every harness builds graphs
+through, so its contracts get pinned here: ``validate()`` holds for every
+registered app at every scale preset (deterministic corner sweep, plus a
+hypothesis property over the knob space when hypothesis is installed),
+the extracted graphs are acyclic, bit-stable across sessions (golden
+digests), faithful to the model stack (capacity-formula parity), and run
+bitwise-identically on every executor and step backend.
+"""
+
+import numpy as np
+import pytest
+
+from repro import apps
+from repro.apps import decode as decode_mod
+from repro.apps import moe as moe_mod
+from repro.core import taskgraph
+from repro.core.cache import graph_digest
+from repro.core.spec import RuntimeSpec
+from repro.core.state import SimConfig
+from repro.core.sweep import CaseSpec, run_cases
+
+CFG = SimConfig(n_workers=8, n_zones=2, max_steps=60_000, stack_cap=64)
+
+#: fixed-seed tiny-scale digests — a change means graph *content* changed
+#: (durations, topology, or rng streams), which invalidates every cached
+#: result and every gated benchmark number downstream; regenerate
+#: deliberately, alongside the bench baselines
+GOLDEN_DIGESTS = {
+    "moe": ("moe(E8,T96,k2,a1)", 22,
+            "98b0b3b3eba1d5830860f09832645798f61b4b1155b953fdc19fbbbd4f96c906"),
+    "decode": ("decode(L4,S6,g4)", 74,
+               "19061f73178a160c142a95ba4535e2935ac46bcb89e18c51f1b7ba8a3fc66b73"),
+}
+
+
+# ------------------------------ registry ----------------------------------
+
+def test_registry_covers_bots_and_model_families():
+    assert set(apps.names("bots")) == set(taskgraph.BUILDERS)
+    assert set(apps.names("model")) == {"moe", "decode"}
+    assert set(apps.names()) == set(apps.names("bots")) | {"moe", "decode"}
+    with pytest.raises(KeyError, match="unknown app"):
+        apps.get("nope")
+
+
+def test_scale_presets_and_overrides():
+    spec = apps.get("moe")
+    assert spec.kwargs(None) == {}
+    for scale in apps.SCALES:
+        assert spec.kwargs(scale)
+    # overrides overlay the preset
+    g = apps.build("moe", scale="tiny", alpha=2.0)
+    assert g.name == "moe(E8,T96,k2,a2)"
+    # scale=None -> the builder's own defaults
+    assert apps.build("fib", n=5).n_tasks == taskgraph.fib(5).n_tasks
+
+
+def test_app_label():
+    assert apps.app_label("moe(E64,T4096,k2,a1)") == "moe"
+    assert apps.app_label("fib(16)") == "fib"
+
+
+# ------------------------- validate() invariants --------------------------
+
+@pytest.mark.parametrize("name", apps.names())
+def test_every_app_validates_at_tiny_scale(name):
+    g = apps.build(name, scale="tiny")
+    g.validate()
+    assert g.n_tasks >= 2 and (g.dur >= 1).all()
+
+
+#: deterministic knob corners (run without hypothesis): skew extremes,
+#: bundle granularities, capacity regimes, lane/sequence shapes
+MOE_CORNERS = [
+    dict(n_experts=4, n_tokens=32, top_k=1, alpha=0.0),
+    dict(n_experts=8, n_tokens=64, top_k=3, alpha=2.0, bundle=None),
+    dict(n_experts=16, n_tokens=48, top_k=2, alpha=1.0, bundle=4,
+         capacity_factor=4.0),
+    dict(n_experts=2, n_tokens=16, top_k=2, alpha=0.5, seed=7),
+]
+DECODE_CORNERS = [
+    dict(n_lanes=1, n_seqs=1, prompt_mean=4, gen_mean=1),
+    dict(n_lanes=2, n_seqs=9, prompt_mean=8, gen_mean=3, seed=5),
+    dict(n_lanes=8, n_seqs=5, prompt_mean=16, gen_mean=2),
+    dict(n_lanes=3, n_seqs=12, prompt_mean=32, gen_mean=6, seed=1),
+]
+
+
+@pytest.mark.parametrize("kw", MOE_CORNERS)
+def test_moe_corners_validate(kw):
+    moe_mod.moe(**kw).validate()
+
+
+@pytest.mark.parametrize("kw", DECODE_CORNERS)
+def test_decode_corners_validate(kw):
+    decode_mod.decode(**kw).validate()
+
+
+def _assert_acyclic(g):
+    """Kahn's algorithm over the full edge set (spawn + notify + the
+    join-releases-its-children edge): all tasks drain, so no cycles."""
+    T = g.n_tasks
+    indeg = np.zeros(T, np.int64)
+    children = [[] for _ in range(T)]
+    for t in range(T):
+        for c in range(g.first_child[t], g.first_child[t] + g.n_children[t]):
+            children[t].append(c)
+            indeg[c] += 1
+        j = g.notify[t]
+        if j >= 0:
+            children[t].append(j)
+            indeg[j] += 1
+    queue = [t for t in range(T) if indeg[t] == 0]
+    drained = 0
+    while queue:
+        t = queue.pop()
+        drained += 1
+        for c in children[t]:
+            indeg[c] -= 1
+            if indeg[c] == 0:
+                queue.append(c)
+    assert drained == T, f"cycle: {T - drained} tasks never drain"
+
+
+@pytest.mark.parametrize("name", ("moe", "decode"))
+def test_extracted_graphs_acyclic(name):
+    _assert_acyclic(apps.build(name, scale="tiny"))
+    _assert_acyclic(apps.build(name, scale="smoke"))
+
+
+try:
+    from hypothesis import given, settings, strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(n_experts=hst.integers(2, 16), n_tokens=hst.integers(8, 128),
+           top_k=hst.integers(1, 3),
+           alpha=hst.sampled_from((0.0, 0.5, 1.0, 2.0)),
+           bundle=hst.sampled_from((None, 2, 8, 16)),
+           seed=hst.integers(0, 2**16))
+    def test_moe_validates_random(n_experts, n_tokens, top_k, alpha,
+                                  bundle, seed):
+        g = moe_mod.moe(n_experts=n_experts, n_tokens=n_tokens,
+                        top_k=min(top_k, n_experts), alpha=alpha,
+                        bundle=bundle, seed=seed)
+        g.validate()
+        _assert_acyclic(g)
+
+    @settings(max_examples=25, deadline=None)
+    @given(n_lanes=hst.integers(1, 8), n_seqs=hst.integers(1, 16),
+           prompt_mean=hst.integers(2, 64), gen_mean=hst.integers(1, 8),
+           seed=hst.integers(0, 2**16))
+    def test_decode_validates_random(n_lanes, n_seqs, prompt_mean,
+                                     gen_mean, seed):
+        g = decode_mod.decode(n_lanes=n_lanes, n_seqs=n_seqs,
+                              prompt_mean=prompt_mean, gen_mean=gen_mean,
+                              seed=seed)
+        g.validate()
+        _assert_acyclic(g)
+
+
+# ------------------------ determinism + golden pins -----------------------
+
+@pytest.mark.parametrize("name", ("moe", "decode"))
+def test_golden_digest(name):
+    gname, n_tasks, digest = GOLDEN_DIGESTS[name]
+    g = apps.build(name, scale="tiny")
+    assert g.name == gname and g.n_tasks == n_tasks
+    assert graph_digest(g) == digest
+    # and a rebuild is bit-identical (one rng stream, no hidden state)
+    assert graph_digest(apps.build(name, scale="tiny")) == digest
+
+
+def test_seed_changes_graph():
+    a = apps.build("moe", scale="tiny")
+    b = apps.build("moe", scale="tiny", seed=3)
+    assert graph_digest(a) != graph_digest(b)
+
+
+# --------------------------- model-stack parity ---------------------------
+
+def test_capacity_matches_models_moe():
+    """apps.moe.capacity must be models.moe.capacity_for on the same
+    (tokens, top_k, experts, factor) — the graph extraction replays the
+    real router's capacity rule."""
+    from repro.configs.base import ModelConfig, MoECfg
+    from repro.models.moe import capacity_for
+    for e, t, k, f in [(64, 4096, 2, 1.25), (8, 96, 2, 1.25),
+                       (32, 512, 2, 4.0), (16, 1000, 3, 1.0),
+                       (4, 8, 1, 0.25)]:
+        cfg = ModelConfig(name="parity", family="moe", n_layers=1,
+                          d_model=64, n_heads=2, n_kv_heads=2, d_ff=128,
+                          vocab=256,
+                          moe=MoECfg(n_experts=e, top_k=k, d_expert_ff=64,
+                                     capacity_factor=f))
+        assert moe_mod.capacity(t, k, e, f) == capacity_for(cfg, t), \
+            (e, t, k, f)
+
+
+def test_router_loads_statistics():
+    """Skew knob does what it claims: alpha=0 routes near-uniformly,
+    higher alpha concentrates load up to the capacity bound."""
+    flat = moe_mod.router_loads(n_experts=16, n_tokens=2048, alpha=0.0,
+                                capacity_factor=4.0)
+    skew = moe_mod.router_loads(n_experts=16, n_tokens=2048, alpha=2.0,
+                                capacity_factor=4.0)
+    assert flat["imbalance"] < 1.3 < skew["imbalance"]
+    assert skew["max_load"] == skew["capacity"]  # hot expert saturates
+    # conservation: kept + dropped = T * top_k
+    for r in (flat, skew):
+        assert r["routed_total"] == 2048 * 2
+        assert int(r["kept"].sum()) + r["dropped"] == r["routed_total"]
+
+
+def test_moe_graph_mirrors_router_loads():
+    """One bundle task per ceil(kept/bundle) per expert, all notifying the
+    combine join; durations scale with bundle token counts."""
+    kw = dict(n_experts=8, n_tokens=96, top_k=2, bundle=4, seed=0)
+    loads = moe_mod.router_loads(**{k: v for k, v in kw.items()
+                                    if k != "bundle"})
+    g = moe_mod.moe(**kw)
+    kept = loads["kept"]
+    n_heads = int((kept > 0).sum())
+    n_bundles = int(sum(-(-int(k) // 4) for k in kept if k))
+    # root + heads + bundles + 1 combine join
+    assert g.n_tasks == 1 + n_heads + n_bundles + 1
+    join = int(np.argmax(g.join_dep))
+    assert g.join_dep[join] == n_bundles
+    assert (g.notify >= 0).sum() == n_bundles
+
+
+# -------------------------- engine integration ----------------------------
+
+def test_apps_bitwise_across_executors_and_backends():
+    """Tentpole acceptance: the new graphs run bitwise-identically across
+    serial/batched/sharded executors and reference/pallas backends, SLO
+    arrays included (decode's join-spawns-children chain exercises the
+    engine path no BOTS builder does)."""
+    graphs = [apps.build("moe", scale="tiny"),
+              apps.build("decode", scale="tiny")]
+    specs = [
+        CaseSpec(spec=sp, n_workers=8, n_zones=2, n_victim=2, n_steal=4,
+                 t_interval=50, p_local=1.0, graph=gi, arrivals=ar)
+        for gi in range(len(graphs))
+        for sp in (RuntimeSpec(), RuntimeSpec("xqueue", "tree", "na_ws"))
+        for ar in (None, "poisson:4")
+    ]
+    ref = run_cases(graphs, specs, cfg=CFG, strategy="batched")
+    assert ref.completed.all()
+    for i, s in enumerate(specs):
+        assert ref.counters["exec"][i] == graphs[s.graph].n_tasks
+    for strategy in ("serial", "sharded"):
+        res = run_cases(graphs, specs, cfg=CFG, strategy=strategy)
+        assert (res.time_ns == ref.time_ns).all(), strategy
+        for n in ref.counters:
+            assert (res.counters[n] == ref.counters[n]).all(), (strategy, n)
+        for n in ("p50_ns", "p90_ns", "p99_ns", "throughput"):
+            assert (getattr(res, n) == getattr(ref, n)).all(), (strategy, n)
+    pallas = run_cases(graphs, specs, cfg=CFG, strategy="batched",
+                       backend="pallas")
+    assert (pallas.time_ns == ref.time_ns).all()
+    for n in ref.counters:
+        assert (pallas.counters[n] == ref.counters[n]).all(), n

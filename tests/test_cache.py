@@ -266,3 +266,36 @@ def test_cache_migration_legacy_entries_miss_cleanly(tmp_path, graph):
     warm = run_cases(graph, [spec], cfg=CFG, cache=c)
     assert warm.cache_hits == 1
     assert (warm.time_ns == res.time_ns).all()
+
+
+def test_stats_apps_split(tmp_path, graph):
+    """Satellite acceptance: `cache stats` splits entries by the stamped
+    app family (mirroring the topologies/arrivals splits); entries written
+    before the stamp existed land in a `pre-apps` bucket and remain valid
+    hits — keys never carried the app name, so warm caches stay warm."""
+    import json
+
+    from repro import apps
+
+    c = ResultCache(str(tmp_path))
+    graphs = [graph, apps.build("moe", scale="tiny"),
+              apps.build("decode", scale="tiny")]
+    specs = [CaseSpec(spec="na_ws", n_workers=8, n_zones=2, graph=gi)
+             for gi in range(3)]
+    cold = run_cases(graphs, specs, cfg=CFG, cache=c)
+    assert cold.completed.all()
+    st = c.stats()
+    assert st["apps"] == {"fib": 1, "moe": 1, "decode": 1}
+
+    # strip one entry's app stamp: an older record, still a valid hit
+    path = c._path(case_key(graph_digest(graphs[1]), specs[1], CFG))
+    with open(path) as f:
+        rec = json.load(f)
+    del rec["app"]
+    with open(path, "w") as f:
+        json.dump(rec, f)
+    st = c.stats()
+    assert st["apps"] == {"fib": 1, "pre-apps": 1, "decode": 1}
+    warm = run_cases(graphs, specs, cfg=CFG, cache=c)
+    assert warm.cache_hits == len(specs)
+    assert (warm.time_ns == cold.time_ns).all()

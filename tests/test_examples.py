@@ -1,0 +1,45 @@
+"""The examples run end-to-end at tiny scale.
+
+Modules load by file path — the tests exercise exactly what
+``python examples/<name>.py`` executes — but call ``main()`` in-process
+with shrunken knobs so the smoke stays CI-fast.
+"""
+
+import importlib.util
+import os
+
+import numpy as np
+import pytest
+
+
+def _load(name):
+    path = os.path.join(os.path.dirname(__file__), "..", "examples",
+                        f"{name}.py")
+    spec = importlib.util.spec_from_file_location(f"_example_{name}", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_quickstart_tiny():
+    """Train the quickstart model for half the default steps: loss must
+    fall (default batch/seq — smaller batches are too noisy for the
+    example's own loss assertion)."""
+    first, last = _load("quickstart").main(steps=20)
+    assert last < first
+
+
+def test_serve_decode_graph_tiny():
+    """The default serve_decode path: decode graph from the apps registry
+    through the scheduler, closed + Poisson arrivals, SLOs populated."""
+    res = _load("serve_decode").main([], scale="tiny")
+    assert res.completed.all()
+    assert np.isfinite(res.p99_ns).all() and (res.p99_ns > 0).all()
+    assert np.isfinite(res.throughput).all() and (res.throughput > 0).all()
+
+
+@pytest.mark.slow
+def test_serve_decode_model_path():
+    """--model delegates to the real KV-cache decode loop."""
+    gen = _load("serve_decode").main(["--model"])
+    assert gen.shape == (4, 16)

@@ -64,6 +64,31 @@ FRESH = {
             },
         },
     },
+    "moe_serving": {
+        "speedup_attribution": {
+            "zipf0": {"queue": {"xqueue_over_locked_global": 48.0},
+                      "barrier": {"tree_over_centralized_count": 2.2},
+                      "balance": {"na_rp_over_static_rr": 0.70,
+                                  "na_ws_over_static_rr": 0.94}},
+            "zipf2": {"queue": {"xqueue_over_locked_global": 47.0},
+                      "barrier": {"tree_over_centralized_count": 2.2},
+                      "balance": {"na_ws_over_static_rr": 0.97}},
+        },
+        "makespan_geomean_by_app": {"moe_zipf0": 233000.0,
+                                    "moe_zipf2": 199000.0,
+                                    "decode": 76000.0},
+        "best_balance_by_skew": {"zipf0": "static_rr"},   # string: ungated
+        "decode_slo_by_topology": {
+            "flat": {
+                "poisson@2": {"offered_tasks_per_us": 2.0,
+                              "throughput_geomean": 1020000.0,
+                              "p99_geomean_ns": 21800.0},
+                "poisson@8": {"offered_tasks_per_us": 8.0,
+                              "throughput_geomean": 1340000.0,
+                              "p99_geomean_ns": 64800.0},
+            },
+        },
+    },
 }
 
 
@@ -102,11 +127,17 @@ def test_write_baseline_then_check_passes(paths, capsys):
     (("streaming_slo", "slo_by_topology", "flat", "poisson@16",
       "throughput_geomean"), 0.70),
     (("numa_ablation", "makespan_geomean_by_topology", "flat"), 1.30),
+    (("moe_serving", "speedup_attribution", "zipf2", "balance",
+      "na_ws_over_static_rr"), 1.40),
+    (("moe_serving", "makespan_geomean_by_app", "moe_zipf0"), 0.70),
+    (("moe_serving", "decode_slo_by_topology", "flat", "poisson@8",
+      "p99_geomean_ns"), 1.30),
 ])
 def test_gate_exits_1_on_perturbation(paths, path, factor):
     """Satellite acceptance: perturbing a gated field — a streaming p99,
-    a streaming throughput, or a closed-system geomean — by more than the
-    ±25% tolerance makes the gate exit 1."""
+    a streaming throughput, a closed-system geomean, or any of the
+    moe_serving skew-attribution / geomean / decode-SLO fields — by more
+    than the ±25% tolerance makes the gate exit 1."""
     fresh, baseline = paths
     assert _gate(["--fresh", fresh, "--baseline", baseline,
                   "--write-baseline"]) == 0
@@ -170,3 +201,29 @@ def test_committed_baseline_gates_streaming_fields():
     # and the closed-system fields are still gated alongside
     assert any(p.startswith("numa_ablation.makespan_geomean_by_topology")
                for p in fields)
+
+
+def test_committed_baseline_gates_moe_serving_fields():
+    """The committed smoke baseline gates the workload-apps suite: per-skew
+    attribution on every axis, per-app makespan geomeans (decode included),
+    and the decode service's open-system SLO fields on both topologies."""
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "baselines", "smoke.json")
+    with open(path) as f:
+        fields = json.load(f)["fields"]
+    for skew in ("zipf0", "zipf1", "zipf2"):
+        for axis in ("queue", "barrier", "balance"):
+            assert any(p.startswith(
+                f"moe_serving.speedup_attribution.{skew}.{axis}.")
+                for p in fields), (skew, axis)
+    for app in ("moe_zipf0", "moe_zipf1", "moe_zipf2", "decode"):
+        assert f"moe_serving.makespan_geomean_by_app.{app}" in fields
+    for topo in ("flat", "dual_socket_24"):
+        prefix = f"moe_serving.decode_slo_by_topology.{topo}."
+        assert any(p.startswith(prefix) and p.endswith(".p99_geomean_ns")
+                   for p in fields)
+        assert any(p.startswith(prefix)
+                   and p.endswith(".throughput_geomean") for p in fields)
+    # strings (the best-policy answer) must never be gated
+    assert not any(p.startswith("moe_serving.best_balance_by_skew")
+                   for p in fields)

@@ -87,7 +87,7 @@ def test_axis_values_match_run_py_registry():
                     if bench_run.spec_covers(info["axes"], off)]
     # only the full-lattice suites reach off-ladder combos
     assert only_lattice == ["ablation_lattice", "numa_ablation",
-                            "streaming_slo"]
+                            "streaming_slo", "moe_serving"]
 
 
 def test_invalid_axis_values_rejected():
