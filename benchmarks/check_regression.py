@@ -48,6 +48,10 @@ FIELD_PATTERNS = (
     "moe_serving.makespan_geomean_by_app.*",
     "moe_serving.decode_slo_by_topology.*.*.p99_geomean_ns",
     "moe_serving.decode_slo_by_topology.*.*.throughput_geomean",
+    # step_backends: only the intra-run ratios — the absolute walls in
+    # backends.* are machine-dependent and deliberately ungated
+    "step_backends.wall_ratio_vs_reference.*",
+    "step_backends.engine.pipeline_speedup",
 )
 
 DEFAULT_TOLERANCE = 0.25

@@ -14,6 +14,10 @@ RuntimeSpec ablation lattice.
         --backend pallas <suite> ...                      # run on a step
                                                           # backend (default
                                                           # reference)
+    PYTHONPATH=src python -m benchmarks.run \\
+        --profile <suite> ...                             # jax.profiler trace
+                                                          # + engine dispatch
+                                                          # stats for the run
     PYTHONPATH=src python -m benchmarks.run cache stats   # result-cache info
     PYTHONPATH=src python -m benchmarks.run cache clear   # drop cached results
     PYTHONPATH=src python -m benchmarks.run \\
@@ -41,7 +45,7 @@ AXIS_VALUES = dict(
 
 # step-backend names, spelled out for the same no-jax reason (keep in sync
 # with repro.core.backends.BACKENDS — test_backends asserts it)
-BACKEND_VALUES = ("reference", "pallas")
+BACKEND_VALUES = ("reference", "pallas", "pallas_fused")
 
 _Q, _B, _L = AXIS_VALUES["queue"], AXIS_VALUES["barrier"], \
     AXIS_VALUES["balance"]
@@ -99,8 +103,9 @@ SUITES = {
         desc="engine timing — serial vs batched vs warm-cache re-run",
         axes=dict(queue=("xqueue",), barrier=("tree",), balance=_L)),
     "step_backends": dict(
-        desc="step-backend throughput — reference jnp vs pallas kernels "
-             "(bitwise asserted; BENCH_sweep.json)",
+        desc="step-backend throughput — reference jnp vs pallas kernels vs "
+             "the fused megakernel, plus engine pipeline speedup (bitwise "
+             "asserted; BENCH_sweep.json, gated by check_regression.py)",
         axes=dict(queue=("xqueue",), barrier=("tree",),
                   balance=("static_rr", "na_ws"))),
     "tune": dict(
@@ -243,11 +248,28 @@ def main() -> None:
         # switches every suite in the run without touching their configs
         os.environ["REPRO_STEP_BACKEND"] = argv[i + 1]
         argv = argv[:i] + argv[i + 2:]
+    profile = "--profile" in argv
+    if profile:
+        argv.remove("--profile")
     only = set(argv)
     unknown = only - set(SUITES)
     if unknown:
         raise SystemExit(f"unknown suite(s): {sorted(unknown)}; "
                          f"available: {sorted(SUITES)} (see --list)")
+    tracer = None
+    if profile:
+        # jax.profiler.trace wraps the whole selected run (viewable with
+        # tensorboard / xprof); engine dispatch accounting prints at the end
+        import contextlib
+
+        import jax
+
+        from repro.core import executors as executors_mod
+        trace_dir = os.path.join("experiments", "bench", "profile")
+        tracer = contextlib.ExitStack()
+        tracer.enter_context(jax.profiler.trace(trace_dir))
+        executors_mod.reset_engine_stats()
+        profile_t0 = time.time()
     failures = []
     ran = 0
     for name, info in SUITES.items():
@@ -265,6 +287,16 @@ def main() -> None:
         except Exception as e:  # keep the harness going; report at the end
             failures.append((name, repr(e)))
             print(f"# {name} FAILED: {e!r}", flush=True)
+    if tracer is not None:
+        tracer.close()
+        wall = time.time() - profile_t0
+        stats = dict(executors_mod.ENGINE_STATS)
+        per_step = (wall / stats["sim_steps"] * 1e6
+                    if stats["sim_steps"] else float("nan"))
+        print(f"# profile: trace under {trace_dir}; "
+              f"{stats['dispatches']} dispatches over {stats['chunks']} "
+              f"chunks, {stats['sim_steps']} simulated steps, "
+              f"{per_step:.1f} us/step wall", flush=True)
     if failures:
         print("# FAILURES:", failures)
         raise SystemExit(1)

@@ -1,17 +1,32 @@
-"""Step-backend throughput: reference jnp kernels vs Pallas kernels.
+"""Step-backend throughput: reference jnp vs Pallas vs the fused megakernel.
 
-Runs the same small spec × app grid through the experiment service once per
+Runs the same spec × app × seed grid through the sweep engine once per
 registered step backend (see repro.core.backends), asserts the results are
 bitwise identical — the backends' core contract — and records per-backend
-step throughput (worker-scheduling-points per second, warm, post-compile)
-under the ``step_backends`` key of ``BENCH_sweep.json`` (smoke copies go to
-``experiments/bench/BENCH_sweep_smoke.json``).
+wall clock + step throughput (worker-scheduling-points per second, warm,
+post-compile) under the ``step_backends`` key of ``BENCH_sweep.json``
+(smoke copies go to ``experiments/bench/BENCH_sweep_smoke.json``).
 
-On this CPU container the pallas backend runs its kernels in interpret
-mode, so the number it posts is the *cost of the abstraction* today, not a
-win — the point of recording it is (a) pinning the bitwise contract in a
-benchmark artifact and (b) a baseline for the day the step kernels compile
-on a real accelerator.
+Measurement protocol: one warm-up sweep per backend pays compile, then the
+timed repetitions are *interleaved* across backends (round-robin, min-of-N)
+so slow drift in machine load hits every backend equally — on a shared CPU
+host back-to-back blocks can drift >20% between backends, which would
+swamp the effect being measured.
+
+What the numbers mean on this CPU container (interpret-mode pallas):
+
+* ``pallas`` runs the per-phase queue kernels through the interpreter —
+  its >1 ratio prices the per-call abstraction, it does not contradict
+  the bitwise contract (asserted every run).
+* ``pallas_fused`` is the whole-step megakernel with its own batched
+  ``custom_vmap`` rule — one launch per scheduling point even under the
+  vmapped executors, which is what brings the wall back to (or under)
+  reference parity.  The gate pins that parity.
+
+Gated fields (benchmarks/check_regression.py, ±25%): the intra-run ratios
+``wall_ratio_vs_reference.{pallas,pallas_fused}`` and
+``engine.pipeline_speedup`` — machine-independent by construction, unlike
+the absolute walls, which are recorded but not gated.
 """
 
 import time
@@ -19,11 +34,14 @@ import time
 from benchmarks.common import SIM, SMOKE, csv_row, emit, graph_for, \
     merge_bench_sweep
 from repro.core.backends import BACKENDS
+from repro.core.executors import ENGINE_STATS, reset_engine_stats
 from repro.core.scheduler import CTR_NAMES
 from repro.core.spec import RuntimeSpec
 from repro.core.sweep import CaseSpec, run_cases
 
-APPS = ("fib",) if SMOKE else ("fib", "sort")
+APPS = ("fib", "sort")
+SEEDS = 4 if SMOKE else 2
+REPS = 8 if SMOKE else 3
 
 #: one static and one DLB lattice point: covers both queue code paths the
 #: pallas kernels replace (round-robin push/pop and the WS-heavy traffic)
@@ -33,29 +51,45 @@ SPECS = (RuntimeSpec(),                       # SLB: xqueue + tree + static
 
 def _grid(graphs):
     return [CaseSpec(spec=sp, n_workers=SIM.n_workers, n_zones=SIM.n_zones,
-                     t_interval=10, p_local=0.8, graph=gi)
-            for gi in range(len(graphs)) for sp in SPECS]
+                     t_interval=10, p_local=0.8, seed=s, graph=gi)
+            for gi in range(len(graphs)) for sp in SPECS
+            for s in range(SEEDS)]
+
+
+def _min_med(ws):
+    return round(min(ws), 4), round(sorted(ws)[len(ws) // 2], 4)
 
 
 def run():
     graphs = [graph_for(a) for a in APPS]
     specs = _grid(graphs)
+    names = sorted(BACKENDS)
+
+    def sweep_once(backend, pipeline=True):
+        # cache off — every backend must really execute, or the bitwise
+        # claim is vacuous
+        return run_cases(graphs, specs, cfg=SIM, cache=None,
+                         backend=backend, pipeline=pipeline)
+
     results = {}
-    timing = {}
-    for name in sorted(BACKENDS):
-        # warm-up: pay compile outside the timed window (cache off — every
-        # backend must really execute, or the bitwise claim is vacuous)
-        run_cases(graphs, specs, cfg=SIM, cache=None, backend=name)
+    for name in names:               # warm-up: compile outside the clock
+        results[name] = sweep_once(name)
+
+    walls = {name: [] for name in names}
+    nopipe = []
+    for _ in range(REPS):            # interleaved timed reps (see docstring)
+        for name in names:
+            t0 = time.perf_counter()
+            sweep_once(name)
+            walls[name].append(time.perf_counter() - t0)
         t0 = time.perf_counter()
-        res = run_cases(graphs, specs, cfg=SIM, cache=None, backend=name)
-        wall = time.perf_counter() - t0
-        results[name] = res
-        steps = int(res.steps.sum())
-        timing[name] = dict(
-            wall_s=round(wall, 3), steps=steps,
-            worker_steps_per_s=round(steps * SIM.n_workers / wall, 1))
-        csv_row(f"step_backends/{name}", wall * 1e6 / max(steps, 1),
-                f"{timing[name]['worker_steps_per_s']:.0f} worker-steps/s")
+        sweep_once("reference", pipeline=False)
+        nopipe.append(time.perf_counter() - t0)
+
+    # engine dispatch accounting for one reference sweep
+    reset_engine_stats()
+    sweep_once("reference")
+    engine = dict(ENGINE_STATS)
 
     ref = results["reference"]
     assert ref.completed.all()
@@ -67,24 +101,43 @@ def run():
         for c in CTR_NAMES:
             assert (res.counters[c] == ref.counters[c]).all(), (name, c)
 
+    steps = int(ref.steps.sum())
+    timing = {}
+    for name in names:
+        wall, med = _min_med(walls[name])
+        timing[name] = dict(
+            wall_s=wall, wall_med_s=med, steps=steps,
+            worker_steps_per_s=round(steps * SIM.n_workers / wall, 1))
+        csv_row(f"step_backends/{name}", wall * 1e6 / max(steps, 1),
+                f"{timing[name]['worker_steps_per_s']:.0f} worker-steps/s")
+
+    ref_wall = timing["reference"]["wall_s"]
+    ratios = {name: round(timing[name]["wall_s"] / ref_wall, 3)
+              for name in names if name != "reference"}
+    engine["pipeline_speedup"] = round(_min_med(nopipe)[0] / ref_wall, 3)
+
     record = dict(
         apps=list(APPS),
         specs=[s.slug for s in SPECS],
         n_workers=SIM.n_workers,
         n_configs=len(specs),
+        reps=REPS,
         backends=timing,
-        pallas_vs_reference=round(
-            timing["pallas"]["wall_s"] / timing["reference"]["wall_s"], 2),
+        wall_ratio_vs_reference=ratios,
+        engine=engine,
         bitwise_identical_across_backends=True,
-        note=("warm post-compile wall clock of the identical run_cases grid "
-              "per step backend; pallas runs interpret-mode kernels on "
-              "non-TPU hosts, so >1 ratios here price the abstraction, "
-              "they do not contradict the bitwise contract (asserted)"),
+        note=("interleaved min-of-N warm wall clock of the identical "
+              "run_cases grid per step backend; pallas runs interpret-mode "
+              "kernels on non-TPU hosts (its ratio prices the per-phase "
+              "abstraction), pallas_fused is the one-launch-per-step "
+              "megakernel; ratios and pipeline_speedup are gated, absolute "
+              "walls are machine-dependent and are not"),
     )
     rows = [dict(backend=k, **v) for k, v in timing.items()]
     emit(rows, "step_backends")
     merge_bench_sweep({"step_backends": record})
     print(f"# step_backends: {len(specs)} configs, "
           + ", ".join(f"{k} {v['wall_s']}s" for k, v in timing.items())
-          + f", pallas/reference {record['pallas_vs_reference']}x wall")
+          + ", ratios " + ", ".join(f"{k} {v}x" for k, v in ratios.items())
+          + f", pipeline speedup {engine['pipeline_speedup']}x")
     return rows

@@ -11,6 +11,10 @@ the :class:`~repro.core.phases.StepOps` kernel set the phases run on:
   SPSC push / pop-scan of :mod:`repro.core.xqueue` and the one-hot counter
   bumps), following the :mod:`repro.kernels.ops` idiom: compiled on TPU,
   ``interpret=True`` elsewhere, so the same backend runs in CI on CPU.
+* ``pallas_fused`` — the whole-step megakernel: the entire composed
+  pipeline (adopt → spawn → dequeue → thief → victim → exec) as *one*
+  Pallas launch per scheduling point (:mod:`repro.kernels.sched_step`),
+  running the reference math cores inside the kernel body.
 
 Backends are **bitwise identical by contract** — same makespans, counters,
 step counts on every lattice point and executor (tests/test_backends.py
@@ -28,8 +32,6 @@ from __future__ import annotations
 
 import abc
 import os
-
-import jax.numpy as jnp
 
 from repro.core import phases
 from repro.core.costs import CostModel
@@ -60,32 +62,20 @@ class StepBackend(abc.ABC):
         Python control flow — so the returned ``step`` vmaps over a batch
         of cases.
 
-        Every phase is additionally gated on ``running`` (the run loop's
-        own termination predicate): once a simulation finishes, its step is
-        a strict no-op.  That lets the batched engine drive a plain
-        ``while any(running)`` loop over vmapped steps without per-element
-        freeze/select machinery — finished batch elements simply stop
-        changing.
+        The composition itself is :func:`repro.core.phases.step_pipeline`
+        (one definition, every backend): each phase is gated on the shared
+        :func:`~repro.core.phases.run_gate` liveness predicate, so once a
+        simulation finishes or stalls its step is a strict no-op.  That
+        lets the batched engine drive a plain ``while any(alive)`` loop
+        over vmapped steps without per-element freeze/select machinery —
+        finished batch elements simply stop changing.
         """
         del W, S  # fixed by the state shapes the phases read
         ops = self.step_ops()
 
         def step(st):
-            running = (st.n_done < g.n_tasks) & (st.step_i < max_steps) \
-                & ~st.overflow
-            st = phases.adopt_phase(st, running, case=case, costs=costs,
-                                    ops=ops)
-            st = phases.spawn_phase(st, running, g=g, case=case, costs=costs,
-                                    ops=ops)
-            st, task, ts, found = phases.dequeue_phase(
-                st, running, case=case, costs=costs, ops=ops)
-            st = phases.thief_phase(st, found, running, case=case,
-                                    costs=costs, ops=ops)
-            st = phases.victim_phase(st, found, case=case, costs=costs,
-                                     ops=ops)
-            st = phases.exec_phase(st, task, ts, found, g=g, case=case,
-                                   costs=costs, ops=ops)
-            return st._replace(step_i=st.step_i + running.astype(jnp.int32))
+            return phases.step_pipeline(st, g=g, case=case, costs=costs,
+                                        ops=ops, max_steps=max_steps)
 
         return step
 
@@ -113,7 +103,36 @@ class PallasBackend(StepBackend):
         return sched_queue.pallas_ops()
 
 
-BACKENDS = {b.name: b for b in (ReferenceBackend(), PallasBackend())}
+class PallasFusedBackend(StepBackend):
+    """The whole-step megakernel: one Pallas launch per scheduling point.
+
+    Instead of swapping individual queue kernels into the jnp pipeline,
+    this backend lowers the *entire* composed step — adopt → spawn →
+    dequeue → thief → victim → exec — into a single ``pallas_call`` (see
+    :mod:`repro.kernels.sched_step`).  The kernel body runs the very same
+    :func:`repro.core.phases.step_pipeline` over the reference math, so
+    bitwise equality with ``reference`` holds by construction; what changes
+    is the launch granularity: six phase dispatches and their intermediate
+    buffer round-trips collapse into one fused kernel whose working set
+    stays resident for the whole step.
+    """
+
+    name = "pallas_fused"
+
+    def step_ops(self) -> StepOps:
+        # the fused kernel runs the reference math cores *inside* the
+        # megakernel; there is no per-op kernel set to expose
+        return REFERENCE_OPS
+
+    def build_step(self, W: int, S: int, costs: CostModel, g: GraphArrays,
+                   case: SweepCase, max_steps: int):
+        del W, S
+        from repro.kernels import sched_step
+        return sched_step.build_fused_step(costs, g, case, max_steps)
+
+
+BACKENDS = {b.name: b for b in (ReferenceBackend(), PallasBackend(),
+                                PallasFusedBackend())}
 
 
 def resolve_name(name: str | None) -> str:

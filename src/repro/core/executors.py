@@ -25,6 +25,16 @@ Inert padding: a padding lane replays the chunk's first case against a
 zero-task graph, so the step function's ``running`` gate is false from
 step 0 — padding costs (almost) nothing and is dropped on the way out.
 
+Engine mechanics shared by all executors: the initial state is built by a
+separate jitted init and *donated* to the run (``donate_argnums`` — XLA
+aliases the init buffers into the while-loop carry instead of holding a
+dead copy; the sharded path inits through ``shard_map`` so the donated
+shardings match), the batched while cond threads a per-lane alive mask
+(the vmapped :func:`~repro.core.phases.run_gate`) so a chunk exits as soon
+as every lane is finished or stalled, and every executor splits into a
+non-blocking ``submit`` + blocking ``collect`` so the sweep layer can
+overlap chunk *k+1*'s host-side work with chunk *k*'s device execution.
+
 ``strategy="auto"`` picks ``sharded`` whenever more than one device is
 visible (e.g. ``XLA_FLAGS=--xla_force_host_platform_device_count=8``, or a
 real accelerator mesh), otherwise ``vmap`` with a ``serial`` fallback for
@@ -47,11 +57,26 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import arrivals as arrivals_mod
 from repro.core import backends as backends_mod
+from repro.core import phases as phases_mod
 from repro.core.plan import CaseSpec, ChunkPlan
 from repro.core.scheduler import (NC, GraphArrays, SimConfig, SweepCase,
-                                  _run_cached, init_state, make_case,
-                                  make_params)
+                                  _init_cached, _run_cached, init_state,
+                                  make_case, make_params)
 from repro.core.taskgraph import TaskGraph
+
+#: process-wide engine counters (``benchmarks/run.py --profile`` reads
+#: them): ``dispatches`` counts device dispatches (one per serial case /
+#: one per batched chunk), ``chunks`` the chunks submitted, ``sim_steps``
+#: the simulated scheduling points executed (accumulated by the sweep
+#: layer).  Reset with :func:`reset_engine_stats`.
+ENGINE_STATS = {"dispatches": 0, "chunks": 0, "sim_steps": 0}
+
+
+def reset_engine_stats() -> dict:
+    """Zero the engine counters; returns the dict for convenience."""
+    for k in ENGINE_STATS:
+        ENGINE_STATS[k] = 0
+    return ENGINE_STATS
 
 
 class ChunkRaw(NamedTuple):
@@ -96,54 +121,101 @@ class ExecContext:
             closed=s.arrivals is None)
 
 
-def _batch_body(cfg: SimConfig, gq_cap: int, gb, cb: SweepCase):
-    """Run a stacked batch of (graph, case) pairs to completion.
-
-    The while loop is written manually over vmapped *steps* rather than
-    vmapping the whole per-config run: the step function is a strict no-op
-    for finished elements (see ``_build_step``'s ``running`` gate), so the
-    loop needs no per-element freeze — which would otherwise materialize a
-    select over the entire simulator state every iteration.  Returns only
-    the arrays the host needs (clock, counters, termination info)."""
-
-    backend = backends_mod.get_backend(cfg.backend)
+def _init_body(cfg: SimConfig, gq_cap: int, gb, cb: SweepCase):
+    """Fresh stacked state for a chunk — split from the run body so the run
+    jit can *donate* the state (see ``_run_batch``)."""
 
     def init_one(g, case):
         return init_state(g, cfg.n_workers, cfg.stack_cap, cfg.queue_cap,
                           gq_cap, case.seed)
 
+    return jax.vmap(init_one)(gb, cb)
+
+
+_init_batch = jax.jit(_init_body, static_argnums=(0, 1))
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _init_batch_sharded(cfg: SimConfig, gq_cap: int, n_dev: int, gb,
+                        cb: SweepCase):
+    """Sharded init: the produced state is laid out ``P("b")`` on the same
+    mesh the run uses, so donating it to ``_run_batch_sharded`` aliases
+    buffers in place (a single-device state would defeat the donation —
+    mismatched shardings can't alias)."""
+    mesh = Mesh(np.asarray(jax.devices()[:n_dev]), ("b",))
+    return shard_map(functools.partial(_init_body, cfg, gq_cap), mesh=mesh,
+                     in_specs=(P("b"), P("b")), out_specs=P("b"),
+                     check_rep=False)(gb, cb)
+
+
+def _batch_body(cfg: SimConfig, gq_cap: int, gb, cb: SweepCase, st0):
+    """Run a stacked batch of (graph, case) pairs to completion.
+
+    The while loop is written manually over vmapped *steps* rather than
+    vmapping the whole per-config run: the step function is a strict no-op
+    for finished elements (the step body's internal ``running`` gate), so
+    the loop needs no per-element freeze — which would otherwise
+    materialize a select over the entire simulator state every iteration.
+
+    The loop carry additionally threads the per-lane alive mask (the
+    vmapped :func:`~repro.core.phases.run_gate`, the *same* predicate the
+    step gates on), recomputed after each sweep of steps: the chunk exits
+    as soon as every lane is finished **or stalled**, instead of dragging
+    a deadlocked lane to the padded max-step horizon.  Rows stay bitwise
+    identical to the serial executor's because the gate freezes each lane's
+    ``step_i``/clock at the same step everywhere.  Returns only the arrays
+    the host needs (clock, counters, termination info)."""
+
+    backend = backends_mod.get_backend(cfg.backend)
+
     def step_one(g, case, st):
         return backend.build_step(cfg.n_workers, cfg.stack_cap, cfg.costs,
                                   g, case, cfg.max_steps)(st)
 
+    def gate_one(g, st):
+        return phases_mod.run_gate(st, g, cfg.max_steps)
+
     step_b = jax.vmap(step_one)
+    gate_b = jax.vmap(gate_one)
 
-    def cond(st):
-        return jnp.any((st.n_done < gb.n_tasks)
-                       & (st.step_i < cfg.max_steps) & ~st.overflow)
+    def cond(carry):
+        return jnp.any(carry[0])
 
-    st0 = jax.vmap(init_one)(gb, cb)
-    st = jax.lax.while_loop(cond, lambda s: step_b(gb, cb, s), st0)
-    return st.clock, st.ctr, st.n_done, st.overflow, st.step_i, st.done_ns
+    def body(carry):
+        st = step_b(gb, cb, carry[1])
+        return gate_b(gb, st), st
+
+    # the *full* final state is returned (not just the host-visible
+    # arrays): donation aliases inputs to outputs, so every donated st0
+    # leaf needs a matching output leaf to land in.  The host only fetches
+    # the ChunkRaw fields; the rest is dropped with the pending handle.
+    _, st = jax.lax.while_loop(cond, body, (gate_b(gb, st0), st0))
+    return st
 
 
-_run_batch = jax.jit(_batch_body, static_argnums=(0, 1))
+#: the stacked state is donated (built by ``_init_batch`` /
+#: ``_init_batch_sharded`` and never reused): XLA aliases its buffers into
+#: the while-loop carry instead of keeping a dead full-SimState copy live
+_run_batch = jax.jit(_batch_body, static_argnums=(0, 1),
+                     donate_argnums=(4,))
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+@functools.partial(jax.jit, static_argnums=(0, 1, 2), donate_argnums=(5,))
 def _run_batch_sharded(cfg: SimConfig, gq_cap: int, n_dev: int, gb,
-                       cb: SweepCase):
+                       cb: SweepCase, st0):
     """``shard_map`` of the batched body over the leading batch axis.
 
     Each device traces the identical per-shard program (the body has no
     collectives), so results are bitwise those of ``_run_batch`` on the
-    same lanes — sharding only changes *where* a lane runs."""
+    same lanes — sharding only changes *where* a lane runs.  Every device
+    drives its own alive-mask loop over its slice, so a device whose lanes
+    all finish (or stall) stops stepping early."""
     mesh = Mesh(np.asarray(jax.devices()[:n_dev]), ("b",))
     body = functools.partial(_batch_body, cfg, gq_cap)
     # check_rep=False: jax 0.4.x has no replication rule for while_loop;
     # nothing here is replicated anyway (every in/out is batch-sharded)
-    return shard_map(body, mesh=mesh, in_specs=(P("b"), P("b")),
-                     out_specs=(P("b"),) * 6, check_rep=False)(gb, cb)
+    return shard_map(body, mesh=mesh, in_specs=(P("b"), P("b"), P("b")),
+                     out_specs=P("b"), check_rep=False)(gb, cb, st0)
 
 
 def _stack_chunk(ctx: ExecContext, specs_chunk: Sequence[CaseSpec],
@@ -162,32 +234,60 @@ def _stack_chunk(ctx: ExecContext, specs_chunk: Sequence[CaseSpec],
 
 
 class Executor(abc.ABC):
-    """One way of running a planned chunk.  Stateless; see EXECUTORS."""
+    """One way of running a planned chunk.  Stateless; see EXECUTORS.
+
+    The run is split into a non-blocking ``submit`` (host-side stacking +
+    init + async device dispatch — JAX dispatch returns before the device
+    finishes) and a blocking ``collect`` (device→host fetch).  The split is
+    what lets :func:`repro.core.sweep.run_cases` pipeline chunks: chunk
+    *k+1*'s planning/stacking/dispatch overlaps chunk *k*'s execution.
+    ``run_chunk`` remains the submit-then-collect composition."""
 
     name: str = "?"
 
     @abc.abstractmethod
+    def submit(self, ctx: ExecContext, specs: Sequence[CaseSpec],
+               chunk: ChunkPlan):
+        """Dispatch ``chunk.indices`` of ``specs`` without blocking;
+        returns an opaque pending handle for ``collect``."""
+
+    @abc.abstractmethod
+    def collect(self, pending) -> ChunkRaw:
+        """Block on a ``submit`` handle; rows follow chunk order."""
+
     def run_chunk(self, ctx: ExecContext, specs: Sequence[CaseSpec],
                   chunk: ChunkPlan) -> ChunkRaw:
         """Run ``chunk.indices`` of ``specs``; rows follow chunk order."""
+        return self.collect(self.submit(ctx, specs, chunk))
 
 
 class SerialExecutor(Executor):
     name = "serial"
 
-    def run_chunk(self, ctx, specs, chunk):
-        n, W = chunk.n_real, ctx.cfg.n_workers
-        T = ctx.garr[0].dur.shape[0]
+    def submit(self, ctx, specs, chunk):
+        states = []
+        for i in chunk.indices:
+            s = specs[i]
+            garr, case = ctx.garr[s.graph], ctx.case_for(s)
+            st0 = _init_cached(ctx.cfg, ctx.gq_cap, garr, case)
+            states.append(
+                _run_cached(ctx.cfg, ctx.gq_cap, garr, case, st0))
+            ENGINE_STATS["dispatches"] += 1
+        ENGINE_STATS["chunks"] += 1
+        return states
+
+    def collect(self, states):
+        n = len(states)
+        W = states[0].clock.shape[0]
+        T = states[0].done_ns.shape[0]
         clock = np.zeros((n, W), np.int64)
         ctr = np.zeros((n, W, NC), np.int64)
         n_done = np.zeros(n, np.int64)
         overflow = np.zeros(n, bool)
         step_i = np.zeros(n, np.int64)
         done_ns = np.zeros((n, T), np.int64)
-        for j, i in enumerate(chunk.indices):
-            s = specs[i]
-            st = jax.block_until_ready(_run_cached(
-                ctx.cfg, ctx.gq_cap, ctx.garr[s.graph], ctx.case_for(s)))
+        for j, st in enumerate(states):
+            st = jax.block_until_ready(st)
             clock[j] = np.asarray(st.clock)
             ctr[j] = np.asarray(st.ctr)
             n_done[j] = int(st.n_done)
@@ -203,18 +303,25 @@ class VmapExecutor(Executor):
     def padded_size(self, chunk: ChunkPlan) -> int:
         return chunk.padded_size
 
-    def run_chunk(self, ctx, specs, chunk):
-        n = chunk.n_real
+    def submit(self, ctx, specs, chunk):
         gb, cb = _stack_chunk(ctx, [specs[i] for i in chunk.indices],
                               self.padded_size(chunk))
-        cl, ct, nd, ov, si, dn = jax.block_until_ready(
-            self._dispatch(ctx, gb, cb))
-        return ChunkRaw(np.asarray(cl)[:n], np.asarray(ct)[:n],
-                        np.asarray(nd)[:n], np.asarray(ov)[:n],
-                        np.asarray(si)[:n], np.asarray(dn)[:n])
+        ENGINE_STATS["dispatches"] += 1
+        ENGINE_STATS["chunks"] += 1
+        return self._dispatch(ctx, gb, cb), chunk.n_real
+
+    def collect(self, pending):
+        st, n = pending
+        st = jax.block_until_ready(st)
+        return ChunkRaw(np.asarray(st.clock)[:n], np.asarray(st.ctr)[:n],
+                        np.asarray(st.n_done)[:n],
+                        np.asarray(st.overflow)[:n],
+                        np.asarray(st.step_i)[:n],
+                        np.asarray(st.done_ns)[:n])
 
     def _dispatch(self, ctx, gb, cb):
-        return _run_batch(ctx.cfg, ctx.gq_cap, gb, cb)
+        st0 = _init_batch(ctx.cfg, ctx.gq_cap, gb, cb)
+        return _run_batch(ctx.cfg, ctx.gq_cap, gb, cb, st0)
 
 
 class ShardedExecutor(VmapExecutor):
@@ -228,8 +335,9 @@ class ShardedExecutor(VmapExecutor):
         return -(-p // n_dev) * n_dev
 
     def _dispatch(self, ctx, gb, cb):
-        return _run_batch_sharded(ctx.cfg, ctx.gq_cap, jax.device_count(),
-                                  gb, cb)
+        n_dev = jax.device_count()
+        st0 = _init_batch_sharded(ctx.cfg, ctx.gq_cap, n_dev, gb, cb)
+        return _run_batch_sharded(ctx.cfg, ctx.gq_cap, n_dev, gb, cb, st0)
 
 
 EXECUTORS = {e.name: e for e in

@@ -571,3 +571,55 @@ def exec_phase(st: SimState, task, ts, found, *, g: GraphArrays,
 #: the pipeline in step order (adopt_phase is the NA-RP pre-push hook)
 PHASES = ("adopt_phase", "spawn_phase", "dequeue_phase", "thief_phase",
           "victim_phase", "exec_phase")
+
+
+# ---------------- the composed step ----------------
+def run_gate(st: SimState, g: GraphArrays, max_steps: int) -> jax.Array:
+    """The run loop's per-simulation liveness predicate (scalar bool).
+
+    Beyond the classic ``n_done < n_tasks & step_i < max_steps & ~overflow``
+    it also requires *pending work to exist*: a spawn-stack entry, a queued
+    xqueue task, or a queued locked-global task.  No-work is an absorbing
+    state — tasks only materialize from spawns, dequeue-execute completions,
+    or join claims, all of which need an existing stack/queue entry — so a
+    lane that is incomplete *and* workless is permanently stalled (e.g. a
+    malformed graph whose join dependency count exceeds its notifiers), and
+    iterating it to the max-step horizon would only burn thief-protocol
+    steps.  Completing runs are bitwise unaffected: at every step boundary
+    short of completion they hold at least one stack or queue entry.
+
+    Shared by the serial/batched while conds *and* the step body's internal
+    ``running`` gate (``step_pipeline``), so ``step_i``/clock freeze at the
+    same step under every executor — stalled lanes stay bitwise identical
+    across serial, vmap, and sharded runs.
+    """
+    has_work = (jnp.any(st.s_top > 0) | jnp.any(st.xq.tail > st.xq.head)
+                | (st.g_tail > st.g_head))
+    return ((st.n_done < g.n_tasks) & (st.step_i < max_steps)
+            & ~st.overflow & has_work)
+
+
+def step_pipeline(st: SimState, *, g: GraphArrays, case: SweepCase,
+                  costs: CostModel, ops: StepOps = REFERENCE_OPS,
+                  max_steps: int) -> SimState:
+    """One scheduling point: the six phases composed in step order.
+
+    This is the *whole* step body — backends differ only in the ``ops``
+    kernel set they pass (and in whether the composition itself runs as a
+    fused Pallas kernel, see :mod:`repro.kernels.sched_step`); the
+    composition lives here so every backend executes the identical
+    sequence.  Each phase is gated on ``running`` (:func:`run_gate`): once
+    a simulation finishes or stalls, its step is a strict no-op, which is
+    what lets the batched engine drive a plain ``while any(alive)`` loop
+    over vmapped steps without per-element freeze machinery.
+    """
+    running = run_gate(st, g, max_steps)
+    st = adopt_phase(st, running, case=case, costs=costs, ops=ops)
+    st = spawn_phase(st, running, g=g, case=case, costs=costs, ops=ops)
+    st, task, ts, found = dequeue_phase(st, running, case=case, costs=costs,
+                                        ops=ops)
+    st = thief_phase(st, found, running, case=case, costs=costs, ops=ops)
+    st = victim_phase(st, found, case=case, costs=costs, ops=ops)
+    st = exec_phase(st, task, ts, found, g=g, case=case, costs=costs,
+                    ops=ops)
+    return st._replace(step_i=st.step_i + running.astype(jnp.int32))

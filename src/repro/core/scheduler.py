@@ -71,6 +71,7 @@ import numpy as np
 from repro.core import arrivals as arrivals_mod
 from repro.core import backends as backends_mod
 from repro.core import barrier as barrier_mod
+from repro.core import phases as phases_mod
 from repro.core import topology as topology_mod
 from repro.core.spec import MODE_SPECS, RuntimeSpec, resolve_spec
 from repro.core.state import (CTR, CTR_NAMES, K_SPAWN, NC, NV_CAP,  # noqa: F401
@@ -126,25 +127,42 @@ class SimResult:
         return float(self.slo["throughput_tasks_per_s"]) if self.slo else 0.0
 
 
+def _init_jit(cfg: SimConfig, gq_cap: int, g: GraphArrays,
+              case: SweepCase) -> SimState:
+    """Fresh state for one case — split out of the run so the run's jit can
+    *donate* the state argument (the init's output buffers become the run's
+    scratch, not a second live copy)."""
+    return init_state(g, cfg.n_workers, cfg.stack_cap, cfg.queue_cap,
+                      gq_cap, case.seed)
+
+
+_init_cached = jax.jit(_init_jit, static_argnums=(0, 1))
+
+
 def _run_jit(cfg: SimConfig, gq_cap: int, g: GraphArrays,
-             case: SweepCase) -> SimState:
+             case: SweepCase, st0: SimState) -> SimState:
     """Run one fully-traced simulation to completion.  ``cfg`` and ``gq_cap``
     are static (they fix array shapes — and ``cfg.backend`` the step
-    kernels); ``g`` and ``case`` are traced pytrees, so this function vmaps
-    over a leading batch axis of both."""
-    W = cfg.n_workers
+    kernels); ``g``, ``case`` and the initial state are traced pytrees, so
+    this function vmaps over a leading batch axis of all three.  The while
+    cond is the shared :func:`~repro.core.phases.run_gate` — identical to
+    the step body's internal ``running`` gate, so completion, the step
+    horizon, overflow, *and* a permanently stalled (workless) simulation
+    all stop the loop at the same step."""
     step = backends_mod.get_backend(cfg.backend).build_step(
-        W, cfg.stack_cap, cfg.costs, g, case, cfg.max_steps)
-    st0 = init_state(g, W, cfg.stack_cap, cfg.queue_cap, gq_cap, case.seed)
+        cfg.n_workers, cfg.stack_cap, cfg.costs, g, case, cfg.max_steps)
 
     def cond(st):
-        return (st.n_done < g.n_tasks) & (st.step_i < cfg.max_steps) \
-            & ~st.overflow
+        return phases_mod.run_gate(st, g, cfg.max_steps)
 
     return jax.lax.while_loop(cond, step, st0)
 
 
-_run_cached = jax.jit(_run_jit, static_argnums=(0, 1))
+#: ``st0`` is donated: the caller hands over the freshly-initialized state
+#: buffers and must not touch them again (SerialExecutor / run_schedule
+#: re-init per case anyway), letting XLA alias them into the loop carry
+#: instead of round-tripping a second full copy of SimState
+_run_cached = jax.jit(_run_jit, static_argnums=(0, 1), donate_argnums=(4,))
 
 
 def run_schedule(graph: TaskGraph, mode: str | RuntimeSpec | None = None,
@@ -185,8 +203,9 @@ def run_schedule(graph: TaskGraph, mode: str | RuntimeSpec | None = None,
     case = make_case(rspec, W, zone_size, seed,
                      round(float(graph.mem_bound), 3), params,
                      topology=topo, release_ns=release)
-    st = jax.block_until_ready(
-        _run_cached(cfg, gq_cap, graph_arrays(graph), case))
+    garr = graph_arrays(graph)
+    st0 = _init_cached(cfg, gq_cap, garr, case)
+    st = jax.block_until_ready(_run_cached(cfg, gq_cap, garr, case, st0))
 
     episode = barrier_mod.episode_for(rspec.barrier, W, cfg.costs, topo)
     ctr = np.asarray(st.ctr)

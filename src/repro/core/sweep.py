@@ -51,6 +51,7 @@ from repro.core import arrivals as arrivals_mod
 from repro.core import backends as backends_mod
 from repro.core import barrier as barrier_mod
 from repro.core import cache as cache_mod
+from repro.core import executors as executors_mod
 from repro.core import topology as topology_mod
 from repro.core.executors import STRATEGIES, ExecContext, select_executor
 from repro.core.plan import CaseSpec, build_plan
@@ -128,7 +129,8 @@ class SweepResult:
 def run_cases(graphs: Sequence[TaskGraph] | TaskGraph,
               specs: Sequence[CaseSpec], cfg: SimConfig | None = None,
               chunk_size: int = 64, strategy: str = "auto",
-              cache=None, backend: str | None = None) -> SweepResult:
+              cache=None, backend: str | None = None,
+              pipeline: bool = True) -> SweepResult:
     """Run every ``CaseSpec`` through the experiment service.
 
     The result cache (``cache=True`` for the default on-disk store, or a
@@ -144,11 +146,19 @@ def run_cases(graphs: Sequence[TaskGraph] | TaskGraph,
     chunks and serializes heterogeneous DLB-knob chunks on CPU (see
     repro.core.executors).
 
-    ``backend`` picks the step backend (``reference`` / ``pallas``; see
-    repro.core.backends), overriding ``cfg.backend``.  Backends are bitwise
-    identical by contract, so results — and the cache keys below — are
-    backend-independent: a case simulated under one backend is a valid
-    cache hit under any other.
+    ``backend`` picks the step backend (``reference`` / ``pallas`` /
+    ``pallas_fused``; see repro.core.backends), overriding ``cfg.backend``.
+    Backends are bitwise identical by contract, so results — and the cache
+    keys below — are backend-independent: a case simulated under one
+    backend is a valid cache hit under any other.
+
+    ``pipeline`` (default on) overlaps chunk *k+1*'s host-side work —
+    stacking, state init, dispatch, and chunk *k*'s post-processing (SLO
+    reduction, cache writes) — with chunk *k*'s device execution, via the
+    executors' non-blocking ``submit`` / blocking ``collect`` split.  Pure
+    dispatch reordering: results are bitwise independent of the toggle
+    (tests/test_engine.py asserts it); ``pipeline=False`` exists for A/B
+    timing (benchmarks/step_backends.py) and debugging.
     """
     if isinstance(graphs, TaskGraph):
         graphs = [graphs]
@@ -217,9 +227,8 @@ def run_cases(graphs: Sequence[TaskGraph] | TaskGraph,
             release_len=(plan.t_pad
                          if any(s.arrivals is not None for s in miss_specs)
                          else 1))
-        for chunk in plan.chunks:
-            ex = select_executor(strategy, chunk)
-            raw = ex.run_chunk(ctx, miss_specs, chunk)
+        def postprocess(chunk, raw) -> None:
+            executors_mod.ENGINE_STATS["sim_steps"] += int(raw.step_i.sum())
             for j, mi in enumerate(chunk.indices):
                 i = miss[mi]
                 s = specs[i]
@@ -246,6 +255,24 @@ def run_cases(graphs: Sequence[TaskGraph] | TaskGraph,
                         topology=topology_mod.label(s.topology),
                         arrivals=arrivals_mod.label(s.arrivals),
                         app=graphs[s.graph].name.split("(")[0]))
+
+        # depth-2 software pipeline: chunk k+1 is stacked/inited/dispatched
+        # (all host-side or async) before chunk k's results are collected,
+        # so the host's next-chunk work and post-processing overlap the
+        # device's current-chunk execution.  Dispatch reordering only —
+        # per-case results are bitwise identical either way.
+        pending = None  # (executor, handle, chunk) in flight
+        for chunk in plan.chunks:
+            ex = select_executor(strategy, chunk)
+            handle = ex.submit(ctx, miss_specs, chunk)
+            if not pipeline:
+                postprocess(chunk, ex.collect(handle))
+                continue
+            if pending is not None:
+                postprocess(pending[2], pending[0].collect(pending[1]))
+            pending = (ex, handle, chunk)
+        if pending is not None:
+            postprocess(pending[2], pending[0].collect(pending[1]))
 
     # barrier episode per case (host-side: the barrier axis, W, and the
     # machine topology are known per spec, matching run_schedule's
@@ -285,7 +312,8 @@ def run_grid(graphs: Sequence[TaskGraph] | TaskGraph,
              n_zones: int | None = None,
              cfg: SimConfig | None = None,
              chunk_size: int = 64, strategy: str = "auto",
-             cache=None, backend: str | None = None, *,
+             cache=None, backend: str | None = None,
+             pipeline: bool = True, *,
              queues: Sequence[str] | None = None,
              barriers: Sequence[str] | None = None,
              balancers: Sequence[str] | None = None,
@@ -385,6 +413,7 @@ def run_grid(graphs: Sequence[TaskGraph] | TaskGraph,
         for ti in t_interval for pl in p_local
     ]
     res = run_cases(graphs, specs, cfg=cfg, chunk_size=chunk_size,
-                    strategy=strategy, cache=cache, backend=backend)
+                    strategy=strategy, cache=cache, backend=backend,
+                    pipeline=pipeline)
     res.grid_axes = axes
     return res

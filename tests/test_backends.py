@@ -1,7 +1,9 @@
-"""Step-backend contract: ``pallas`` (interpret mode on CPU) is bitwise
-identical to ``reference`` — per individual phase, end-to-end through every
-executor on all 12 lattice points, and at the cache-key layer (backends
-share cache entries because results are backend-independent)."""
+"""Step-backend contract: ``pallas`` (per-phase kernels) and
+``pallas_fused`` (the whole-step megakernel) — both interpret mode on CPU —
+are bitwise identical to ``reference``: per individual phase, end-to-end
+through every executor on all 12 lattice points (closed and open-system
+arrivals), and at the cache-key layer (backends share cache entries because
+results are backend-independent)."""
 
 import dataclasses
 import functools
@@ -158,15 +160,16 @@ def test_backend_excluded_from_cache_keys(graph, tmp_path):
     s = CaseSpec(spec="na_ws", n_workers=8, n_zones=2)
     gd = graph_digest(graph)
     keys = {case_key(gd, s, dataclasses.replace(CFG, backend=b))
-            for b in (None, "reference", "pallas")}
+            for b in (None, "reference", "pallas", "pallas_fused")}
     assert len(keys) == 1
 
     c = ResultCache(str(tmp_path))
     cold = run_cases(graph, [s], cfg=CFG, cache=c, backend="reference")
     assert cold.cache_hits == 0
-    warm = run_cases(graph, [s], cfg=CFG, cache=c, backend="pallas")
-    assert warm.cache_hits == 1
-    assert (warm.time_ns == cold.time_ns).all()
+    for warm_backend in ("pallas", "pallas_fused"):
+        warm = run_cases(graph, [s], cfg=CFG, cache=c, backend=warm_backend)
+        assert warm.cache_hits == 1, warm_backend
+        assert (warm.time_ns == cold.time_ns).all(), warm_backend
 
 
 def test_backend_selection_threads_through(monkeypatch):
