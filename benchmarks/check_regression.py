@@ -2,7 +2,8 @@
 
 CI's ``bench-regression`` job runs the deterministic smoke suites
 (``ablation_lattice`` + ``numa_ablation`` + ``streaming_slo`` +
-``moe_serving``), then
+``moe_serving``; the ``cluster-scaling`` job adds ``cluster_scaling``
+and ``step_backends``), then
 compares the key speedup/throughput fields of the freshly written
 ``experiments/bench/BENCH_sweep_smoke.json`` against the committed
 ``benchmarks/baselines/smoke.json`` with a relative tolerance (±25% by
@@ -15,7 +16,8 @@ simulator's semantics changed, not that a runner was slow.
     python benchmarks/check_regression.py
     # regenerate the baseline after an intentional physics change:
     BENCH_SMOKE=1 python -m benchmarks.run ablation_lattice \
-        numa_ablation streaming_slo moe_serving
+        numa_ablation streaming_slo moe_serving cluster_scaling \
+        step_backends
     python benchmarks/check_regression.py --write-baseline
 
 The baseline file stores its own tolerance and the flat list of compared
@@ -52,6 +54,15 @@ FIELD_PATTERNS = (
     # backends.* are machine-dependent and deliberately ungated
     "step_backends.wall_ratio_vs_reference.*",
     "step_backends.engine.pipeline_speedup",
+    # cluster tier: makespans up the machine ladder, the
+    # bandwidth-starvation curves (adaptive fraction + pinned pricing),
+    # and the p_local_node steal-locality lever — all simulated ns/ratios
+    "cluster_scaling.makespan_geomean_by_topology.*",
+    "cluster_scaling.xnode_steal_fraction_by_topology.*",
+    "cluster_scaling.bandwidth_starvation.*.*.makespan_geomean_ns",
+    "cluster_scaling.bandwidth_starvation.*.*.xnode_steal_fraction",
+    "cluster_scaling.pinned_makespan_geomean_by_bandwidth.*.*",
+    "cluster_scaling.xnode_steal_fraction_by_p_local_node.*",
 )
 
 DEFAULT_TOLERANCE = 0.25
@@ -110,7 +121,7 @@ def check(fresh: dict, baseline: dict) -> list:
         got = _lookup(fresh, path)
         if got is None:
             problems.append(f"MISSING  {path}: baseline {base:.6g}, "
-                            f"absent from the fresh record")
+                            "absent from the fresh record")
             continue
         base = float(base)
         if base == 0:
@@ -183,7 +194,7 @@ def main(argv=None) -> int:
     problems = check(fresh, baseline)
     if problems:
         print(f"\nbench-regression: {len(problems)} field(s) outside "
-              f"tolerance", file=sys.stderr)
+              "tolerance", file=sys.stderr)
         for p in problems:
             print(f"  {p}", file=sys.stderr)
         return 1

@@ -1,0 +1,271 @@
+"""Cluster scaling: (node × socket × core) machines under payload traffic.
+
+The cluster tier generalizes the machine model from a latency matrix to
+``(latency, bandwidth)`` links with a shared inter-node bottleneck, and
+gives every task a payload that cross-worker operations drag over those
+links (``L + D/B``).  This suite measures what that buys and costs:
+
+* sweeps the DLB policies across the machine ladder — flat,
+  ``dual_socket_24``, ``two_node_2x24``, ``rack_4x2x24`` — on **all three
+  executors** and **all three step backends** (reference / pallas /
+  pallas_fused), asserting every combination bitwise identical, the
+  cluster attribution counters (``stolen_xnode`` / ``xnode_bytes``)
+  included;
+* pins the degenerate anchor: payloads are inert off-cluster, so the
+  payloaded graphs' flat rows must match bare-graph runs bitwise;
+* runs the **bandwidth-starvation curve**: the cluster presets with their
+  inter-node links rescaled down (``run_grid``'s ``bandwidths`` axis).
+  The cross-node steal fraction (``stolen_xnode / stolen``) must *fall* —
+  the victim policy narrows its cross-node stratum as the fabric starves
+  (``bw_scale``) and the NA-WS transfer window fits fewer tasks per
+  steal, so node-local thieves take over the balancing work.  Because
+  the policy adapts, the makespan may go either way; the suite therefore
+  also runs a **pinned** curve (``p_local_node=1.0`` keeps the victim
+  strata bitwise identical at every bandwidth) where the schedule cannot
+  move and starving the link must price the makespan monotonically up;
+* runs the **steal-locality curve**: ``p_local_node`` (the second stratum
+  of the two-level victim policy) swept on the rack — raising it must
+  confine stealing to nodes (the fraction falls);
+* records all of it under the ``cluster_scaling`` key of
+  ``BENCH_sweep.json`` — the fields ``benchmarks/check_regression.py``
+  gates CI on.
+"""
+
+import numpy as np
+
+from benchmarks.ablation_lattice import EXECUTOR_STRATEGIES
+from benchmarks.common import SIM, SMOKE, csv_row, emit, graph_for, \
+    merge_bench_sweep
+from repro.core.scheduler import CTR_NAMES
+from repro.core.sweep import run_grid
+
+CLUSTER_APPS = ("fib",) if SMOKE else ("fib", "sort")
+
+#: the machine ladder: the historical flat model, one multi-socket node,
+#: and the two cluster presets (axis labels: flat / dual_socket_24 /
+#: two_node_2x24 / rack_4x2x24)
+TOPOLOGIES = (None, "dual_socket_24", "two_node_2x24", "rack_4x2x24")
+
+#: cluster presets only — the flat machine has no links to rescale
+CLUSTER_TOPOS = ("two_node_2x24", "rack_4x2x24")
+
+#: inter-node bandwidth levels (bytes/ns): the preset's native matrix,
+#: then starved ×4 and ×32
+BANDWIDTHS = (None, 8, 1)
+
+#: all three step backends must agree bitwise on every cell
+BACKENDS = ("reference", "pallas", "pallas_fused")
+
+#: knobs that make remote stealing common enough to attribute: victims are
+#: mostly off-socket (p_local=0.25) and split evenly between same-node and
+#: cross-node strata (p_local_node=0.5)
+KNOBS = dict(n_victim=(4,), n_steal=(8,), t_interval=(100,),
+             p_local=(0.25,), p_local_node=(0.5,))
+
+#: the steal-locality curve's sweep of the second stratum
+P_LOCAL_NODE_CURVE = (0.05, 0.5, 0.95)
+
+BALANCERS = ("na_rp", "na_ws")
+
+
+def _geomean(x) -> float:
+    return float(np.exp(np.log(np.asarray(x, float)).mean()))
+
+
+def _assert_equal(res, ref, label):
+    """Bitwise equality including the cluster attribution counters."""
+    assert res.completed.all(), label
+    assert (res.time_ns == ref.time_ns).all(), \
+        f"{label} diverged from the reference run on the cluster ladder"
+    for name in CTR_NAMES:
+        assert (res.counters[name] == ref.counters[name]).all(), \
+            (label, name)
+
+
+def _xnode_fraction(stolen_xnode, stolen) -> float:
+    """Fraction of all stolen tasks that crossed a node boundary."""
+    return float(stolen_xnode.sum() / max(int(stolen.sum()), 1))
+
+
+def check_flat_payload_inert(graphs, bare, ladder) -> None:
+    """Payloads (and p_local_node) are dead weight off-cluster: the flat
+    column of the payloaded ladder must match bare-graph flat runs bitwise
+    — the degenerate anchor that keeps pre-cluster results untouched."""
+    flat = run_grid(bare, balancers=BALANCERS, topologies=(None,),
+                    n_workers=(SIM.n_workers,), cfg=SIM, cache=None,
+                    **{**KNOBS, "p_local_node": (0.75,)})
+    # ladder grid order: app x balance x topology; flat is topology 0
+    t_flat = ladder.makespans.reshape(len(graphs), len(BALANCERS),
+                                      len(TOPOLOGIES))[..., 0]
+    assert (t_flat.ravel() == flat.time_ns).all(), \
+        "payloaded graphs diverged from bare graphs on the flat machine"
+    for name in CTR_NAMES:
+        c_flat = ladder.counter(name).reshape(
+            len(graphs), len(BALANCERS), len(TOPOLOGIES))[..., 0]
+        assert (c_flat.ravel() == flat.counters[name]).all(), name
+        if name in ("stolen_xnode", "xnode_bytes"):
+            assert (c_flat == 0).all(), name
+
+
+def run(cache=None):
+    graphs = [graph_for(app).with_payload() for app in CLUSTER_APPS]
+    bare = [graph_for(app) for app in CLUSTER_APPS]
+
+    # --- machine ladder on every executor and every step backend; no
+    # cache — a warm hit would skip execution and void the bitwise claims
+    results = {}
+    for strategy in EXECUTOR_STRATEGIES:
+        results[strategy] = run_grid(
+            graphs, balancers=BALANCERS, topologies=TOPOLOGIES,
+            n_workers=(SIM.n_workers,), cfg=SIM, strategy=strategy,
+            cache=None, **KNOBS)
+    ref = results["batched"]
+    for strategy, res in results.items():
+        _assert_equal(res, ref, strategy)
+    for backend in BACKENDS[1:]:
+        res = run_grid(
+            graphs, balancers=BALANCERS, topologies=TOPOLOGIES,
+            n_workers=(SIM.n_workers,), cfg=SIM, strategy="batched",
+            cache=None, backend=backend, **KNOBS)
+        _assert_equal(res, ref, f"{backend}-backend")
+
+    check_flat_payload_inert(graphs, bare, ref)
+
+    topo_labels = list(ref.grid_axes["topology"])
+    shape = (len(graphs), len(BALANCERS), len(TOPOLOGIES))
+    ms = ref.makespans.reshape(shape)
+    assert np.isfinite(ms).all() and (ms > 0).all()
+    sx = ref.counter("stolen_xnode").reshape(shape)
+    st = ref.counter("stolen").reshape(shape)
+    xb = ref.counter("xnode_bytes").reshape(shape)
+    # cluster machines (and only they) move bytes across the bottleneck
+    assert (xb[..., :2] == 0).all() and (sx[..., :2] == 0).all()
+    assert (xb[..., 2:].sum(axis=(0, 1)) > 0).all()
+    geo = {lbl: _geomean(ms[..., t]) for t, lbl in enumerate(topo_labels)}
+    xfrac_ladder = {lbl: _xnode_fraction(sx[..., t], st[..., t])
+                    for t, lbl in enumerate(topo_labels)}
+
+    # --- bandwidth starvation: cluster presets with the inter-node links
+    # rescaled down; makespan must rise, cross-node steal fraction must fall
+    bw = run_grid(graphs, balancers=("na_ws",), topologies=CLUSTER_TOPOS,
+                  bandwidths=BANDWIDTHS, n_workers=(SIM.n_workers,),
+                  cfg=SIM, cache=None, **KNOBS)
+    bw_labels = [str(b) for b in bw.grid_axes["bandwidth"]]
+    bshape = (len(graphs), len(CLUSTER_TOPOS), len(BANDWIDTHS))
+    bms = bw.makespans.reshape(bshape)
+    bsx = bw.counter("stolen_xnode").reshape(bshape)
+    bst = bw.counter("stolen").reshape(bshape)
+    bxb = bw.counter("xnode_bytes").reshape(bshape)
+    assert bw.completed.all()
+    starvation = {}
+    for t, topo in enumerate(CLUSTER_TOPOS):
+        curve = {}
+        for b, blbl in enumerate(bw_labels):
+            curve[blbl] = dict(
+                makespan_geomean_ns=_geomean(bms[:, t, b]),
+                xnode_steal_fraction=_xnode_fraction(bsx[:, t, b],
+                                                     bst[:, t, b]),
+                xnode_gb=float(bxb[:, t, b].sum()) / 1e9,
+            )
+        fracs = [curve[b]["xnode_steal_fraction"] for b in bw_labels]
+        assert all(a > b for a, b in zip(fracs, fracs[1:])), \
+            (topo, "cross-node steal fraction must fall as the "
+                   "inter-node bandwidth shrinks", fracs)
+        assert fracs[-1] > 0, (topo, fracs)
+        starvation[topo] = curve
+
+    # --- pinned pricing: p_local_node=1.0 makes the victim strata (and so
+    # the whole schedule) bitwise identical at every bandwidth; the only
+    # thing starving the link can do is price the same transfers higher
+    pin = run_grid(graphs, balancers=("na_ws",), topologies=CLUSTER_TOPOS,
+                   bandwidths=BANDWIDTHS, n_workers=(SIM.n_workers,),
+                   cfg=SIM, cache=None,
+                   **{**KNOBS, "p_local_node": (1.0,)})
+    pms = pin.makespans.reshape(bshape)
+    assert pin.completed.all()
+    for name in CTR_NAMES:
+        c = pin.counter(name).reshape(bshape)
+        assert (c == c[..., :1]).all(), \
+            (name, "pinned strata must freeze the schedule across "
+                   "bandwidths")
+    assert (pms[..., :-1] <= pms[..., 1:]).all(), \
+        "pricing a frozen schedule over a starved link must not be faster"
+    pxb = pin.counter("xnode_bytes").reshape(bshape)
+    assert (pxb.sum(axis=(0, 2)) > 0).all(), \
+        "pinned curve moved no cross-node bytes; pricing claim is vacuous"
+    pinned = {topo: {blbl: _geomean(pms[:, t, b])
+                     for b, blbl in enumerate(bw_labels)}
+              for t, topo in enumerate(CLUSTER_TOPOS)}
+
+    # --- steal locality: p_local_node swept on the rack; raising the
+    # second stratum confines stealing to nodes
+    loc = run_grid(graphs, balancers=("na_ws",),
+                   topologies=("rack_4x2x24",), n_workers=(SIM.n_workers,),
+                   cfg=SIM, cache=None,
+                   **{**KNOBS, "p_local_node": P_LOCAL_NODE_CURVE})
+    lshape = (len(graphs), len(P_LOCAL_NODE_CURVE))
+    lsx = loc.counter("stolen_xnode").reshape(lshape)
+    lst = loc.counter("stolen").reshape(lshape)
+    # keys are percent labels — a "0.05" key would break the gate's
+    # dotted-path lookup (check_regression.py splits paths on ".")
+    locality = {f"{pn * 100:g}pct": _xnode_fraction(lsx[:, p], lst[:, p])
+                for p, pn in enumerate(P_LOCAL_NODE_CURVE)}
+    vals = list(locality.values())
+    assert vals[0] > vals[-1], \
+        ("raising p_local_node must cut the cross-node steal fraction",
+         locality)
+
+    rows = []
+    for i, s in enumerate(ref.specs):
+        row = ref.row(i)
+        row["spec_slug"] = s.spec.slug
+        rows.append(row)
+        if s.spec.balance == "na_ws":
+            csv_row(f"cluster_scaling/{row['app']}/{row['topology']}",
+                    row["time_ns"] / 1e3, f"topology:{row['topology']}")
+    for i, s in enumerate(bw.specs):
+        row = bw.row(i)
+        row["spec_slug"] = s.spec.slug
+        rows.append(row)
+    emit(rows, "cluster_scaling")
+
+    record = dict(
+        apps=list(CLUSTER_APPS),
+        n_workers=SIM.n_workers,
+        knobs={k: v[0] for k, v in KNOBS.items()},
+        topologies=topo_labels,
+        bandwidths=bw_labels,
+        executors=list(EXECUTOR_STRATEGIES),
+        backends=list(BACKENDS),
+        bitwise_identical_across_executors=True,
+        bitwise_identical_across_backends=True,
+        flat_payload_matches_bare=True,
+        makespan_geomean_by_topology=geo,
+        xnode_steal_fraction_by_topology=xfrac_ladder,
+        bandwidth_starvation=starvation,
+        pinned_makespan_geomean_by_bandwidth=pinned,
+        xnode_steal_fraction_by_p_local_node=locality,
+        note=("machine ladder (flat -> dual socket -> 2-node -> 4-node "
+              "rack) under per-task payloads, bitwise-identical on "
+              "serial/vmap/sharded executors and reference/pallas/"
+              "pallas_fused backends with payloads inert on the flat "
+              "machine; bandwidth_starvation rescales the cluster "
+              "presets' inter-node links (bytes/ns, 'native' = preset "
+              "matrix) and asserts the cross-node steal fraction falls "
+              "as the fabric starves, with a pinned p_local_node=1.0 "
+              "curve proving pure pricing monotonicity on a frozen "
+              "schedule; the p_local_node curve pins the two-level "
+              "victim policy's locality lever"),
+    )
+    merge_bench_sweep({"cluster_scaling": record})
+
+    for lbl in topo_labels:
+        print(f"# cluster_scaling[{lbl}]: geomean {geo[lbl]/1e3:.1f}us, "
+              f"xnode steal frac {xfrac_ladder[lbl]:.3f}")
+    for topo, curve in starvation.items():
+        pts = ", ".join(f"{b}: {c['xnode_steal_fraction']:.3f}"
+                        for b, c in curve.items())
+        print(f"# cluster_scaling[{topo}] xnode frac by bandwidth: {pts}")
+    print(f"# cluster_scaling: {len(rows)} cells, locality curve "
+          f"{ {k: round(v, 3) for k, v in locality.items()} }")
+    return rows

@@ -11,10 +11,9 @@ import json
 import os
 import time
 
-import numpy as np
 
 from repro import apps as apps_mod
-from repro.core import make_params, run_schedule, taskgraph
+from repro.core import taskgraph
 from repro.core.scheduler import SimConfig
 
 OUT_DIR = "experiments/bench"

@@ -86,9 +86,13 @@ def check_degenerate_golden() -> int:
         label = ("golden-degenerate", c["graph"], c["mode"])
         assert int(res.time_ns[i]) == c["time_ns"], label
         assert int(res.steps[i]) == c["steps"], label
-        for name in CTR_NAMES:
+        # iterate the golden record's own counters; counters added since
+        # the golden was pinned (the cluster tier's) must read zero here
+        for name in c["counters"]:
             assert int(res.counters[name][i]) == c["counters"][name], \
                 (*label, name)
+        for name in set(CTR_NAMES) - set(c["counters"]):
+            assert int(res.counters[name][i]) == 0, (*label, name)
     return len(specs)
 
 
@@ -195,5 +199,5 @@ def run(cache=None):
               f"na_ws {a['balance']['na_ws_over_static_rr']:.3f}x, "
               f"geomean {geo[label]/1e3:.1f}us")
     print(f"# numa_ablation: {len(rows)} cells, {n_golden} golden cases "
-          f"bitwise under the degenerate topology")
+          "bitwise under the degenerate topology")
     return rows

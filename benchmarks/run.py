@@ -78,6 +78,14 @@ SUITES = {
              "Poisson loads, on all executors + both backends "
              "(BENCH_sweep.json, gated by check_regression.py)",
         axes=dict(queue=_Q, barrier=_B, balance=_L)),
+    "cluster_scaling": dict(
+        desc="cluster tier — the machine ladder (flat -> dual socket -> "
+             "2-node -> 4-node rack) under per-task payloads on all "
+             "executors + all three backends, bandwidth-starvation and "
+             "steal-locality curves (BENCH_sweep.json, gated by "
+             "check_regression.py)",
+        axes=dict(queue=("xqueue",), barrier=("tree",),
+                  balance=("na_rp", "na_ws"))),
     "bots_speedup": dict(
         desc="Fig. 4/5 — per-mode makespans + XGOMP(TB) speedups",
         axes=dict(queue=_Q, barrier=_B, balance=("static_rr",))),

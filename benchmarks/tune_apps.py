@@ -83,5 +83,5 @@ def run(cache=True, tuned_dir=tune_mod.DEFAULT_TUNED_DIR):
     strictly = sum(1 for r in rows
                    if min(r["tuned_ns"].values()) < min(r["ref_ns"].values()))
     print(f"# tune: {wins}/{n} match-or-beat, {strictly}/{n} strictly "
-          f"better than the hand-tuned table")
+          "better than the hand-tuned table")
     return rows

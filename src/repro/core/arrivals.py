@@ -226,7 +226,7 @@ def release_times(process: ArrivalProcess, n_tasks: int,
     rel = np.zeros(n_tasks, np.int64)
     rel[1:] = np.cumsum(gaps.astype(np.int64))
     assert rel[-1] <= _MAX_RELEASE, \
-        (f"arrival schedule overflows the int32 virtual clock "
+        ("arrival schedule overflows the int32 virtual clock "
          f"({process.label()}, n_tasks={n_tasks}, last={rel[-1]})")
     return rel
 

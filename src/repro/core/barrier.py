@@ -78,6 +78,16 @@ def tree_episode_topo(n_workers: int, topo, costs: CostModel) -> BarrierStats:
     (the whole tree is one intra-socket subtree), which is what pins the
     topology path to ``tests/golden_modes.json``-era numbers.
 
+    On a *cluster* machine (``n_nodes > 1``) the span-doubling loop yields
+    the node-level merge tier for free: sockets are numbered contiguously
+    by node (``node_of_socket(s) = s // sockets_per_node``), so the early
+    levels merge socket blocks within one node at the intra-node distance
+    and the final ``log2(n_nodes)`` levels join whole nodes at the
+    cross-node distance — no extra code, just a more expensive ``d_lvl``
+    at the top of the tree (tests/test_cluster.py pins this ordering).
+    Barrier flags are single cache lines, so no bandwidth term applies —
+    only the latency matrix enters.
+
     ``topo`` is a :class:`~repro.core.topology.MachineTopology` (host-side:
     the barrier episode is charged once per run, outside the traced step).
     """

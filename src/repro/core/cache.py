@@ -35,7 +35,13 @@ import numpy as np
 #: same (graph, spec, cfg) — stale entries then miss instead of lying.
 #: v3: runtime configurations became RuntimeSpec lattice points; keys carry
 #: the (queue, barrier, balance) axis tuple instead of the legacy mode name.
-CODE_VERSION = "runtime-spec-v3"
+#: v4: the cluster tier — the counter set grew (``stolen_xnode``,
+#: ``xnode_bytes``), so every pre-v4 entry already misses through the
+#: ``required_counters`` check; bumping the tag makes that dead population
+#: visible in ``stats`` and prunable via ``clear --version runtime-spec-v3``.
+#: (Flat and single-node *results* are bitwise-unchanged — only the record
+#: schema moved.)
+CODE_VERSION = "cluster-tier-v4"
 
 DEFAULT_ROOT = os.path.join("experiments", "cache")
 
@@ -44,7 +50,10 @@ RECORD_FIELDS = ("clock_max", "counters", "n_done", "overflow", "step_i")
 
 
 def graph_digest(graph) -> str:
-    """Content hash of a TaskGraph: its five arrays plus mem_bound."""
+    """Content hash of a TaskGraph: its five arrays plus mem_bound (and the
+    per-task payload sizes, when the graph carries any — payload-free graphs
+    keep their pre-cluster digests, so the store stays warm across the
+    cluster tier's introduction)."""
     d = getattr(graph, "_content_digest", None)
     if d is not None:
         return d
@@ -55,6 +64,10 @@ def graph_digest(graph) -> str:
         h.update(arr.tobytes())
     # engine quantizes mem_bound to 3 decimals before tracing (sweep.py)
     h.update(repr(round(float(graph.mem_bound), 3)).encode())
+    pay = getattr(graph, "payload", None)
+    if pay is not None and np.asarray(pay).any():
+        h.update(b"payload")
+        h.update(np.ascontiguousarray(np.asarray(pay, np.int64)).tobytes())
     d = h.hexdigest()
     try:
         graph._content_digest = d   # memoize; graphs are immutable in use
@@ -91,6 +104,12 @@ def case_key(gdigest: str, spec, cfg) -> str:
     topo = getattr(spec, "topology", None)
     if topo is not None:
         fields["topology"] = topo.cache_key()
+        # the second stratum only steers victim picks on cluster machines
+        # (dlb.pick_victim gates on topo.cluster), so it enters the key only
+        # there: single-node and flat keys stay warm across its introduction
+        if getattr(topo, "is_cluster", False):
+            fields["p_local_node"] = repr(float(
+                getattr(spec, "p_local_node", 0.75)))
     # the arrival process likewise enters only when one is set: closed
     # cases keep their pre-streaming keys, so the store stays warm across
     # the open-system feature's introduction

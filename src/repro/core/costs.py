@@ -48,6 +48,11 @@ class CostModel:
     # streaming tasks (~3x), not just latency.
     exec_zone_penalty: float = 1.3
     exec_remote_penalty: float = 3.0
+    # Size in bytes of one steal-request / steal-reply control message —
+    # the D of the cluster tier's L + D/B link pricing for protocol
+    # traffic (task payloads price the data traffic).  Only read on
+    # cluster topologies; flat and single-node machines never charge it.
+    req_bytes: int = 64
 
     def comm(self, same_worker, same_zone):
         """Cost of touching another worker's cells (vectorized jnp-friendly)."""

@@ -43,7 +43,8 @@ def zone_of(w: jax.Array, zone_size: int) -> jax.Array:
     return w // zone_size
 
 
-def remote_weight_table(me: jax.Array, n_workers, zone_size, topo
+def remote_weight_table(me: jax.Array, n_workers, zone_size, topo,
+                        restrict: str | None = None
                         ) -> Tuple[jax.Array, jax.Array]:
     """Loop-invariant table for the hierarchy-aware remote choice: per
     (thief, candidate) integer weights *inversely related to domain
@@ -52,6 +53,13 @@ def remote_weight_table(me: jax.Array, n_workers, zone_size, topo
     ``topo.dist``, so the draw→victim map stays exact).  Depends only on
     ``me``/``zone_size``/``topo``, never on the PRNG draw, so callers
     (``phases.thief_phase``) hoist it out of the victim-retry loop.
+
+    ``restrict`` narrows the candidate set for the cluster tier's
+    two-level choice: ``"node_local"`` keeps only remote-socket candidates
+    *inside* the thief's node, ``"node_remote"`` only candidates in
+    *other* nodes (``topo.node`` maps sockets to nodes; on single-node
+    machines node_local equals the unrestricted set and node_remote is
+    empty).
 
     Vectorized over the worker lanes: ``me`` is ``(W,)``, the table is
     ``(W, W)``.  Returns ``(cum_weights, total_weight)``.
@@ -62,6 +70,10 @@ def remote_weight_table(me: jax.Array, n_workers, zone_size, topo
     dom_me = jnp.minimum(me // zone_size, topo.n_domains - 1)
     d = topo.dist[dom_me[:, None], dom_j[None, :]]             # (W, W)
     remote = (j[None, :] < n_workers) & (dom_j[None, :] != dom_me[:, None])
+    if restrict is not None:
+        assert restrict in ("node_local", "node_remote"), restrict
+        same_n = (topo.node[dom_me][:, None] == topo.node[dom_j][None, :])
+        remote = remote & (same_n if restrict == "node_local" else ~same_n)
     dmax = jnp.max(jnp.where(remote, d, 0), axis=1, keepdims=True)
     wgt = jnp.where(remote, dmax - d + 1, 0)                   # (W, W)
     cum = jnp.cumsum(wgt, axis=1)
@@ -83,7 +95,8 @@ def _remote_weighted(draw: jax.Array, cum: jax.Array, total: jax.Array
 
 
 def pick_victim(rng: jax.Array, me: jax.Array, n_workers, zone_size,
-                p_local: jax.Array, topo=None, remote_tbl=None
+                p_local: jax.Array, topo=None, remote_tbl=None,
+                p_local_node=None, node_tbls=None
                 ) -> Tuple[jax.Array, jax.Array]:
     """Random victim != me; same zone/domain with probability ``p_local``.
 
@@ -99,12 +112,29 @@ def pick_victim(rng: jax.Array, me: jax.Array, n_workers, zone_size,
     bitwise (same PRNG consumption either way).  With ``topo`` set,
     ``me``/``rng`` must be the full ``(W,)`` lane vectors.
 
+    ``p_local_node`` adds the cluster tier's second stratum: the single
+    uniform draw ``u`` stratifies three ways — socket-local for
+    ``u < p_local``, node-local-remote-socket for
+    ``u < p_local + (1-p_local)·p_local_node``, cross-node otherwise — so
+    cross-node steal requests are strictly rarer than cross-socket ones
+    without consuming any extra randomness (exactly two xorshifts per call
+    on every path, the PRNG-parity contract).  The cross-node stratum is
+    additionally *bandwidth-aware*: on a fabric starved below its native
+    bandwidth (``topo.bw_scale < 1``, via
+    ``MachineTopology.with_bandwidth``) the stratum narrows in proportion
+    to the remaining capacity, so the cross-node steal fraction falls as
+    the inter-node bandwidth shrinks.  Only consulted when
+    ``topo.cluster``; empty strata fall back to whichever side has
+    candidates.  ``node_tbls`` hoists the two node-restricted weight
+    tables (``remote_weight_table(..., restrict=...)`` pair).
+
     Returns (rng', victim). Degenerate topologies (single zone / 1-wide zones)
     fall back to whichever side has candidates.
     """
     W, Z = n_workers, zone_size
     rng = xorshift(rng)
-    want_local = uniform(rng) < p_local
+    u = uniform(rng)
+    want_local = u < p_local
     rng = xorshift(rng)
     draw = (rng >> jnp.uint32(1)).astype(jnp.int32)  # non-negative
     zbase = (me // Z) * Z
@@ -130,6 +160,31 @@ def pick_victim(rng: jax.Array, me: jax.Array, n_workers, zone_size,
         if remote_tbl is None:
             remote_tbl = remote_weight_table(me, W, Z, topo)
         remote_h, has_remote_h = _remote_weighted(draw, *remote_tbl)
+        if p_local_node is not None:
+            # cluster two-level remote choice: same draw, stratified u
+            if node_tbls is None:
+                node_tbls = (remote_weight_table(me, W, Z, topo,
+                                                 restrict="node_local"),
+                             remote_weight_table(me, W, Z, topo,
+                                                 restrict="node_remote"))
+            nl_v, has_nl = _remote_weighted(draw, *node_tbls[0])
+            nr_v, has_nr = _remote_weighted(draw, *node_tbls[1])
+            # bandwidth-aware stratification: a starved inter-node fabric
+            # (topo.bw_scale < 1, see MachineTopology.with_bandwidth)
+            # narrows the cross-node stratum in proportion to its
+            # remaining capacity — cross-node steal attempts get rarer
+            # exactly as the link gets dearer.  Native fabric keeps the
+            # plain two-level split bitwise (the where, not the algebra:
+            # 1-(1-pn) re-rounds in float32).
+            pn_eff = jnp.where(
+                topo.bw_scale < 1.0,
+                1.0 - (1.0 - p_local_node) * topo.bw_scale, p_local_node)
+            want_node = u < p_local + (1.0 - p_local) * pn_eff
+            use_nl = jnp.where(has_nl & has_nr, want_node, has_nl)
+            remote_c = jnp.where(use_nl, nl_v, nr_v)
+            remote_h = jnp.where(topo.cluster, remote_c, remote_h)
+            has_remote_h = jnp.where(topo.cluster, has_nl | has_nr,
+                                     has_remote_h)
         local = jnp.where(topo.flat, local, local_h)
         remote = jnp.where(topo.flat, remote, remote_h)
         has_local = jnp.where(topo.flat, has_local, size > 1)
@@ -162,7 +217,8 @@ def rp_adopt(rp: RPState, thief: jax.Array, n_steal: jax.Array,
 
 def ws_transfer(xq: xqueue.XQ, victim_mask: jax.Array, thief: jax.Array,
                 n_steal: jax.Array, clock: jax.Array, comm_cost: jax.Array,
-                deq_rr: jax.Array, ws_cap: int, n_active=None):
+                deq_rr: jax.Array, ws_cap: int, n_active=None,
+                payload=None, xfer_bw=None):
     """Alg. 4: each victim moves up to ``n_steal`` tasks from its own queues to
     queue ``(thief, victim)``, stopping on own-empty or target-full.
 
@@ -178,10 +234,23 @@ def ws_transfer(xq: xqueue.XQ, victim_mask: jax.Array, thief: jax.Array,
     the scan-order prefix sums.  This computes that directly — one gather +
     one one-hot write instead of up to ``ws_cap`` full-buffer loop
     iterations — and is bitwise identical to the loop (timestamps included:
-    the r-th task is stamped ``max(clock + r·comm, ts) + comm``).
+    the r-th task is stamped ``max(clock + before_r, ts) + cost_r`` where
+    ``before_r`` is the exclusive prefix sum of per-task costs).
+
+    The cluster tier prices each moved task individually:
+    ``cost_r = comm_cost + payload[task_r] // xfer_bw`` when ``xfer_bw``
+    (the per-victim link bandwidth, bytes/ns) is positive, and bounds the
+    transfer by a time *window* of ``n_steal * comm_cost`` — the victim
+    stops handing tasks over once the elapsed transfer time leaves the
+    window, so a starved link moves fewer tasks per steal.  ``xfer_bw ==
+    0`` — or ``payload=None`` — keeps the constant-cost arithmetic, for
+    which the prefix sums collapse to ``r·comm`` / ``k·comm`` and the
+    window fits exactly ``n_steal`` tasks: bitwise the pre-cluster
+    behavior.
 
     ``n_active`` (traced) restricts the scan to live workers under a padded
-    shape.  Returns (xq', clock', stolen_count, src_empty, tgt_full).
+    shape.  Returns (xq', clock', stolen_count, src_empty, tgt_full,
+    moved_bytes).
     """
     W = xq.head.shape[0]
     zeros = jnp.zeros(W, jnp.int32)
@@ -195,18 +264,20 @@ def ws_transfer(xq: xqueue.XQ, victim_mask: jax.Array, thief: jax.Array,
         return carry[0] & jnp.any(victim_mask)
 
     def body(carry):
-        _, xq_c, clock_c, _, _, _ = carry
+        _, xq_c, clock_c, _, _, _, _ = carry
         out = _ws_bulk(xq_c, victim_mask, thief, n_steal, clock_c,
-                       comm_cost, deq_rr, ws_cap, n_active)
+                       comm_cost, deq_rr, ws_cap, n_active,
+                       payload, xfer_bw)
         return (jnp.asarray(False),) + out
 
     carry = jax.lax.while_loop(
-        cond, body, (jnp.asarray(True), xq, clock, zeros, false, false))
-    return carry[1], carry[2], carry[3], carry[4], carry[5]
+        cond, body,
+        (jnp.asarray(True), xq, clock, zeros, false, false, zeros))
+    return carry[1], carry[2], carry[3], carry[4], carry[5], carry[6]
 
 
 def _ws_bulk(xq: xqueue.XQ, victim_mask, thief, n_steal, clock, comm_cost,
-             deq_rr, ws_cap: int, n_active):
+             deq_rr, ws_cap: int, n_active, payload=None, xfer_bw=None):
     W = xq.head.shape[0]
     Q = xqueue.capacity(xq)
     if n_active is None:
@@ -223,13 +294,6 @@ def _ws_bulk(xq: xqueue.XQ, victim_mask, thief, n_steal, clock, comm_cost,
     free0 = Q - (xq.tail[thief, me] - xq.head[thief, me])
     k = jnp.minimum(n_steal, jnp.minimum(avail, free0))
     k = jnp.where(victim_mask, jnp.maximum(k, 0), 0)
-    # failure flags, exactly as the loop would observe them: another
-    # iteration would still want a task (k < n_steal) and finds the target
-    # full (k == free0; checked BEFORE popping, so no task is ever lost) or
-    # its own queues empty (k == avail with target space left)
-    can_more = victim_mask & (k < n_steal)
-    tgt_full = can_more & (k == free0)
-    src_empty = can_more & (free0 > k) & (k == avail)
 
     # source of the r-th moved task: first scan-order queue whose prefix sum
     # exceeds r, at offset r - cum_before (k <= Q, so r ranges over [0, Q))
@@ -242,9 +306,48 @@ def _ws_bulk(xq: xqueue.XQ, victim_mask, thief, n_steal, clock, comm_cost,
     slot_r = (xq.head[me[:, None], src_r] + off_r) % Q
     task_r = xq.buf[me[:, None], src_r, slot_r]                  # (W, Q)
     ts_r = xq.ts[me[:, None], src_r, slot_r]
+    # per-task transfer cost: the constant endpoint latency, plus
+    # payload/bandwidth when the cluster tier prices this link
+    if payload is None or xfer_bw is None:
+        cost_r = jnp.broadcast_to(comm_cost[:, None], task_r.shape)
+    else:
+        pay_r = payload[task_r]                                  # (W, Q)
+        cost_r = comm_cost[:, None] + jnp.where(
+            xfer_bw[:, None] > 0,
+            pay_r // jnp.maximum(xfer_bw[:, None], 1), 0)
+    # exclusive prefix sum: task r starts after tasks [0, r) moved —
+    # constant cost collapses this to r·comm, the pre-cluster stamps
+    before_r = jnp.cumsum(cost_r, axis=1) - cost_r
+    windowed = jnp.zeros_like(victim_mask)
+    if payload is not None and xfer_bw is not None:
+        # a priced link bounds the bulk transfer by a time *window*, not a
+        # bare count: the victim pops a task only if its transfer would
+        # still *complete* inside ``n_steal * L`` — the span the count cap
+        # spends on a constant-cost link, so when every task costs exactly
+        # ``comm_cost`` the window fits exactly ``n_steal`` tasks and the
+        # pre-cluster ``k`` survives bitwise.  Starving a link inflates
+        # each task's ``L + D/B`` share, so fewer tasks fit per steal —
+        # down to zero: a steal whose first payload alone overflows the
+        # window aborts, and the thief's next strata draw usually lands
+        # closer.  Cross-node balancing throttles itself as bandwidth
+        # shrinks.
+        window = (n_steal * comm_cost)[:, None]                  # (W, 1)
+        k_win = jnp.sum((r_iota < k[:, None])
+                        & (before_r + cost_r <= window),
+                        axis=1).astype(jnp.int32)
+        k_full = k
+        k = jnp.where(xfer_bw > 0, k_win, k)
+        windowed = k < k_full
     take_r = r_iota < k[:, None]
-    push_ts_r = jnp.maximum(clock[:, None] + r_iota * comm_cost[:, None],
-                            ts_r) + comm_cost[:, None]
+    # failure flags, exactly as the loop would observe them: another
+    # iteration would still want a task (k < n_steal) and finds the target
+    # full (k == free0; checked BEFORE popping, so no task is ever lost) or
+    # its own queues empty (k == avail with target space left); a stop on
+    # window expiry raises neither flag — the victim quit voluntarily
+    can_more = victim_mask & (k < n_steal) & ~windowed
+    tgt_full = can_more & (k == free0)
+    src_empty = can_more & (free0 > k) & (k == avail)
+    push_ts_r = jnp.maximum(clock[:, None] + before_r, ts_r) + cost_r
 
     # destination slot of task r is (tail0 + r) % Q in queue (thief, me):
     # express per physical slot q via r = (q - tail0) % Q, then write the
@@ -271,5 +374,9 @@ def _ws_bulk(xq: xqueue.XQ, victim_mask, thief, n_steal, clock, comm_cost,
     take_p = jnp.where(p_iota < n_act, take_p, 0)
     head = xq.head + take_p
 
-    clock = clock + k * comm_cost
-    return xqueue.XQ(buf, tsb, head, tail), clock, k, src_empty, tgt_full
+    clock = clock + jnp.sum(jnp.where(take_r, cost_r, 0), axis=1)
+    moved_bytes = (jnp.zeros_like(k) if payload is None or xfer_bw is None
+                   else jnp.sum(jnp.where(take_r & (xfer_bw[:, None] > 0),
+                                          pay_r, 0), axis=1))
+    return (xqueue.XQ(buf, tsb, head, tail), clock, k, src_empty, tgt_full,
+            moved_bytes)

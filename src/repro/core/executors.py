@@ -116,7 +116,8 @@ class ExecContext:
         return make_case(
             s.spec, s.n_workers, s.zone_size, s.seed,
             round(float(self.graphs[s.graph].mem_bound), 3),
-            make_params(s.n_victim, s.n_steal, s.t_interval, s.p_local),
+            make_params(s.n_victim, s.n_steal, s.t_interval, s.p_local,
+                        s.p_local_node),
             topology=s.topology, release_ns=release,
             closed=s.arrivals is None)
 

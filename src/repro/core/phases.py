@@ -20,11 +20,14 @@ spawn_phase     s_task/s_cnt/s_top, rr, rp, xq, g_*, clock  xq, g_*, s_*,
                                                             rr, rp, creator,
                                                             done/join/n_done
 dequeue_phase   s_top, xq, g_*, deq_rr, clock               xq.head, g_head,
-                                                            deq_rr
+                                                            deq_rr,
+                                                            nlink_bytes
 thief_phase     s_top, idle, rng, cells, clock              idle, rng,
-                                                            cells.req_*
+                                                            cells.req_*,
+                                                            nlink_bytes
 victim_phase    cells, xq, deq_rr, rp, clock                xq, rp,
-                                                            cells.round
+                                                            cells.round,
+                                                            nlink_bytes
 exec_phase      creator, clock                              clock, done,
                                                             join_cnt,
                                                             creator, n_done,
@@ -143,6 +146,46 @@ def _same_domain(a, b, case: SweepCase):
     hier_eq = (topology_mod.domain_of(a, zsz, t.n_domains)
                == topology_mod.domain_of(b, zsz, t.n_domains))
     return jnp.where(t.flat, flat_eq, hier_eq)
+
+
+def _same_node(a, b, case: SweepCase):
+    """Do workers ``a`` and ``b`` share a *node* (cluster tier)?
+    Trivially true off-cluster, so every ``~_same_node`` gate below is
+    identically false on flat and single-node machines."""
+    t = case.topo
+    zsz = case.zone_size
+    na = t.node[topology_mod.domain_of(a, zsz, t.n_domains)]
+    nb = t.node[topology_mod.domain_of(b, zsz, t.n_domains)]
+    return jnp.where(t.cluster, na == nb, True)
+
+
+def _xfer(a, b, case: SweepCase, nbytes):
+    """The ``D/B`` payload term of a cross-worker link charge: ``nbytes``
+    over the endpoints' link bandwidth.  Identically zero off-cluster and
+    on self-links — the bitwise contract for flat and single-node
+    machines (they never read ``topo.bw``)."""
+    t = case.topo
+    zsz = case.zone_size
+    bw = t.bw[topology_mod.domain_of(a, zsz, t.n_domains),
+              topology_mod.domain_of(b, zsz, t.n_domains)]
+    chg = (nbytes // jnp.maximum(bw, 1)).astype(jnp.int32)
+    return jnp.where(t.cluster & (a != b), chg, 0)
+
+
+def _comm_sz(costs: CostModel, a, b, case: SweepCase, nbytes):
+    """Full link price ``L + D/B``: the distance-matrix latency plus the
+    payload transfer time (cluster topologies only — see topology.py)."""
+    return _comm(costs, a, b, case) + _xfer(a, b, case, nbytes)
+
+
+def _track_xnode(st: SimState, a, b, case: SweepCase, nbytes, mask
+                 ) -> SimState:
+    """Accrue cross-node bytes into the per-step bottleneck ledger
+    (``nlink_bytes``); :func:`step_pipeline` converts the step's total
+    into a shared-uplink occupancy charge and resets the ledger."""
+    xn = mask & case.topo.cluster & ~_same_node(a, b, case)
+    add = jnp.where(xn, nbytes, 0).astype(jnp.int32)
+    return st._replace(nlink_bytes=st.nlink_bytes + add)
 
 
 def _bump(ops: StepOps, ctr, name, mask_or_val):
@@ -290,9 +333,13 @@ def spawn_phase(st: SimState, running, *, g: GraphArrays, case: SweepCase,
         act_x = active & m.uses_xq
         use_rp = act_x & m.is_narp & (st.rp.tgt >= 0) & (st.rp.left > 0)
         tgt = jnp.where(use_rp, jnp.maximum(st.rp.tgt, 0), st.rr % n_w)
+        # pushing to a remote queue moves the task's payload: L + D/B on
+        # cluster machines, the bare latency everywhere else
+        pay = jnp.where(act_x, g.payload[task], 0)
         cost_x = jnp.where(
             act_x,
-            costs.c_alloc + costs.c_slot + _comm(costs, me, tgt, case), 0)
+            costs.c_alloc + costs.c_slot
+            + _comm_sz(costs, me, tgt, case, pay), 0)
 
         clock = st.clock + cost_g + cost_x
         gq = st.g_buf.shape[0]
@@ -315,6 +362,8 @@ def spawn_phase(st: SimState, running, *, g: GraphArrays, case: SweepCase,
         ctr = _bump(ops, ctr, "stolen", pushed_x & use_rp)  # redirections
         ctr = _bump(ops, ctr, "stolen_local", pushed_x & use_rp & same_d)
         ctr = _bump(ops, ctr, "stolen_remote", pushed_x & use_rp & ~same_d)
+        ctr = _bump(ops, ctr, "stolen_xnode",
+                    pushed_x & use_rp & ~_same_node(me, tgt, case))
         # Alg. 3: stop on quota exhausted or thief queue full
         left = st.rp.left - (pushed_x & use_rp).astype(jnp.int32)
         drop = (use_rp & ~ok) | (left <= 0)
@@ -324,6 +373,7 @@ def spawn_phase(st: SimState, running, *, g: GraphArrays, case: SweepCase,
         st = st._replace(xq=xq, g_buf=g_buf, g_ts=g_ts, g_tail=g_tail,
                          clock=clock, rr=rr, rp=rp, ctr=ctr,
                          creator=creator)
+        st = _track_xnode(st, me, tgt, case, pay, act_x)
         # atomic global count: task created (XGOMP only)
         st = _atomic_charge(st, active & m.pays_count, costs, ops)
 
@@ -360,7 +410,7 @@ def spawn_phase(st: SimState, running, *, g: GraphArrays, case: SweepCase,
 
 
 # ---------------- phase B: dequeue ----------------
-def dequeue_phase(st: SimState, running, *, case: SweepCase,
+def dequeue_phase(st: SimState, running, *, g: GraphArrays, case: SweepCase,
                   costs: CostModel, ops: StepOps = REFERENCE_OPS):
     """Workers with empty spawn stacks pop one task — the locked_global lane
     from the single contended global queue, the xqueue lane by scanning its
@@ -368,6 +418,8 @@ def dequeue_phase(st: SimState, running, *, case: SweepCase,
 
     Reads s_top/xq/g_*/deq_rr/clock; writes xq.head, g_head, deq_rr, clock,
     ctr.  Returns ``(st, task, ts, found)`` for the downstream phases.
+    Popping from another worker's queue drags the task's payload across
+    the link (``L + D/B`` on cluster machines via ``g.payload``).
     """
     me = _me(st)
     m = axis_masks(case)
@@ -394,8 +446,10 @@ def dequeue_phase(st: SimState, running, *, case: SweepCase,
     idle_x = idle_m & m.uses_xq
     xq, task_x, ts_x, src, found_x, checked = ops.pop_first(
         st.xq, st.deq_rr, idle_x, n_w)
+    pay_x = jnp.where(found_x, g.payload[jnp.where(found_x, task_x, 0)], 0)
     cost_x = jnp.where(idle_x, checked * costs.c_cache, 0)
-    cost_x = cost_x + jnp.where(found_x, _comm(costs, me, src, case), 0)
+    cost_x = cost_x + jnp.where(found_x,
+                                _comm_sz(costs, me, src, case, pay_x), 0)
     deq_rr = st.deq_rr + (found_x & (src != me)).astype(jnp.int32)
 
     task = jnp.where(m.is_locked, task_g, task_x)
@@ -403,6 +457,7 @@ def dequeue_phase(st: SimState, running, *, case: SweepCase,
     found = found_g | found_x
     st = st._replace(xq=xq, g_head=g_head, deq_rr=deq_rr, ctr=ctr,
                      clock=st.clock + cost_g + cost_x)
+    st = _track_xnode(st, me, src, case, pay_x, found_x)
     return st, task, ts, found
 
 
@@ -437,63 +492,89 @@ def thief_phase(st: SimState, found, running, *, case: SweepCase,
     # the (batched) loop's per-iteration select overhead never touches
     # the big queue/stack/counter buffers.
     rounds = st.cells.round   # victim-owned; thieves only read it
-    # the (W, W) distance-weight table is draw-independent: built once
-    # here, not per retry iteration
+    # the (W, W) distance-weight tables are draw-independent: built once
+    # here, not per retry iteration (the node-split pair feeds the cluster
+    # tier's two-level victim choice; ignored off-cluster)
     remote_tbl = dlb.remote_weight_table(me, n_w, zsz, case.topo)
+    node_tbls = (dlb.remote_weight_table(me, n_w, zsz, case.topo,
+                                         restrict="node_local"),
+                 dlb.remote_weight_table(me, n_w, zsz, case.topo,
+                                         restrict="node_remote"))
 
     def cond(carry):
         v = carry[0]
         return (v < NV_CAP) & jnp.any(do_req & (v < params.n_victim))
 
     def body(carry):
-        v, rng, req_round, req_tid, clock, n_sent = carry
+        v, rng, req_round, req_tid, clock, n_sent, nl = carry
         sm = do_req & (v < params.n_victim)
         rng, victim = dlb.pick_victim(rng, me, n_w, zsz, params.p_local,
-                                      case.topo, remote_tbl=remote_tbl)
+                                      case.topo, remote_tbl=remote_tbl,
+                                      p_local_node=params.p_local_node,
+                                      node_tbls=node_tbls)
         cells, sent = messaging.thief_send(
             messaging.Cells(rounds, req_round, req_tid), me, victim, sm)
-        cost = jnp.where(sm, 2 * _comm(costs, me, victim, case), 0)
-        cost = cost + jnp.where(sent, _comm(costs, me, victim, case), 0)
+        # request/reply control messages price as L + req_bytes/B on
+        # cluster links (the bare latency everywhere else)
+        c1 = _comm_sz(costs, me, victim, case, costs.req_bytes)
+        cost = jnp.where(sm, 2 * c1, 0) + jnp.where(sent, c1, 0)
+        msgs = jnp.where(sm, 2, 0) + jnp.where(sent, 1, 0)
+        xn = sm & case.topo.cluster & ~_same_node(me, victim, case)
+        nl = nl + jnp.where(xn, msgs * costs.req_bytes, 0).astype(jnp.int32)
         return (v + 1, rng, cells.req_round, cells.req_tid, clock + cost,
-                n_sent + sent.astype(jnp.int32))
+                n_sent + sent.astype(jnp.int32), nl)
 
-    _v, rng, req_round, req_tid, clock, n_sent = jax.lax.while_loop(
+    _v, rng, req_round, req_tid, clock, n_sent, nl = jax.lax.while_loop(
         cond, body,
         (jnp.int32(0), st.rng, st.cells.req_round, st.cells.req_tid,
-         st.clock, jnp.zeros(W, jnp.int32)))
+         st.clock, jnp.zeros(W, jnp.int32), jnp.zeros(W, jnp.int32)))
     return st._replace(
         rng=rng, cells=messaging.Cells(rounds, req_round, req_tid),
-        clock=clock, ctr=_bump(ops, st.ctr, "req_sent", n_sent))
+        clock=clock, ctr=_bump(ops, st.ctr, "req_sent", n_sent),
+        nlink_bytes=st.nlink_bytes + nl)
 
 
 # ---------------- phase C: victim handling ----------------
-def victim_phase(st: SimState, found, *, case: SweepCase,
+def victim_phase(st: SimState, found, *, g: GraphArrays, case: SweepCase,
                  costs: CostModel, ops: StepOps = REFERENCE_OPS) -> SimState:
     """Busy workers with a valid steal request answer it — NA-WS bulk-moves
     up to ``n_steal`` tasks into the thief's queue (Alg. 4), NA-RP adopts
     the thief for future redirected pushes (Alg. 3).
 
     Reads cells/xq/deq_rr/rp/clock; writes xq (transfer), rp, cells.round,
-    clock, ctr[stolen*/req_*/src_empty/tgt_full].
+    clock, ctr[stolen*/req_*/src_empty/tgt_full].  On cluster machines the
+    bulk move is payload-priced: every transferred task costs
+    ``L + payload/B`` over the victim→thief link, and cross-node moves feed
+    the bottleneck ledger.
     """
     me = _me(st)
     m = axis_masks(case)
     params = case.params
+    t = case.topo
+    zsz = case.zone_size
 
     valid = messaging.victim_valid(st.cells) & found
     thief = jnp.maximum(st.cells.req_tid, 0)
 
     # NA-WS: bulk transfer to the thief's queue (Alg. 4) — the per-task
-    # transfer latency below is the topology-aware endpoint distance
+    # transfer latency below is the topology-aware endpoint distance,
+    # plus payload/bandwidth on cluster links (xfer_bw = 0 disables the
+    # payload term bitwise, the non-cluster contract)
     vm_ws = valid & m.is_naws
     comm_c = _comm(costs, me, thief, case)
-    xq, clock, stolen, src_empty, tgt_full = dlb.ws_transfer(
+    bw_vt = t.bw[topology_mod.domain_of(me, zsz, t.n_domains),
+                 topology_mod.domain_of(thief, zsz, t.n_domains)]
+    xfer_bw = jnp.where(t.cluster & (me != thief), bw_vt, 0).astype(jnp.int32)
+    xq, clock, stolen, src_empty, tgt_full, moved_bytes = dlb.ws_transfer(
         st.xq, vm_ws, thief, params.n_steal, st.clock, comm_c,
-        st.deq_rr, WS_CAP, case.n_workers)
+        st.deq_rr, WS_CAP, case.n_workers, payload=g.payload,
+        xfer_bw=xfer_bw)
     same_d = _same_domain(me, thief, case)
+    same_n = _same_node(me, thief, case)
     ctr = _bump(ops, st.ctr, "stolen", stolen)
     ctr = _bump(ops, ctr, "stolen_local", jnp.where(same_d, stolen, 0))
     ctr = _bump(ops, ctr, "stolen_remote", jnp.where(~same_d, stolen, 0))
+    ctr = _bump(ops, ctr, "stolen_xnode", jnp.where(~same_n, stolen, 0))
     ctr = _bump(ops, ctr, "req_has_steal", vm_ws & (stolen > 0))
     ctr = _bump(ops, ctr, "src_empty", src_empty)
     ctr = _bump(ops, ctr, "tgt_full", tgt_full)
@@ -505,7 +586,9 @@ def victim_phase(st: SimState, found, *, case: SweepCase,
 
     handled = vm_ws | vm_rp
     ctr = _bump(ops, ctr, "req_handled", handled)
+    nl = jnp.where(t.cluster & ~same_n, moved_bytes, 0).astype(jnp.int32)
     return st._replace(xq=xq, clock=clock, rp=rp, ctr=ctr,
+                       nlink_bytes=st.nlink_bytes + nl,
                        cells=messaging.victim_advance(st.cells, handled))
 
 
@@ -616,10 +699,23 @@ def step_pipeline(st: SimState, *, g: GraphArrays, case: SweepCase,
     running = run_gate(st, g, max_steps)
     st = adopt_phase(st, running, case=case, costs=costs, ops=ops)
     st = spawn_phase(st, running, g=g, case=case, costs=costs, ops=ops)
-    st, task, ts, found = dequeue_phase(st, running, case=case, costs=costs,
-                                        ops=ops)
+    st, task, ts, found = dequeue_phase(st, running, g=g, case=case,
+                                        costs=costs, ops=ops)
     st = thief_phase(st, found, running, case=case, costs=costs, ops=ops)
-    st = victim_phase(st, found, case=case, costs=costs, ops=ops)
+    st = victim_phase(st, found, g=g, case=case, costs=costs, ops=ops)
     st = exec_phase(st, task, ts, found, g=g, case=case, costs=costs,
                     ops=ops)
+    # shared inter-node bottleneck (cluster tier): all cross-node bytes
+    # moved this step contend for one uplink, so each sender additionally
+    # waits out the *other* senders' occupancy (total-minus-own over the
+    # bottleneck bandwidth).  The ledger stays identically zero off-cluster
+    # — flat and single-node machines add 0 to every clock — and resets
+    # each step, making the charge a per-step occupancy model.
+    nl = st.nlink_bytes
+    occ = jnp.where((nl > 0) & case.topo.cluster,
+                    (jnp.sum(nl) - nl) // case.topo.bneck_bw,
+                    0).astype(jnp.int32)
+    st = st._replace(clock=st.clock + occ,
+                     ctr=_bump(ops, st.ctr, "xnode_bytes", nl),
+                     nlink_bytes=jnp.zeros_like(nl))
     return st._replace(step_i=st.step_i + running.astype(jnp.int32))

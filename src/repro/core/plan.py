@@ -67,6 +67,9 @@ class CaseSpec:
     graph: int = 0          # index into the graphs list passed to run_cases
     topology: MachineTopology | None = None
     arrivals: ArrivalProcess | None = None
+    #: cluster tier second stratum (see dlb.pick_victim); only live when
+    #: ``topology`` is a cluster machine — single-node cases ignore it
+    p_local_node: float = 0.75
 
     # hand-written so the deprecated ``mode=`` keyword stays an init-only
     # argument without becoming a field (which would break eq/hash and
@@ -77,7 +80,8 @@ class CaseSpec:
                  p_local: float = 1.0, graph: int = 0,
                  topology: MachineTopology | str | None = None,
                  arrivals: ArrivalProcess | str | None = None,
-                 mode: str | RuntimeSpec | None = None):
+                 mode: str | RuntimeSpec | None = None,
+                 p_local_node: float = 0.75):
         set_ = object.__setattr__      # frozen dataclass
         set_(self, "spec", resolve_spec(spec, mode, where="CaseSpec"))
         set_(self, "n_workers", n_workers)
@@ -90,6 +94,7 @@ class CaseSpec:
         set_(self, "graph", graph)
         set_(self, "topology", topology_mod.resolve(topology))
         set_(self, "arrivals", arrivals_mod.resolve(arrivals))
+        set_(self, "p_local_node", p_local_node)
 
     @property
     def mode(self) -> str:
@@ -104,7 +109,8 @@ class CaseSpec:
 
     @property
     def knobs(self) -> tuple:
-        return (self.n_victim, self.n_steal, self.t_interval, self.p_local)
+        return (self.n_victim, self.n_steal, self.t_interval, self.p_local,
+                self.p_local_node)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -182,7 +188,7 @@ def build_plan(graphs: Sequence[TaskGraph], specs: Sequence[CaseSpec],
         "" if specs[i].arrivals is None else specs[i].arrivals.sort_key,
         specs[i].graph, specs[i].n_steal,
         specs[i].n_victim, specs[i].t_interval, specs[i].p_local,
-        specs[i].seed))
+        specs[i].p_local_node, specs[i].seed))
     groups: List[List[int]] = []
     for i in order:
         if (groups and specs[groups[-1][0]].spec == specs[i].spec

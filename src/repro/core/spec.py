@@ -219,7 +219,7 @@ def resolve_spec(spec: "RuntimeSpec | str | None",
     unset).
     """
     if spec is not None and mode is not None:
-        raise TypeError(f"pass either spec= or (deprecated) mode= to "
+        raise TypeError("pass either spec= or (deprecated) mode= to "
                         f"{where}, not both")
     if spec is not None:
         return RuntimeSpec.coerce(spec)

@@ -30,7 +30,8 @@ from repro.core.spec import MODE_SPECS, RuntimeSpec
 from repro.core.taskgraph import TaskGraph
 from repro.core.topology import MachineTopology, TopoArrays
 
-# counters (paper §V)
+# counters (paper §V, plus the cluster tier's locality/traffic pair —
+# identically zero on flat and single-node machines)
 CTR_NAMES = (
     "exec", "self", "local", "remote",            # task locality at execution
     "static_push", "imm_exec",                     # push outcomes
@@ -38,6 +39,8 @@ CTR_NAMES = (
     "stolen", "stolen_local", "stolen_remote",     # migrated tasks (WS + RP)
     "src_empty", "tgt_full",                       # failed steals
     "atomic_ops", "busy_ns",
+    "stolen_xnode",                                # steals crossing a node
+    "xnode_bytes",                                 # bytes over the bottleneck
 )
 NC = len(CTR_NAMES)
 CTR = {n: i for i, n in enumerate(CTR_NAMES)}
@@ -48,16 +51,26 @@ NV_CAP = 24     # static bound on requests per thief retry (paper max N_victim)
 
 
 class Params(NamedTuple):
-    """Dynamic DLB configuration (§IV-E) — sweepable without recompilation."""
+    """Dynamic DLB configuration (§IV-E) — sweepable without recompilation.
+
+    ``p_local_node`` is the cluster tier's second stratum: when a victim
+    draw goes remote (prob ``1 - p_local``), it stays inside the thief's
+    *node* with probability ``p_local_node`` and crosses the inter-node
+    fabric otherwise.  Only read when the topology is a cluster — flat and
+    single-node machines never consult it (bitwise contract).
+    """
     n_victim: jax.Array
     n_steal: jax.Array
     t_interval: jax.Array  # in scheduling points
     p_local: jax.Array
+    p_local_node: jax.Array
 
 
-def make_params(n_victim=4, n_steal=8, t_interval=100, p_local=1.0) -> Params:
+def make_params(n_victim=4, n_steal=8, t_interval=100, p_local=1.0,
+                p_local_node=0.75) -> Params:
     return Params(jnp.int32(n_victim), jnp.int32(n_steal),
-                  jnp.int32(t_interval), jnp.float32(p_local))
+                  jnp.int32(t_interval), jnp.float32(p_local),
+                  jnp.float32(p_local_node))
 
 
 class SweepCase(NamedTuple):
@@ -141,6 +154,7 @@ class GraphArrays(NamedTuple):
     notify: jax.Array
     join_dep: jax.Array
     n_tasks: jax.Array    # int32 scalar — true (unpadded) task count
+    payload: jax.Array    # (T,) int32 task payload in bytes (cluster D/B)
 
 
 def graph_arrays(graph: TaskGraph, pad_to: int | None = None) -> GraphArrays:
@@ -157,10 +171,13 @@ def graph_arrays(graph: TaskGraph, pad_to: int | None = None) -> GraphArrays:
         out[:T] = a
         return jnp.asarray(out)
 
+    payload = (np.zeros(T, np.int32) if graph.payload is None
+               else graph.payload)
     return GraphArrays(
         dur=pad(graph.dur, 0), first_child=pad(graph.first_child, 0),
         n_children=pad(graph.n_children, 0), notify=pad(graph.notify, -1),
-        join_dep=pad(graph.join_dep, 0), n_tasks=jnp.int32(T))
+        join_dep=pad(graph.join_dep, 0), n_tasks=jnp.int32(T),
+        payload=pad(payload, 0))
 
 
 class SimState(NamedTuple):
@@ -191,6 +208,10 @@ class SimState(NamedTuple):
     n_done: jax.Array
     overflow: jax.Array
     step_i: jax.Array
+    #: (W,) int32 — bytes each worker pushed over the inter-node bottleneck
+    #: *this step*; summed and charged as link occupancy at step end, then
+    #: reset (see phases.step_pipeline).  Always zero on non-cluster cases.
+    nlink_bytes: jax.Array
 
 
 @dataclasses.dataclass(frozen=True)
@@ -241,6 +262,7 @@ def init_state(g: GraphArrays, W: int, S: int, q_cap: int, gq_cap: int,
         n_done=jnp.int32(0),
         overflow=jnp.asarray(False),
         step_i=jnp.int32(0),
+        nlink_bytes=jnp.zeros((W,), jnp.int32),
     )
     return st._replace(
         s_task=st.s_task.at[0, 0].set(0),

@@ -119,6 +119,7 @@ class SweepResult:
             arrivals=arrivals_mod.label(s.arrivals),
             n_workers=s.n_workers, seed=s.seed, n_victim=s.n_victim,
             n_steal=s.n_steal, t_interval=s.t_interval, p_local=s.p_local,
+            p_local_node=s.p_local_node,
             time_ns=int(self.time_ns[i]), completed=bool(self.completed[i]),
             p50_ns=float(self.p50_ns[i]), p90_ns=float(self.p90_ns[i]),
             p99_ns=float(self.p99_ns[i]),
@@ -318,7 +319,9 @@ def run_grid(graphs: Sequence[TaskGraph] | TaskGraph,
              barriers: Sequence[str] | None = None,
              balancers: Sequence[str] | None = None,
              topologies: Sequence = (None,),
-             arrivals: Sequence = (None,)) -> SweepResult:
+             bandwidths: Sequence = (None,),
+             arrivals: Sequence = (None,),
+             p_local_node: Sequence[float] = (0.75,)) -> SweepResult:
     """Cartesian sweep over the spec lattice × machine × workers × seeds ×
     DLB knobs.
 
@@ -337,6 +340,18 @@ def run_grid(graphs: Sequence[TaskGraph] | TaskGraph,
 
         run_grid(graphs, balancers=spec.BALANCERS,
                  topologies=(None, "dual_socket_24", "quad_socket_48"))
+
+    ``bandwidths`` rescales each topology's inter-node links (bytes/ns):
+    ``None`` keeps the preset's native matrix (axis label ``"native"``); an
+    integer ``b`` maps every entry to ``topo.with_bandwidth(b)``, e.g. a
+    bandwidth-starvation curve on the rack preset::
+
+        run_grid(graphs, balancers=("na_ws",),
+                 topologies=("rack_4x2x24",), bandwidths=(None, 16, 4, 1))
+
+    ``p_local_node`` sweeps the cluster victim policy's second stratum (the
+    probability a *remote* steal attempt stays on the thief's node); it only
+    steers cluster machines — single-node and flat entries ignore it.
 
     ``arrivals`` sweeps the open-system arrival process the same way:
     entries are :class:`~repro.core.arrivals.ArrivalProcess` instances,
@@ -395,22 +410,35 @@ def run_grid(graphs: Sequence[TaskGraph] | TaskGraph,
         spec_axes = lattice
     topo_list = tuple(topology_mod.resolve(t) for t in topologies)
     assert topo_list, "empty topology axis in run_grid"
+    bw_list = tuple(bandwidths)
+    assert bw_list, "empty bandwidth axis in run_grid"
+    assert all(b is None for b in bw_list) \
+        or all(t is not None for t in topo_list), \
+        "bandwidths= rescales machine topologies; the flat machine has none"
     arr_list = tuple(arrivals_mod.resolve(a) for a in arrivals)
     assert arr_list, "empty arrivals axis in run_grid"
+
+    def with_bw(t, b):
+        return t if b is None else t.with_bandwidth(b)
+
     axes = dict(app=tuple(g.name for g in graphs), **spec_axes,
                 topology=tuple(topology_mod.label(t) for t in topo_list),
+                bandwidth=tuple("native" if b is None else int(b)
+                                for b in bw_list),
                 arrivals=tuple(arrivals_mod.label(a) for a in arr_list),
                 n_workers=tuple(n_workers), seed=tuple(seeds),
                 n_victim=tuple(n_victim), n_steal=tuple(n_steal),
-                t_interval=tuple(t_interval), p_local=tuple(p_local))
+                t_interval=tuple(t_interval), p_local=tuple(p_local),
+                p_local_node=tuple(p_local_node))
     specs = [
         CaseSpec(spec=sp, n_workers=w, n_zones=zones, seed=sd, n_victim=nv,
                  n_steal=ns, t_interval=ti, p_local=pl, graph=gi,
-                 topology=tp, arrivals=ar)
+                 topology=with_bw(tp, bw), arrivals=ar, p_local_node=pn)
         for gi in range(len(graphs)) for sp in spec_list
-        for tp in topo_list for ar in arr_list for w in n_workers
-        for sd in seeds for nv in n_victim for ns in n_steal
-        for ti in t_interval for pl in p_local
+        for tp in topo_list for bw in bw_list for ar in arr_list
+        for w in n_workers for sd in seeds for nv in n_victim
+        for ns in n_steal for ti in t_interval for pl in p_local
+        for pn in p_local_node
     ]
     res = run_cases(graphs, specs, cfg=cfg, chunk_size=chunk_size,
                     strategy=strategy, cache=cache, backend=backend,

@@ -67,6 +67,12 @@ class TaskGraph:
     #: NUMA execution penalty; paper SVI-B: STRAS/Sort are memory-bound and
     #: gain ~4x from locality, align fits in cache and gains little)
     mem_bound: float = 0.0
+    #: optional per-task payload in bytes (int32, shape (T,)): the data a
+    #: task drags across a link when pushed/dequeued/stolen remotely.  Only
+    #: cluster topologies price it (``L + payload/B``); ``None`` means
+    #: zero payload everywhere and is bitwise-equivalent to the
+    #: pre-cluster engine on every machine.
+    payload: Optional[np.ndarray] = None
 
     @property
     def n_tasks(self) -> int:
@@ -80,9 +86,23 @@ class TaskGraph:
     def mean_task_ns(self) -> float:
         return float(self.dur.mean())
 
+    def with_payload(self, bytes_per_ns: float = 16.0) -> "TaskGraph":
+        """This graph with per-task payloads derived from task sizes: a
+        task's working set scales with its (mem_bound-weighted) runtime —
+        long memory-bound tasks drag big buffers across links, short
+        cache-resident tasks drag almost nothing.  Deterministic, so the
+        payloaded graph keys the result cache stably."""
+        scale = bytes_per_ns * max(float(self.mem_bound), 0.05)
+        pay = np.minimum(self.dur.astype(np.int64) * scale,
+                         np.int64(1) << 30).astype(np.int32)
+        return dataclasses.replace(
+            self, name=f"{self.name}+pl{bytes_per_ns:g}", payload=pay)
+
     def validate(self) -> None:
         T = self.n_tasks
         assert self.first_child.shape == (T,) and self.notify.shape == (T,)
+        if self.payload is not None:
+            assert self.payload.shape == (T,) and (self.payload >= 0).all()
         # spawn ranges in bounds and non-overlapping
         spawned = np.zeros(T, dtype=bool)
         for t in range(T):

@@ -260,7 +260,8 @@ def rwkv6_chunked(r, k, v, w, u, state, chunk=64):
     uf = u.astype(jnp.float32)
 
     def chunk_step(s, i):
-        sl = lambda x: jax.lax.dynamic_slice_in_dim(x, i * C, C, axis=2)
+        def sl(x):
+            return jax.lax.dynamic_slice_in_dim(x, i * C, C, axis=2)
         rc, kc, vc, wc = sl(rf), sl(kf), sl(vf), sl(wf)
 
         def step(s, t):
@@ -306,7 +307,8 @@ def ssm_scan(x, dt, A, Bm, Cm, D, state, chunk=256):
     Af = A.astype(jnp.float32)
 
     def chunk_step(h, i):
-        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i * C, C, axis=1)
+        def sl(a):
+            return jax.lax.dynamic_slice_in_dim(a, i * C, C, axis=1)
         xc, dtc, Bc, Cc = sl(xf), sl(dtf), sl(Bf), sl(Cf)
 
         def step(h, t):

@@ -23,7 +23,6 @@ import numpy as np
 
 from repro.configs import base as cb
 from repro.data.pipeline import batch_for
-from repro.launch import steps as steps_mod
 from repro.launch.train import build_mesh
 from repro.models import transformer as tfm
 

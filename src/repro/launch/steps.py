@@ -11,8 +11,6 @@ cache (SP over the cache sequence dim; see launch/sharding.py).
 
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,7 @@ from repro import checkpoint as ckpt
 from repro.configs import base as cb
 from repro.data.pipeline import SyntheticPipeline
 from repro.launch import steps as steps_mod
-from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.launch.mesh import make_production_mesh
 from repro.models import transformer as tfm
 from repro.optim import adamw_init
 from repro.runtime import StragglerMonitor, Supervisor

@@ -4,7 +4,7 @@ for windowed layers).  Parameters are plain nested dicts of jnp arrays."""
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

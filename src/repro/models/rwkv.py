@@ -93,7 +93,8 @@ def time_mix_decode(p, x, cfg: ModelConfig, state, x_last):
     B, D = x.shape
     H, dh = cfg.n_heads, cfg.head_dim
     xs = x_last
-    mix = lambda mu: x + (xs - x) * mu.astype(x.dtype)
+    def mix(mu):
+        return x + (xs - x) * mu.astype(x.dtype)
     r = (mix(p["mu_r"]) @ p["wr"]).reshape(B, H, dh)
     k = (mix(p["mu_k"]) @ p["wk"]).reshape(B, H, dh)
     v = (mix(p["mu_v"]) @ p["wv"]).reshape(B, H, dh)

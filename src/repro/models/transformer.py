@@ -18,7 +18,6 @@ Public API:
 
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import NamedTuple, Optional
 

@@ -17,7 +17,8 @@ class AdamWState(NamedTuple):
 
 
 def adamw_init(params, state_dtype=jnp.float32) -> AdamWState:
-    zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+    def zeros(p):
+        return jnp.zeros(p.shape, state_dtype)
     return AdamWState(step=jnp.zeros((), jnp.int32),
                       m=jax.tree.map(zeros, params),
                       v=jax.tree.map(zeros, params))

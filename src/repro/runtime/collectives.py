@@ -23,8 +23,6 @@ close over gradient pytrees.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 
 def tree_allreduce(x, *, intra_axes, inter_axis):

@@ -87,9 +87,9 @@ def test_each_phase_bitwise_per_backend(graph, pallas_ops, spec):
 
         st = both("adopt_phase", st, running)
         st = both("spawn_phase", st, running, g=g)
-        st, task, ts, found = both("dequeue_phase", st, running)
+        st, task, ts, found = both("dequeue_phase", st, running, g=g)
         st = both("thief_phase", st, found, running)
-        st = both("victim_phase", st, found)
+        st = both("victim_phase", st, found, g=g)
         both("exec_phase", st, task, ts, found, g=g)
 
 

@@ -9,7 +9,9 @@ import pytest
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, jax.numpy as jnp, numpy as np
+import jax
+import jax.numpy as jnp
+import numpy as np
 from functools import partial
 from jax.sharding import NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map

@@ -53,9 +53,14 @@ def test_legacy_modes_match_pre_redesign_golden(graphs, specs, strategy):
         label = (strategy, c["graph"], c["mode"])
         assert int(res.time_ns[i]) == c["time_ns"], label
         assert int(res.steps[i]) == c["steps"], label
-        for name in CTR_NAMES:
+        # iterate the golden record's own counters: counters added since
+        # the golden was pinned (e.g. the cluster tier's) are asserted
+        # zero on these legacy cases instead
+        for name in c["counters"]:
             assert int(res.counters[name][i]) == c["counters"][name], \
                 (*label, name)
+        for name in set(CTR_NAMES) - set(c["counters"]):
+            assert int(res.counters[name][i]) == 0, (*label, name)
 
 
 def test_golden_bitwise_with_open_cases_in_batch(graphs, specs):
@@ -76,9 +81,11 @@ def test_golden_bitwise_with_open_cases_in_batch(graphs, specs):
             label = ("mixed-open-batch", strategy, c["graph"], c["mode"])
             assert int(res.time_ns[i]) == c["time_ns"], label
             assert int(res.steps[i]) == c["steps"], label
-            for name in CTR_NAMES:
+            for name in c["counters"]:
                 assert int(res.counters[name][i]) == c["counters"][name], \
                     (*label, name)
+            for name in set(CTR_NAMES) - set(c["counters"]):
+                assert int(res.counters[name][i]) == 0, (*label, name)
 
 
 def test_golden_covers_every_mode():

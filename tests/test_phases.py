@@ -100,13 +100,13 @@ def check_phases_padded_inert(spec: RuntimeSpec, n_workers: int, seed: int,
     _assert_inert(st, st1, n_workers, (*label, "adopt"))
     st2 = phases.spawn_phase(st1, running, g=GARR, **kw)
     _assert_inert(st1, st2, n_workers, (*label, "spawn"))
-    st3, task, ts, found = phases.dequeue_phase(st2, running, **kw)
+    st3, task, ts, found = phases.dequeue_phase(st2, running, g=GARR, **kw)
     _assert_inert(st2, st3, n_workers, (*label, "dequeue"))
     # padded lanes never find work either
     assert not np.asarray(found)[n_workers:].any(), label
     st4 = phases.thief_phase(st3, found, running, **kw)
     _assert_inert(st3, st4, n_workers, (*label, "thief"))
-    st5 = phases.victim_phase(st4, found, **kw)
+    st5 = phases.victim_phase(st4, found, g=GARR, **kw)
     _assert_inert(st4, st5, n_workers, (*label, "victim"))
     st6 = phases.exec_phase(st5, task, ts, found, g=GARR, **kw)
     _assert_inert(st5, st6, n_workers, (*label, "exec"))

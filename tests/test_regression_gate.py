@@ -89,6 +89,32 @@ FRESH = {
             },
         },
     },
+    "step_backends": {
+        "wall_ratio_vs_reference": {"pallas": 1.6, "pallas_fused": 1.0},
+        "engine": {"pipeline_speedup": 1.02},
+    },
+    "cluster_scaling": {
+        "makespan_geomean_by_topology": {"flat": 19600.0,
+                                         "two_node_2x24": 52200.0},
+        "xnode_steal_fraction_by_topology": {"flat": 0.0,
+                                             "two_node_2x24": 0.396},
+        "bandwidth_starvation": {
+            "two_node_2x24": {
+                "native": {"makespan_geomean_ns": 63300.0,
+                           "xnode_steal_fraction": 0.387,
+                           "xnode_gb": 0.002},
+                "1": {"makespan_geomean_ns": 32500.0,
+                      "xnode_steal_fraction": 0.014,
+                      "xnode_gb": 0.0001},
+            },
+        },
+        "pinned_makespan_geomean_by_bandwidth": {
+            "two_node_2x24": {"native": 31500.0, "1": 41000.0},
+        },
+        "xnode_steal_fraction_by_p_local_node": {"5pct": 0.66,
+                                                 "95pct": 0.055},
+        "note": "strings stay ungated",
+    },
 }
 
 
@@ -132,6 +158,10 @@ def test_write_baseline_then_check_passes(paths, capsys):
     (("moe_serving", "makespan_geomean_by_app", "moe_zipf0"), 0.70),
     (("moe_serving", "decode_slo_by_topology", "flat", "poisson@8",
       "p99_geomean_ns"), 1.30),
+    (("cluster_scaling", "bandwidth_starvation", "two_node_2x24", "1",
+      "xnode_steal_fraction"), 2.0),
+    (("cluster_scaling", "pinned_makespan_geomean_by_bandwidth",
+      "two_node_2x24", "1"), 0.70),
 ])
 def test_gate_exits_1_on_perturbation(paths, path, factor):
     """Satellite acceptance: perturbing a gated field — a streaming p99,
@@ -227,3 +257,57 @@ def test_committed_baseline_gates_moe_serving_fields():
     # strings (the best-policy answer) must never be gated
     assert not any(p.startswith("moe_serving.best_balance_by_skew")
                    for p in fields)
+
+
+def _pattern_matches(pattern: str, path: str) -> bool:
+    pp, sp = pattern.split("."), path.split(".")
+    return len(pp) == len(sp) and all(a == "*" or a == b
+                                      for a, b in zip(pp, sp))
+
+
+def test_every_pattern_family_gates_something():
+    """Satellite acceptance: every FIELD_PATTERNS family matches at least
+    one field in the committed baseline.  A pattern that matches nothing
+    is a silently-dead gate — the suite it points at stopped emitting the
+    field (or was never run before --write-baseline) and CI would keep
+    passing while that whole family went unwatched."""
+    gate = load_gate()
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "baselines", "smoke.json")
+    with open(path) as f:
+        fields = json.load(f)["fields"]
+    for pattern in gate.FIELD_PATTERNS:
+        assert any(_pattern_matches(pattern, p) for p in fields), \
+            f"FIELD_PATTERNS entry {pattern!r} matches no baseline field"
+    # and no baseline field is orphaned from the patterns that made it
+    for p in fields:
+        assert any(_pattern_matches(pattern, p)
+                   for pattern in gate.FIELD_PATTERNS), p
+
+
+def test_committed_baseline_gates_cluster_fields():
+    """The committed smoke baseline gates the cluster tier: the machine
+    ladder's geomeans and steal fractions, both bandwidth-starvation
+    curves (adaptive + pinned) on both cluster presets, and the
+    p_local_node locality lever."""
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "baselines", "smoke.json")
+    with open(path) as f:
+        fields = json.load(f)["fields"]
+    for topo in ("flat", "dual_socket_24", "two_node_2x24", "rack_4x2x24"):
+        assert f"cluster_scaling.makespan_geomean_by_topology.{topo}" \
+            in fields
+        assert f"cluster_scaling.xnode_steal_fraction_by_topology.{topo}" \
+            in fields
+    for topo in ("two_node_2x24", "rack_4x2x24"):
+        for bw in ("native", "8", "1"):
+            prefix = f"cluster_scaling.bandwidth_starvation.{topo}.{bw}."
+            assert prefix + "makespan_geomean_ns" in fields
+            assert prefix + "xnode_steal_fraction" in fields
+            assert ("cluster_scaling.pinned_makespan_geomean_by_bandwidth."
+                    f"{topo}.{bw}") in fields
+            # byte totals are record metadata, not gated
+            assert prefix + "xnode_gb" not in fields
+    assert any(p.startswith(
+        "cluster_scaling.xnode_steal_fraction_by_p_local_node.")
+        for p in fields)

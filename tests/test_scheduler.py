@@ -1,7 +1,6 @@
 """Scheduler simulator: completion, exactly-once execution, counter
 consistency, and the paper's qualitative performance ladder."""
 
-import numpy as np
 import pytest
 
 from repro.core import make_params, run_schedule, taskgraph

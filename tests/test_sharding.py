@@ -3,7 +3,6 @@ multi-device integration via subprocess (own XLA_FLAGS)."""
 
 import subprocess
 import sys
-import types
 
 import pytest
 from jax.sharding import PartitionSpec as P
@@ -75,7 +74,9 @@ def test_zero1_opt_sharding():
 MULTIDEV_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, jax.numpy as jnp, numpy as np
+import jax
+import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import base as cb
 from repro.launch import steps as steps_mod

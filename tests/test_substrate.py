@@ -15,7 +15,7 @@ from repro import checkpoint as ckpt
 from repro.data.pipeline import SyntheticPipeline, batch_for
 from repro.optim import (adamw_init, adamw_update, compress_decompress,
                          cosine_schedule, ef_compress_grads, ef_init)
-from repro.runtime import StragglerMonitor, Supervisor, SimulatedFault
+from repro.runtime import StragglerMonitor, Supervisor
 from repro.configs import base as cb
 
 

@@ -205,13 +205,15 @@ def test_run_grid_axis_labeling(graphs):
     res = run_grid(graphs, balancers=("static_rr", "na_ws"),
                    n_workers=(8, 16), seeds=(0, 1), cfg=CFG)
     assert list(res.grid_axes) == ["app", "queue", "barrier", "balance",
-                                   "topology", "arrivals", "n_workers",
-                                   "seed", "n_victim", "n_steal",
-                                   "t_interval", "p_local"]
+                                   "topology", "bandwidth", "arrivals",
+                                   "n_workers", "seed", "n_victim",
+                                   "n_steal", "t_interval", "p_local",
+                                   "p_local_node"]
     assert res.grid_axes["app"] == tuple(g.name for g in graphs)
     assert res.grid_axes["queue"] == ("xqueue",)
     assert res.grid_axes["barrier"] == ("tree",)
     assert res.grid_axes["topology"] == ("flat",)
+    assert res.grid_axes["bandwidth"] == ("native",)
     assert res.grid_axes["arrivals"] == ("closed",)
     assert res.grid_axes["n_workers"] == (8, 16)
     shape = tuple(len(v) for v in res.grid_axes.values())
@@ -246,7 +248,7 @@ def test_row_round_trips_specs(batched, graphs, specs):
         assert row["n_workers"] == s.n_workers
         assert row["seed"] == s.seed
         assert (row["n_victim"], row["n_steal"], row["t_interval"],
-                row["p_local"]) == s.knobs
+                row["p_local"], row["p_local_node"]) == s.knobs
         assert row["time_ns"] == int(batched.time_ns[i])
         assert row["completed"] == bool(batched.completed[i])
         assert row["counters"] == {k: int(v[i])
